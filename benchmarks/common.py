@@ -1,0 +1,34 @@
+"""Shared benchmark helpers + CSV emission.
+
+Every benchmark prints ``name,value,derived`` rows (value in µs unless the
+name says otherwise) so ``python -m benchmarks.run`` output is one flat CSV.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Callable, Iterable, List, Optional
+
+ROWS: List[str] = []
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    row = f"{name},{value:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def make_bench_service(*, heartbeat=0.5, forwarder_batch=32):
+    from repro.core import FuncXClient, FuncXService
+    svc = FuncXService(heartbeat_timeout=heartbeat,
+                       forwarder_batch=forwarder_batch)
+    tok = svc.register_user("bench")
+    return svc, FuncXClient(svc, tok)

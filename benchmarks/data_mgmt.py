@@ -1,0 +1,169 @@
+"""Fig. 5 + Tables 1–2 — intra-endpoint data management.
+
+Fig. 5: point-to-point / broadcast / all-to-all transfer patterns across
+store backends (in-memory KV ≙ Redis, shared FS, device store ≙ beyond-
+paper zero-copy) over a range of sizes.
+
+Table 1: MapReduce WordCount & Sort shuffle phases, Redis-analogue vs
+sharedFS. Table 2: Colmena-style pipeline stage times.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import emit
+
+
+def _stores(tmp):
+    from repro.data import DeviceStore, InMemoryKVStore, SharedFSStore
+    return {
+        "memory": InMemoryKVStore(),
+        "sharedfs": SharedFSStore(os.path.join(tmp, "fs")),
+        "device": DeviceStore(),
+    }
+
+
+# ------------------------------------------------------------------- Fig. 5
+
+def patterns(sizes=(1 << 10, 1 << 16, 1 << 22), n_workers: int = 8,
+             reps: int = 5) -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, store in _stores(tmp).items():
+            for size in sizes:
+                data = np.random.default_rng(0).integers(
+                    0, 255, size, dtype=np.uint8)
+                # point-to-point: one writer, one reader
+                t0 = time.perf_counter()
+                for r in range(reps):
+                    store.set(f"p2p/{r}", data)
+                    store.get(f"p2p/{r}")
+                t = (time.perf_counter() - t0) / reps
+                emit(f"fig5/p2p/{name}/{size}B", t * 1e6,
+                     f"{size/t/1e6:.1f}MB/s")
+                # broadcast: one writer, n readers
+                store.set("bcast", data)
+                t0 = time.perf_counter()
+                for r in range(reps):
+                    for _ in range(n_workers):
+                        store.get("bcast")
+                t = (time.perf_counter() - t0) / reps
+                emit(f"fig5/broadcast{n_workers}/{name}/{size}B", t * 1e6,
+                     f"{size*n_workers/t/1e6:.1f}MB/s")
+                # all-to-all: n writers × n readers (shuffle)
+                t0 = time.perf_counter()
+                for r in range(reps):
+                    for i in range(n_workers):
+                        store.set(f"a2a/{r}/{i}", data)
+                    for i in range(n_workers):
+                        for j in range(n_workers):
+                            store.get(f"a2a/{r}/{i}")
+                t = (time.perf_counter() - t0) / reps
+                emit(f"fig5/alltoall{n_workers}/{name}/{size}B", t * 1e6,
+                     f"{size*n_workers*n_workers/t/1e6:.1f}MB/s")
+
+
+# ------------------------------------------------------------------ Table 1
+
+def _wordcount_map(data):
+    from collections import Counter
+    return dict(Counter(data.split()))
+
+
+def mapreduce(n_map: int = 16, n_reduce: int = 16,
+              words_per_map: int = 20_000, sort_mode: bool = False) -> Dict:
+    """Runs the shuffle through a store backend; returns phase timings."""
+    rng = np.random.default_rng(0)
+    vocab = [f"w{i:04d}" for i in range(2000)]
+    texts = [" ".join(rng.choice(vocab, words_per_map)) for _ in range(n_map)]
+    out = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, store in _stores(tmp).items():
+            if name == "device":
+                continue            # host-object workload
+            t_write = t_read = 0.0
+            t0 = time.perf_counter()
+            # map + intermediate write (partitioned by hash → reducer)
+            for m, text in enumerate(texts):
+                if sort_mode:
+                    keys = sorted(text.split())
+                    parts: Dict[int, List] = {}
+                    for w in keys:
+                        parts.setdefault(hash(w) % n_reduce, []).append(w)
+                else:
+                    counts = _wordcount_map(text)
+                    parts = {}
+                    for w, c in counts.items():
+                        parts.setdefault(hash(w) % n_reduce, {})[w] = c
+                tw = time.perf_counter()
+                for r, part in parts.items():
+                    store.set(f"shuffle/{m}/{r}", part)
+                t_write += time.perf_counter() - tw
+            # reduce: intermediate read + merge
+            for r in range(n_reduce):
+                tr = time.perf_counter()
+                parts = []
+                for m in range(n_map):
+                    try:
+                        parts.append(store.get(f"shuffle/{m}/{r}"))
+                    except KeyError:
+                        pass
+                t_read += time.perf_counter() - tr
+                if sort_mode:
+                    merged = sorted(x for p in parts for x in p)
+                else:
+                    merged = {}
+                    for p in parts:
+                        for w, c in p.items():
+                            merged[w] = merged.get(w, 0) + c
+            total = time.perf_counter() - t0
+            app = "sort" if sort_mode else "wordcount"
+            emit(f"table1/{app}/intermediate_write/{name}", t_write * 1e6,
+                 f"maps={n_map} reducers={n_reduce}")
+            emit(f"table1/{app}/intermediate_read/{name}", t_read * 1e6, "")
+            emit(f"table1/{app}/total/{name}", total * 1e6, "")
+            out[(app, name)] = (t_write, t_read, total)
+    return out
+
+
+# ------------------------------------------------------------------ Table 2
+
+def colmena(n_tasks: int = 100, payload_bytes: int = 1 << 20) -> None:
+    """Colmena-style stages: Thinker writes input → Worker reads input,
+    writes result → Task server reads result. 1 MB in / 1 MB out."""
+    data_in = np.random.default_rng(0).integers(0, 255, payload_bytes,
+                                                dtype=np.uint8)
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, store in _stores(tmp).items():
+            if name == "device":
+                continue
+            stages = {"input_write": 0.0, "input_read": 0.0,
+                      "result_write": 0.0, "result_read": 0.0}
+            for i in range(n_tasks):
+                t0 = time.perf_counter()
+                store.set(f"in/{i}", data_in)
+                stages["input_write"] += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                x = store.get(f"in/{i}")
+                stages["input_read"] += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                store.set(f"out/{i}", x)
+                stages["result_write"] += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                store.get(f"out/{i}")
+                stages["result_read"] += time.perf_counter() - t0
+            for stage, tot in stages.items():
+                emit(f"table2/colmena/{stage}/{name}",
+                     tot / n_tasks * 1e6, f"n={n_tasks} 1MB payloads")
+
+
+def run(full: bool = False) -> None:
+    patterns(sizes=(1 << 10, 1 << 16, 1 << 22) if not full
+             else (1 << 10, 1 << 14, 1 << 18, 1 << 22, 1 << 25))
+    mapreduce(sort_mode=False)
+    mapreduce(sort_mode=True)
+    colmena(n_tasks=100 if not full else 1000)

@@ -1,0 +1,39 @@
+"""Fig. 3 — funcX latency breakdown (t_s / t_f / t_e / t_w) for a warm
+container, from instrumented task-lifecycle timestamps."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit
+
+
+def run(n_tasks: int = 200, full: bool = False) -> None:
+    if full:
+        n_tasks = 1000
+    from repro.core import FuncXClient, FuncXService
+
+    svc = FuncXService(heartbeat_timeout=0.5, purge_on_get=False)
+    try:
+        tok = svc.register_user("bench")
+        client = FuncXClient(svc, tok)
+        fid = client.register_function(lambda d: None, name="noop")
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=4)
+        # warm up path + executable
+        for _ in range(10):
+            client.get_result(client.run(fid, eid, data={}), timeout=10)
+        parts = {k: [] for k in ("t_s", "t_f", "t_e", "t_w", "t_r", "total")}
+        for _ in range(n_tasks):
+            tid = client.run(fid, eid, data={})
+            client.get_result(tid, timeout=10)
+            bd = client.task(tid).latency_breakdown()
+            for k in parts:
+                if bd[k] == bd[k]:
+                    parts[k].append(bd[k])
+        for k, vals in parts.items():
+            emit(f"fig3/latency/{k}", float(np.mean(vals)) * 1e6,
+                 f"p50={np.percentile(vals, 50)*1e6:.0f}us "
+                 f"p99={np.percentile(vals, 99)*1e6:.0f}us n={len(vals)}")
+        agent.stop()
+    finally:
+        svc.shutdown()

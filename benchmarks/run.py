@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3_latency,...] [--full]
+
+Prints ``name,value,derived`` CSV (value µs unless the name states
+otherwise). Roofline terms for §Roofline come from the compiled dry-run
+(``python -m repro.launch.dryrun``), not from here — this harness measures
+the FaaS system itself, which runs for real on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+SUITES = {
+    "fig3_latency": ("latency", "Fig 3 latency breakdown"),
+    "fig4_scaling": ("scaling", "Fig 4 strong/weak scaling + throughput"),
+    "fig5_t1_t2_data": ("data_mgmt", "Fig 5 + Tables 1-2 data management"),
+    "table3_containers": ("container_cost", "Table 3 container cold starts"),
+    "fig6_7_routing": ("routing", "Figs 6-7 warming-aware routing"),
+    "sec7.5_batching": ("batching", "§7.5 batching"),
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default="all",
+                   help="comma list of suites: " + ",".join(SUITES))
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale parameters (slower)")
+    args = p.parse_args()
+    sel = list(SUITES) if args.only == "all" else args.only.split(",")
+
+    print("name,value,derived")
+    t0 = time.perf_counter()
+    for key in sel:
+        mod_name, desc = SUITES[key]
+        print(f"# === {key}: {desc} ===", flush=True)
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t1 = time.perf_counter()
+        mod.run(full=args.full)
+        print(f"# {key} done in {time.perf_counter()-t1:.1f}s", flush=True)
+    print(f"# all suites done in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

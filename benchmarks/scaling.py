@@ -1,0 +1,118 @@
+"""Fig. 4 + §7.2.3 — strong/weak scaling and peak agent throughput.
+
+Two modes (DESIGN.md §2 "Scale"):
+  - REAL: threaded workers through the full service→forwarder→endpoint→
+    manager→worker path (up to ~128 workers on this CPU).
+  - SIM: discrete-event simulation of the same dispatch pipeline,
+    calibrated with the real mode's measured per-task dispatch overhead,
+    scaled to 131 072 workers (the paper's Cori point).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from typing import List
+
+from .common import emit, make_bench_service
+
+
+# --------------------------------------------------------------------- real
+
+def _run_batch(client, svc, fid, eid, n_tasks: int, timeout=300) -> float:
+    t0 = time.perf_counter()
+    ids = client.batch_run([(fid, eid, {}) for _ in range(n_tasks)])
+    client.get_batch_results(ids, timeout=timeout)
+    return time.perf_counter() - t0
+
+
+def real_mode(workers_list=(4, 16, 64), n_strong=512,
+              sleep_s=0.05) -> float:
+    """Returns the measured per-task dispatch overhead (for sim calibration)."""
+    dispatch_overhead = 1e-4
+    for workers in workers_list:
+        svc, client = make_bench_service()
+        try:
+            noop = client.register_function(lambda d: None, name="noop")
+            sleeper = client.register_function(
+                lambda d: time.sleep(sleep_s), name="sleep")
+            n_managers = max(workers // 16, 1)
+            eid, agent = svc.make_endpoint(
+                client.token, "ep", n_managers=n_managers,
+                workers_per_manager=workers // n_managers)
+            _run_batch(client, svc, noop, eid, 32)       # warm
+            # strong scaling: fixed task count
+            t = _run_batch(client, svc, noop, eid, n_strong)
+            emit(f"fig4/strong/noop/workers={workers}", t * 1e6,
+                 f"tasks={n_strong} rate={n_strong/t:.0f}/s")
+            dispatch_overhead = t / n_strong
+            # weak scaling: 10 tasks per worker
+            n_weak = 10 * workers
+            t = _run_batch(client, svc, noop, eid, n_weak)
+            emit(f"fig4/weak/noop/workers={workers}", t * 1e6,
+                 f"tasks={n_weak} rate={n_weak/t:.0f}/s")
+            t = _run_batch(client, svc, sleeper, eid, n_weak)
+            emit(f"fig4/weak/sleep{int(sleep_s*1e3)}ms/workers={workers}",
+                 t * 1e6, f"tasks={n_weak} ideal={10*sleep_s:.2f}s")
+            agent.stop()
+        finally:
+            svc.shutdown()
+    return dispatch_overhead
+
+
+def throughput(n_tasks=3000, workers=64) -> None:
+    """§7.2.3: peak tasks/s through one agent (paper: 1694/s on Theta)."""
+    svc, client = make_bench_service()
+    try:
+        fid = client.register_function(lambda d: None, name="noop")
+        eid, agent = svc.make_endpoint(client.token, "ep", n_managers=4,
+                                       workers_per_manager=workers // 4)
+        _run_batch(client, svc, fid, eid, 64)
+        t = _run_batch(client, svc, fid, eid, n_tasks)
+        emit("sec7.2.3/throughput_tasks_per_s", n_tasks / t,
+             f"(paper: 1694/s Theta, 1466/s Cori) n={n_tasks}")
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------- sim
+
+def simulate(n_workers: int, n_tasks: int, duration_s: float,
+             dispatch_s: float) -> float:
+    """Discrete-event model of the agent pipeline: a serial dispatcher
+    assigns task i at time i·dispatch_s to the earliest-free worker."""
+    free = [0.0] * min(n_workers, n_tasks)
+    heapq.heapify(free)
+    finish_last = 0.0
+    for i in range(n_tasks):
+        t_disp = i * dispatch_s
+        w_free = heapq.heappop(free)
+        start = max(t_disp, w_free)
+        end = start + duration_s
+        heapq.heappush(free, end)
+        finish_last = max(finish_last, end)
+    return finish_last
+
+
+def sim_mode(dispatch_s: float) -> None:
+    # weak scaling to the paper's 131 072 workers, 10 tasks/worker
+    for workers in (256, 2048, 16384, 131072):
+        n = 10 * workers
+        for name, dur in (("noop", 0.0), ("sleep1s", 1.0), ("stress60s", 60.0)):
+            t = simulate(workers, n, dur, dispatch_s)
+            emit(f"fig4sim/weak/{name}/workers={workers}", t * 1e6,
+                 f"tasks={n} dispatch={dispatch_s*1e6:.0f}us/task")
+    # strong scaling, 100k tasks (paper Fig. 4a)
+    for workers in (256, 2048, 16384):
+        for name, dur in (("noop", 0.0), ("sleep1s", 1.0)):
+            t = simulate(workers, 100_000, dur, dispatch_s)
+            emit(f"fig4sim/strong/{name}/workers={workers}", t * 1e6,
+                 f"tasks=100000")
+
+
+def run(full: bool = False) -> None:
+    workers = (4, 16, 64) if not full else (4, 16, 64, 128)
+    dispatch = real_mode(workers_list=workers,
+                         n_strong=512 if not full else 2048)
+    throughput(n_tasks=2000 if not full else 10000)
+    sim_mode(dispatch)

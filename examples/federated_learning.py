@@ -1,0 +1,76 @@
+"""Federated learning over funcX endpoints (paper §8 — the Flox case
+study), with compressed delta exchange:
+
+    PYTHONPATH=src python examples/federated_learning.py
+
+Three "edge" endpoints hold disjoint data shards; each round they train
+locally through the FaaS layer (warm container caches the jitted step),
+ship int8-quantized model deltas (with error feedback) back to the
+coordinator, which federated-averages and rebroadcasts. The compression
+ratio is exactly what the rural-AI deployments in the paper need on weak
+links.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig, get_reduced_config
+from repro.core import FuncXClient, FuncXService
+from repro.models import get_model
+from repro.train import FedAvgCoordinator, init_opt_state, make_train_step
+from repro.train.data import SyntheticLM
+
+
+def main():
+    cfg = get_reduced_config("qwen1.5-0.5b")
+    model = get_model(cfg)
+    tc = TrainConfig(learning_rate=5e-3, warmup_steps=0, total_steps=200)
+    step_fn = jax.jit(make_train_step(model, tc))
+
+    def local_train(data):
+        params = jax.tree.map(jnp.asarray, data["params"])
+        state = {"params": params, "opt": init_opt_state(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        ds = SyntheticLM(cfg.vocab_size, 32, 8, seed=data["seed"])
+        loss = 0.0
+        for _, batch in zip(range(data["steps"]), ds):
+            state, m = step_fn(state, {k: jnp.asarray(v)
+                                       for k, v in batch.items()})
+            loss = float(m["loss"])
+        delta = jax.tree.map(
+            lambda new, old: np.asarray(new) - np.asarray(old),
+            state["params"], params)
+        return {"delta": delta, "loss": loss}
+
+    service = FuncXService()
+    token = service.register_user("fl-coordinator")
+    client = FuncXClient(service, token)
+    fid = client.register_function(local_train, name="flox/local_train")
+
+    eids, agents = [], []
+    for i in range(3):
+        eid, agent = service.make_endpoint(token, f"edge-{i}", n_managers=1,
+                                           workers_per_manager=1)
+        eids.append(eid)
+        agents.append(agent)
+    print(f"federation: {len(eids)} edge endpoints")
+
+    coord = FedAvgCoordinator(client, fid, eids, method="int8")
+    params = model.init(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    for rnd in range(4):
+        params, metrics = coord.round(params, local_steps=10, seed=rnd)
+        print(f"round {rnd}: mean local loss {metrics['mean_loss']:.4f}  "
+              f"compression {metrics['compression_ratio']:.1f}×")
+    print(f"4 rounds in {time.perf_counter()-t0:.1f}s; "
+          f"{coord.bytes_sent/1e6:.2f} MB on the wire "
+          f"(vs {coord.bytes_uncompressed/1e6:.2f} MB uncompressed)")
+    for a in agents:
+        a.stop()
+    service.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — a federated function-as-a-service framework for TPU fleets,
+reproducing funcX (Li et al., IEEE TPDS 2022) with a JAX/Pallas substrate.
+
+Layers (see DESIGN.md):
+  - ``repro.core``       the funcX contribution: federated FaaS runtime
+  - ``repro.data``       intra/inter-endpoint data management
+  - ``repro.models``     the 10 assigned architectures (pure JAX)
+  - ``repro.kernels``    Pallas TPU kernels for compute hot-spots
+  - ``repro.train``/``repro.serve``  substrate for the two step kinds
+  - ``repro.launch``     meshes, dry-run, drivers
+"""
+
+__version__ = "1.0.0"

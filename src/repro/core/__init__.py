@@ -1,0 +1,72 @@
+"""The paper's primary contribution: a federated FaaS runtime.
+
+service ── forwarder ═╦═ endpoint agent ── managers ── workers
+   (cloud tier)       ║   (resource tier)     (nodes)    (containers /
+                   channel                               compiled executables)
+"""
+from .auth import (
+    ALL_SCOPES,
+    AuthService,
+    SCOPE_ENDPOINT,
+    SCOPE_REGISTER_FUNCTION,
+    SCOPE_RUN,
+    SCOPE_TRANSFER,
+    Token,
+)
+from .batching import DynamicBatcher, split_arrays, stack_arrays
+from .client import FuncXClient
+from .comms import Channel
+from .endpoint import EndpointAgent
+from .errors import (
+    AuthError,
+    EndpointUnavailable,
+    FuncXError,
+    PayloadTooLarge,
+    RegistrationError,
+    TaskFailure,
+    TaskLost,
+)
+from .forwarder import Forwarder
+from .manager import Manager
+from .provisioning import (
+    ElasticStrategy,
+    LocalProvider,
+    Provider,
+    SimCloudProvider,
+    SimSlurmProvider,
+)
+from .routing import (
+    CostAwareRouter,
+    LocalityAwareRouter,
+    ManagerInfo,
+    RandomRouter,
+    Router,
+    WarmingAwareRouter,
+    make_router,
+)
+from .service import FuncXService, PAYLOAD_LIMIT, RegisteredFunction
+from .tasks import Task, TaskStatus, TaskStore
+from .warming import (
+    Container,
+    ContainerRegistry,
+    ContainerSpec,
+    WarmCache,
+    proportional_allocation,
+)
+from .worker import Worker, WorkItem, WorkResult
+
+__all__ = [
+    "ALL_SCOPES", "AuthError", "AuthService", "Channel", "Container",
+    "ContainerRegistry", "ContainerSpec", "CostAwareRouter",
+    "DynamicBatcher", "ElasticStrategy", "EndpointAgent",
+    "EndpointUnavailable", "Forwarder", "FuncXClient", "FuncXError",
+    "FuncXService", "LocalProvider", "LocalityAwareRouter", "Manager",
+    "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge", "Provider",
+    "RandomRouter", "RegisteredFunction", "RegistrationError", "Router",
+    "SCOPE_ENDPOINT", "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN",
+    "SCOPE_TRANSFER", "SimCloudProvider", "SimSlurmProvider", "Task",
+    "TaskFailure", "TaskLost", "TaskStatus", "TaskStore", "Token",
+    "WarmCache", "WarmingAwareRouter", "WorkItem", "WorkResult", "Worker",
+    "make_router", "proportional_allocation", "split_arrays",
+    "stack_arrays",
+]

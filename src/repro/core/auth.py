@@ -1,0 +1,110 @@
+"""Identity and access management (paper §4.7 — the Globus Auth tier).
+
+Reproduces the *protocol shape*: scoped bearer tokens, endpoint agents as
+native clients with dependent scopes, delegation (a user grants another
+identity a subset of their scopes), and per-API scope enforcement. Tokens
+are HMAC-signed (stdlib) rather than OAuth2 — the flows are the same.
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import json
+import os
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, Optional, Set
+
+from .errors import AuthError
+
+# funcX-style scopes
+SCOPE_REGISTER_FUNCTION = "urn:repro:auth:scope:register_function"
+SCOPE_RUN = "urn:repro:auth:scope:run"
+SCOPE_ENDPOINT = "urn:repro:auth:scope:endpoint"
+SCOPE_TRANSFER = "urn:repro:auth:scope:transfer"
+ALL_SCOPES = frozenset({SCOPE_REGISTER_FUNCTION, SCOPE_RUN, SCOPE_ENDPOINT,
+                        SCOPE_TRANSFER})
+
+
+@dataclass(frozen=True)
+class Token:
+    token_id: str
+    identity: str
+    scopes: FrozenSet[str]
+    issued_by: str                 # == identity unless delegated
+    expires: float
+    signature: str
+
+    def encode(self) -> str:
+        return json.dumps({
+            "token_id": self.token_id, "identity": self.identity,
+            "scopes": sorted(self.scopes), "issued_by": self.issued_by,
+            "expires": self.expires, "signature": self.signature})
+
+
+class AuthService:
+    def __init__(self, ttl: float = 3600.0):
+        self._secret = os.urandom(32)
+        self._identities: Set[str] = set()
+        self._revoked: Set[str] = set()
+        self._lock = threading.RLock()
+        self.ttl = ttl
+
+    def _sign(self, token_id: str, identity: str, scopes: Iterable[str],
+              issued_by: str, expires: float) -> str:
+        msg = f"{token_id}|{identity}|{','.join(sorted(scopes))}|" \
+              f"{issued_by}|{expires:.3f}".encode()
+        return hmac.new(self._secret, msg, hashlib.sha256).hexdigest()
+
+    def register_identity(self, name: str) -> str:
+        with self._lock:
+            self._identities.add(name)
+        return name
+
+    def issue(self, identity: str, scopes: Iterable[str],
+              issued_by: Optional[str] = None) -> Token:
+        with self._lock:
+            if identity not in self._identities:
+                raise AuthError(f"unknown identity {identity!r}")
+        scopes = frozenset(scopes)
+        bad = scopes - ALL_SCOPES
+        if bad:
+            raise AuthError(f"unknown scopes {bad}")
+        token_id = str(uuid.uuid4())
+        expires = time.time() + self.ttl
+        sig = self._sign(token_id, identity, scopes, issued_by or identity,
+                         expires)
+        return Token(token_id, identity, scopes, issued_by or identity,
+                     expires, sig)
+
+    def validate(self, token: Token, required_scope: str) -> str:
+        """Returns the authenticated identity or raises AuthError."""
+        if token.token_id in self._revoked:
+            raise AuthError("token revoked")
+        if time.time() > token.expires:
+            raise AuthError("token expired")
+        expect = self._sign(token.token_id, token.identity, token.scopes,
+                            token.issued_by, token.expires)
+        if not hmac.compare_digest(expect, token.signature):
+            raise AuthError("bad signature")
+        if required_scope not in token.scopes:
+            raise AuthError(f"missing scope {required_scope}")
+        return token.identity
+
+    def delegate(self, token: Token, to_identity: str,
+                 scopes: Iterable[str]) -> Token:
+        """Secure delegation (paper: 'a user may allow the funcX service or
+        another user to access their endpoint'). Subset-of-scopes only."""
+        self.validate(token, next(iter(token.scopes)))
+        scopes = frozenset(scopes)
+        if not scopes <= token.scopes:
+            raise AuthError("delegation must narrow scopes")
+        with self._lock:
+            self._identities.add(to_identity)
+        return self.issue(to_identity, scopes, issued_by=token.identity)
+
+    def revoke(self, token: Token) -> None:
+        with self._lock:
+            self._revoked.add(token.token_id)

@@ -1,0 +1,154 @@
+"""Batching (paper §4.6) + beyond-paper request coalescing.
+
+The paper's two batching forms live elsewhere in the runtime:
+  - *internal batching*: Forwarder.batch_size + Manager.prefetch (managers
+    request many tasks on behalf of their workers);
+  - *user-facing batching*: FuncXService.submit_batch / client.batch_run.
+
+This module adds the TPU-serving-native third form: **dynamic request
+coalescing** — concurrent invocations of the same function within a small
+window are stacked into one batched execution (one compiled program run for
+N requests) and the results are fanned back out. This is what turns the
+FaaS layer into a batched model server.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def stack_arrays(payloads: Sequence[Any]) -> Any:
+    """Default stack: dict-of-arrays payloads are concatenated on axis 0;
+    scalar fields (e.g. "n_tokens") must agree and pass through."""
+    first = payloads[0]
+    if isinstance(first, dict):
+        out = {}
+        for k in first:
+            v0 = np.asarray(first[k])
+            if v0.ndim == 0:
+                vals = {np.asarray(p[k]).item() for p in payloads}
+                if len(vals) != 1:
+                    raise ValueError(
+                        f"cannot coalesce: scalar field {k!r} differs "
+                        f"across requests ({vals})")
+                out[k] = first[k]
+            else:
+                out[k] = np.concatenate([np.asarray(p[k]) for p in payloads],
+                                        axis=0)
+        return out
+    return np.concatenate([np.asarray(p) for p in payloads], axis=0)
+
+
+def split_arrays(result: Any, sizes: Sequence[int]) -> List[Any]:
+    """Default split: slice axis 0 back into the per-request sizes;
+    scalars replicate."""
+    bounds = np.cumsum([0] + list(sizes))
+    def cut(x, i):
+        arr = np.asarray(x)
+        if arr.ndim == 0:
+            return x
+        return arr[bounds[i]:bounds[i + 1]]
+    if isinstance(result, dict):
+        return [{k: cut(v, i) for k, v in result.items()}
+                for i in range(len(sizes))]
+    return [cut(result, i) for i in range(len(sizes))]
+
+
+class DynamicBatcher:
+    """Coalesce concurrent requests to one function into batched tasks.
+
+    Requests are queued up to ``max_batch`` or ``max_wait`` seconds; each
+    flush submits ONE task whose payload is the stacked batch. Downstream
+    the whole funcX path (routing, warm containers) sees a single task, so
+    per-task overhead is amortized — the §7.5 effect, applied per-request.
+    """
+
+    def __init__(
+        self,
+        submit_fn: Callable[[Any], str],          # payload → task_id
+        result_fn: Callable[[str, float], Any],   # task_id → result
+        *,
+        max_batch: int = 8,
+        max_wait: float = 0.01,
+        batch_dim_key: Optional[str] = "tokens",
+        stack_fn: Callable = stack_arrays,
+        split_fn: Callable = split_arrays,
+        result_timeout: float = 60.0,
+    ):
+        self.submit_fn = submit_fn
+        self.result_fn = result_fn
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.batch_dim_key = batch_dim_key
+        self.stack_fn = stack_fn
+        self.split_fn = split_fn
+        self.result_timeout = result_timeout
+        self._pending: List[Tuple[Any, Future, int]] = []
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="dyn-batcher")
+        self._thread.start()
+        self.batches_sent = 0
+        self.requests_sent = 0
+
+    def _size_of(self, payload: Any) -> int:
+        if isinstance(payload, dict) and self.batch_dim_key in payload:
+            return int(np.asarray(payload[self.batch_dim_key]).shape[0])
+        return 1
+
+    def submit(self, payload: Any) -> Future:
+        fut: Future = Future()
+        with self._cond:
+            self._pending.append((payload, fut, self._size_of(payload)))
+            if len(self._pending) >= self.max_batch:
+                self._cond.notify()
+        return fut
+
+    def close(self) -> None:
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        self._thread.join(timeout=2.0)
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                if not self._pending:
+                    self._cond.wait(timeout=self.max_wait)
+                    if not self._pending:
+                        continue
+                # window: let the batch fill up briefly
+                deadline = time.perf_counter() + self.max_wait
+                while (len(self._pending) < self.max_batch
+                       and time.perf_counter() < deadline):
+                    self._cond.wait(timeout=max(
+                        deadline - time.perf_counter(), 0.0005))
+                batch = self._pending[:self.max_batch]
+                self._pending = self._pending[self.max_batch:]
+            self._flush(batch)
+
+    def _flush(self, batch) -> None:
+        payloads = [b[0] for b in batch]
+        futures = [b[1] for b in batch]
+        sizes = [b[2] for b in batch]
+        try:
+            stacked = self.stack_fn(payloads) if len(payloads) > 1 \
+                else payloads[0]
+            task_id = self.submit_fn(stacked)
+            self.batches_sent += 1
+            self.requests_sent += len(payloads)
+            result = self.result_fn(task_id, self.result_timeout)
+            parts = (self.split_fn(result, sizes) if len(payloads) > 1
+                     else [result])
+            for fut, part in zip(futures, parts):
+                fut.set_result(part)
+        except Exception as e:          # noqa: BLE001 — propagate to callers
+            for fut in futures:
+                if not fut.done():
+                    fut.set_exception(e)

@@ -1,0 +1,75 @@
+"""funcX SDK analogue (paper §3, Listing 1).
+
+    client = FuncXClient(service, token)
+    fid = client.register_function(process_stills)
+    tid = client.run(fid, endpoint_id, data={...})
+    res = client.get_result(tid)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .auth import Token
+from .batching import DynamicBatcher
+from .service import FuncXService
+from .tasks import Task, TaskStatus
+
+
+class FuncXClient:
+    def __init__(self, service: FuncXService, token: Token):
+        self.service = service
+        self.token = token
+
+    # -- registration ---------------------------------------------------------
+    def register_function(self, fn: Callable, *, name: Optional[str] = None,
+                          container_type: str = "python",
+                          allowed: Optional[Sequence[str]] = None,
+                          description: str = "") -> str:
+        return self.service.register_function(
+            self.token, fn, name=name, container_type=container_type,
+            allowed=allowed, description=description)
+
+    # -- execution --------------------------------------------------------------
+    def run(self, function_id: str, endpoint_id: str,
+            data: Any = None, *, container_type: Optional[str] = None) -> str:
+        return self.service.submit(self.token, function_id, endpoint_id,
+                                   data, container_type=container_type)
+
+    def batch_run(self, requests: Sequence[Tuple[str, str, Any]]) -> List[str]:
+        """User-facing batching (§4.6)."""
+        return self.service.submit_batch(self.token, requests)
+
+    def map(self, function_id: str, endpoint_id: str,
+            payloads: Sequence[Any], timeout: float = 60.0) -> List[Any]:
+        ids = self.batch_run([(function_id, endpoint_id, p)
+                              for p in payloads])
+        return self.get_batch_results(ids, timeout)
+
+    # -- results ----------------------------------------------------------------
+    def get_result(self, task_id: str, timeout: float = 30.0) -> Any:
+        return self.service.get_result(task_id, timeout)
+
+    def get_batch_results(self, task_ids: Sequence[str],
+                          timeout: float = 60.0) -> List[Any]:
+        return self.service.get_batch_results(task_ids, timeout)
+
+    def status(self, task_id: str) -> TaskStatus:
+        return self.service.status(task_id)
+
+    def task(self, task_id: str) -> Task:
+        return self.service.get_task(task_id)
+
+    # -- discovery (paper §10 future work) -----------------------------------------
+    def search_functions(self, pattern: str = ""):
+        return self.service.search_functions(self.token, pattern)
+
+    def list_endpoints(self):
+        return self.service.list_endpoints(self.token)
+
+    # -- serving frontend (beyond paper) ------------------------------------------
+    def make_batcher(self, function_id: str, endpoint_id: str,
+                     **kw) -> DynamicBatcher:
+        return DynamicBatcher(
+            submit_fn=lambda payload: self.run(function_id, endpoint_id,
+                                               data=payload),
+            result_fn=self.get_result, **kw)

@@ -1,0 +1,86 @@
+"""Forwarder↔endpoint channel (the ZeroMQ tier in funcX).
+
+Duplex pair of queues carrying *packed* buffers (serialization facade with
+routing tags, §4.5). Supports fault injection: ``disconnect()`` /
+``reconnect()`` emulate network partitions; ``drop_rate`` emulates lossy
+links — both used by the fault-tolerance tests to exercise the paper's
+requeue-on-disconnect and heartbeat-loss behaviours.
+"""
+from __future__ import annotations
+
+import queue
+import random
+import threading
+import time
+from typing import Any, Optional
+
+from ..serialization import pack, unpack
+
+
+class ChannelClosed(Exception):
+    pass
+
+
+class Channel:
+    def __init__(self, drop_rate: float = 0.0, seed: int = 0):
+        self._to_endpoint: "queue.Queue[bytes]" = queue.Queue()
+        self._to_service: "queue.Queue[bytes]" = queue.Queue()
+        self._connected = threading.Event()
+        self._connected.set()
+        self._closed = False
+        self.drop_rate = drop_rate
+        self._rng = random.Random(seed)
+        # traffic accounting
+        self.bytes_to_endpoint = 0
+        self.bytes_to_service = 0
+
+    # -- state ----------------------------------------------------------------
+    @property
+    def connected(self) -> bool:
+        return self._connected.is_set() and not self._closed
+
+    def disconnect(self) -> None:
+        self._connected.clear()
+
+    def reconnect(self) -> None:
+        if not self._closed:
+            self._connected.set()
+
+    def close(self) -> None:
+        self._closed = True
+        self._connected.clear()
+
+    def _maybe_drop(self) -> bool:
+        return self.drop_rate > 0 and self._rng.random() < self.drop_rate
+
+    # -- service → endpoint -----------------------------------------------------
+    def send_to_endpoint(self, obj: Any, tag: str = "") -> bool:
+        if not self.connected or self._maybe_drop():
+            return False
+        buf = pack(obj, tag=tag)
+        self.bytes_to_endpoint += len(buf)
+        self._to_endpoint.put(buf)
+        return True
+
+    def recv_at_endpoint(self, timeout: float = 0.1) -> Optional[tuple]:
+        try:
+            buf = self._to_endpoint.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        return unpack(buf)
+
+    # -- endpoint → service -----------------------------------------------------
+    def send_to_service(self, obj: Any, tag: str = "") -> bool:
+        if not self.connected or self._maybe_drop():
+            return False
+        buf = pack(obj, tag=tag)
+        self.bytes_to_service += len(buf)
+        self._to_service.put(buf)
+        return True
+
+    def recv_at_service(self, timeout: float = 0.1) -> Optional[tuple]:
+        try:
+            buf = self._to_service.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        return unpack(buf)

@@ -1,0 +1,369 @@
+"""The funcX endpoint agent (paper §4.3).
+
+Deployed "on" a compute resource (here: hosting a set of manager/worker
+threads and, for model-serving functions, a device mesh). Responsibilities,
+mirroring the paper:
+
+- registers with the service; receives tasks from its forwarder channel and
+  acks receipt (hierarchical queuing: tasks are cached at each layer until
+  the next layer acknowledges);
+- routes tasks to managers via a pluggable, warming-aware router (§6.2);
+- collects results and returns them to the forwarder;
+- heartbeats to the forwarder; detects *lost managers* via their heartbeats
+  and re-executes their in-flight tasks (§4.3 fault tolerance);
+- optional speculative re-execution of stragglers (beyond paper);
+- optional elastic provisioning strategy (§6.3).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from ..data import KVStore, TransferService, resolve_inputs, stage_outputs
+from .comms import Channel
+from .manager import Manager
+from .routing import Router, make_router
+from .tasks import now
+from .warming import ContainerRegistry
+from .worker import WorkItem, WorkResult
+
+
+class EndpointAgent:
+    def __init__(
+        self,
+        endpoint_id: str,
+        channel: Channel,
+        fetch_function: Callable[[str], Tuple[Callable, bool]],
+        *,
+        registry: Optional[ContainerRegistry] = None,
+        router: str | Router = "warming_aware",
+        store: Optional[KVStore] = None,
+        transfer: Optional[TransferService] = None,
+        heartbeat_interval: float = 0.05,
+        manager_timeout: float = 1.0,
+        max_retries: int = 2,
+        speculation: bool = False,
+        speculation_factor: float = 4.0,
+        speculation_min: float = 0.25,
+        stage_results: bool = True,
+    ):
+        self.endpoint_id = endpoint_id
+        self.channel = channel
+        self.fetch_function = fetch_function
+        self.registry = registry or ContainerRegistry()
+        self.router = (router if isinstance(router, Router)
+                       else make_router(router))
+        self.store = store
+        self.transfer = transfer
+        self.heartbeat_interval = heartbeat_interval
+        self.manager_timeout = manager_timeout
+        self.max_retries = max_retries
+        self.speculation = speculation
+        self.speculation_factor = speculation_factor
+        self.speculation_min = speculation_min
+        self.stage_results = stage_results
+
+        self.managers: Dict[str, Manager] = {}
+        self._managers_lock = threading.RLock()
+        self._mgr_counter = itertools.count()
+
+        self._queue: "collections.deque" = collections.deque()
+        self._queue_lock = threading.Lock()
+        self._queue_cond = threading.Condition(self._queue_lock)
+
+        self._fn_cache: Dict[str, Tuple[Callable, bool]] = {}
+        self._retries: Dict[str, int] = {}
+        self._completed: Set[str] = set()
+        self._dispatched_at: Dict[str, Tuple[float, dict, str]] = {}
+        self._durations: collections.deque = collections.deque(maxlen=256)
+
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self.strategy = None
+        # metrics
+        self.tasks_received = 0
+        self.tasks_completed = 0
+        self.tasks_reexecuted = 0
+        self.speculative_dispatches = 0
+
+    # ------------------------------------------------------------------ control
+    def start(self) -> None:
+        for name, fn in [("recv", self._recv_loop),
+                         ("dispatch", self._dispatch_loop),
+                         ("heartbeat", self._heartbeat_loop),
+                         ("monitor", self._monitor_loop)]:
+            t = threading.Thread(target=fn, daemon=True,
+                                 name=f"ep-{self.endpoint_id}-{name}")
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self.strategy is not None:
+            self.strategy.stop()
+        with self._managers_lock:
+            for m in self.managers.values():
+                m.stop()
+        with self._queue_cond:
+            self._queue_cond.notify_all()
+
+    # ---------------------------------------------------------------- managers
+    def add_manager(self, n_workers: int = 4, **kw) -> Manager:
+        mid = f"{self.endpoint_id}/m{next(self._mgr_counter)}"
+        m = Manager(mid, n_workers, self.registry, self._on_result, **kw)
+        m.start()
+        with self._managers_lock:
+            self.managers[mid] = m
+        return m
+
+    def remove_manager(self, manager_id: str) -> None:
+        with self._managers_lock:
+            m = self.managers.pop(manager_id, None)
+        if m is not None:
+            m.stop()
+
+    def kill_manager(self, manager_id: str) -> None:
+        """Test hook: simulated node failure."""
+        with self._managers_lock:
+            m = self.managers.get(manager_id)
+        if m is not None:
+            m.kill()
+
+    def _alive_managers(self) -> List[Manager]:
+        with self._managers_lock:
+            return [m for m in self.managers.values() if m.alive]
+
+    # ------------------------------------------------------------------ metrics
+    def pending_tasks(self) -> int:
+        with self._queue_lock:
+            q = len(self._queue)
+        return q + sum(m.inbox.qsize() for m in self._alive_managers())
+
+    def idle_workers(self) -> int:
+        return sum(m.info().idle_workers for m in self._alive_managers())
+
+    def block_idle(self, manager_ids: List[str]) -> bool:
+        with self._managers_lock:
+            ms = [self.managers.get(i) for i in manager_ids]
+        return all(m is not None and m.alive and
+                   m.info().idle_workers == len(m.workers) and
+                   m.inbox.qsize() == 0 for m in ms)
+
+    # ------------------------------------------------------------------- loops
+    def _recv_loop(self) -> None:
+        while not self._stop.is_set():
+            msg = self.channel.recv_at_endpoint(timeout=0.05)
+            if msg is None:
+                continue
+            env, _tag = msg
+            kind = env.get("type")
+            if kind == "task_batch":
+                t_recv = now()
+                for t_env in env["tasks"]:
+                    t_env["stamps"] = {"endpoint_recv": t_recv}
+                    self._enqueue(t_env)
+                self.channel.send_to_service(
+                    {"type": "ack", "task_ids": [t["task_id"]
+                                                 for t in env["tasks"]],
+                     "t_endpoint_recv": t_recv}, tag="ack")
+            elif kind == "task":
+                env["stamps"] = {"endpoint_recv": now()}
+                self._enqueue(env)
+                self.channel.send_to_service(
+                    {"type": "ack", "task_ids": [env["task_id"]],
+                     "t_endpoint_recv": env["stamps"]["endpoint_recv"]},
+                    tag="ack")
+
+    def _enqueue(self, t_env: dict, front: bool = False) -> None:
+        self.tasks_received += 1
+        with self._queue_cond:
+            if front:
+                self._queue.appendleft(t_env)
+            else:
+                self._queue.append(t_env)
+            self._queue_cond.notify()
+
+    def _resolve_fn(self, function_id: str) -> Tuple[Callable, bool]:
+        if function_id not in self._fn_cache:
+            self._fn_cache[function_id] = self.fetch_function(function_id)
+        return self._fn_cache[function_id]
+
+    def _make_item(self, t_env: dict) -> WorkItem:
+        # requeued items after manager loss carry their resolved fn
+        if "_resolved" in t_env:
+            fn, wants_env = t_env["_resolved"]
+        else:
+            fn, wants_env = self._resolve_fn(t_env["function_id"])
+        payload = t_env["payload"]
+        if self.store is not None and "_resolved" not in t_env:
+            payload = resolve_inputs(payload, self.endpoint_id, self.store,
+                                     self.transfer)
+        return WorkItem(
+            task_id=t_env["task_id"],
+            container_type=t_env["container_type"],
+            fn=fn, wants_env=wants_env, payload=payload,
+            stamps=dict(t_env.get("stamps", {})))
+
+    def _dispatch_loop(self) -> None:
+        """Routes queued tasks to managers. Manager state (warm types, free
+        room) is snapshotted once per iteration and updated locally while a
+        whole batch of queued tasks is routed against it — amortizing the
+        snapshot cost is what sustains >1k tasks/s per agent (§7.2.3)."""
+        while not self._stop.is_set():
+            with self._queue_cond:
+                while not self._queue and not self._stop.is_set():
+                    self._queue_cond.wait(timeout=0.1)
+                if self._stop.is_set():
+                    return
+                batch = []
+                while self._queue and len(batch) < 256:
+                    batch.append(self._queue.popleft())
+
+            managers = self._alive_managers()
+            infos = [m.info() for m in managers]
+            by_id = {m.manager_id: m for m in managers}
+            room = {m.manager_id: m.room() for m in managers}
+            per_manager: Dict[str, list] = {}
+            leftovers = []
+            for t_env in batch:
+                ct = t_env["container_type"]
+                target = self.router.route(ct, infos)
+                if target is None or room.get(target, 0) <= 0:
+                    # the router's choice is saturated: requeue and retry
+                    # against a fresh snapshot (never override the policy
+                    # with first-fit — that would erase warm affinity)
+                    leftovers.append(t_env)
+                    continue
+                room[target] -= 1
+                for inf in infos:          # keep the snapshot coherent
+                    if inf.manager_id == target:
+                        inf.queued += 1
+                        if inf.warm_idle.get(ct, 0) > 0:
+                            inf.warm_idle[ct] -= 1
+                        inf.idle_workers = max(inf.idle_workers - 1, 0)
+                        break
+                try:
+                    item = self._make_item(t_env)
+                except Exception as e:         # fn fetch / stage-in failure
+                    self._send_failure(t_env["task_id"],
+                                       f"staging: {type(e).__name__}: {e}")
+                    continue
+                self._dispatched_at[item.task_id] = (
+                    time.perf_counter(), t_env, target)
+                per_manager.setdefault(target, []).append(item)
+            for mid, items in per_manager.items():
+                by_id[mid].submit_batch(items)
+            if leftovers:
+                with self._queue_cond:
+                    for t_env in reversed(leftovers):
+                        self._queue.appendleft(t_env)
+                time.sleep(0.002)
+
+    def _on_result(self, manager_id: str, res: WorkResult) -> None:
+        if res.task_id in self._completed:
+            return                      # duplicate from speculation — drop
+        self._completed.add(res.task_id)
+        disp = self._dispatched_at.pop(res.task_id, None)
+        if disp is not None:
+            self._durations.append(time.perf_counter() - disp[0])
+        self.tasks_completed += 1
+        result = res.result
+        if (res.status == "SUCCESS" and self.stage_results
+                and self.store is not None):
+            result = stage_outputs(result, self.endpoint_id, self.store,
+                                   key_prefix=f"task/{res.task_id}")
+        self.channel.send_to_service({
+            "type": "result", "task_id": res.task_id, "status": res.status,
+            "result": result, "error": res.error,
+            "remote_traceback": res.remote_traceback,
+            "stamps": res.stamps, "cold_start": res.cold_start,
+            "build_time": res.build_time,
+            "worker_id": res.worker_id, "manager_id": manager_id,
+        }, tag="result")
+
+    def _send_failure(self, task_id: str, error: str,
+                      status: str = "FAILED") -> None:
+        self._completed.add(task_id)
+        self.channel.send_to_service({
+            "type": "result", "task_id": task_id, "status": status,
+            "result": None, "error": error, "remote_traceback": "",
+            "stamps": {}, "cold_start": False, "build_time": 0.0,
+            "worker_id": "", "manager_id": "",
+        }, tag="result")
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.is_set():
+            self.channel.send_to_service(
+                {"type": "heartbeat", "endpoint_id": self.endpoint_id,
+                 "ts": time.time()}, tag="hb")
+            time.sleep(self.heartbeat_interval)
+
+    # -- fault tolerance: lost managers & stragglers --------------------------
+    def _monitor_loop(self) -> None:
+        while not self._stop.is_set():
+            time.sleep(self.heartbeat_interval)
+            self._check_lost_managers()
+            if self.speculation:
+                self._check_stragglers()
+
+    def _check_lost_managers(self) -> None:
+        cutoff = time.perf_counter() - self.manager_timeout
+        with self._managers_lock:
+            items = list(self.managers.items())
+        for mid, m in items:
+            if m.alive and m.last_heartbeat >= cutoff:
+                continue
+            if not m.alive or m.last_heartbeat < cutoff:
+                # paper §4.3: lost tasks are re-executed (if permitted)
+                lost = m.in_flight()
+                with self._managers_lock:
+                    self.managers.pop(mid, None)
+                m.stop()
+                for item in lost:
+                    if item.task_id in self._completed:
+                        continue
+                    self._dispatched_at.pop(item.task_id, None)
+                    retries = self._retries.get(item.task_id, 0) + 1
+                    self._retries[item.task_id] = retries
+                    if retries > self.max_retries:
+                        self._send_failure(
+                            item.task_id,
+                            f"lost after {retries - 1} retries "
+                            f"(manager {mid} failed)", status="LOST")
+                    else:
+                        self.tasks_reexecuted += 1
+                        self._enqueue({
+                            "task_id": item.task_id,
+                            "function_id": "", "container_type":
+                                item.container_type,
+                            "payload": item.payload,
+                            "stamps": item.stamps,
+                            "_resolved": (item.fn, item.wants_env),
+                        }, front=True)
+
+    def _check_stragglers(self) -> None:
+        if len(self._durations) < 4:
+            return
+        mean = sum(self._durations) / len(self._durations)
+        threshold = max(self.speculation_min, self.speculation_factor * mean)
+        now_s = time.perf_counter()
+        for task_id, (t0, t_env, mid) in list(self._dispatched_at.items()):
+            if task_id in self._completed:
+                continue
+            if now_s - t0 > threshold:
+                # speculative duplicate on a different manager
+                others = [m for m in self._alive_managers()
+                          if m.manager_id != mid and m.room() > 0]
+                if not others:
+                    continue
+                try:
+                    item = self._make_item(t_env)
+                except Exception:
+                    continue
+                others[0].submit_batch([item])
+                self.speculative_dispatches += 1
+                # push threshold forward so we don't spam duplicates
+                self._dispatched_at[task_id] = (now_s, t_env, mid)

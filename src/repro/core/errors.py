@@ -1,0 +1,33 @@
+"""Exception taxonomy for the FaaS runtime."""
+
+
+class FuncXError(Exception):
+    """Base."""
+
+
+class AuthError(FuncXError):
+    pass
+
+
+class RegistrationError(FuncXError):
+    pass
+
+
+class TaskFailure(FuncXError):
+    """Function raised; carries the remote traceback string."""
+
+    def __init__(self, message: str, remote_traceback: str = ""):
+        super().__init__(message)
+        self.remote_traceback = remote_traceback
+
+
+class TaskLost(FuncXError):
+    """Task exceeded retry budget after worker/manager loss."""
+
+
+class PayloadTooLarge(FuncXError):
+    """Payload exceeds the 10 MB service limit (use DataRefs — paper §5.1)."""
+
+
+class EndpointUnavailable(FuncXError):
+    pass

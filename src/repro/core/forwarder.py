@@ -1,0 +1,206 @@
+"""Forwarder (paper §4.1): one per registered endpoint. Reads the
+endpoint's service-side task queue, dispatches batches over the channel,
+tracks in-flight tasks, merges results into the task store, and monitors
+endpoint heartbeats — requeueing all in-flight tasks when the endpoint
+disconnects and resuming on reconnect (paper §4.1 fault tolerance).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Deque, Dict, List, Optional
+
+from .comms import Channel
+from .tasks import Task, TaskStatus, TaskStore, now
+
+
+class Forwarder:
+    def __init__(
+        self,
+        endpoint_id: str,
+        task_store: TaskStore,
+        channel: Channel,
+        *,
+        batch_size: int = 32,
+        heartbeat_timeout: float = 0.5,
+        send_rtt: float = 0.0,          # per-message latency (benchmarks)
+    ):
+        self.endpoint_id = endpoint_id
+        self.task_store = task_store
+        self.channel = channel
+        self.batch_size = batch_size
+        self.heartbeat_timeout = heartbeat_timeout
+        self.send_rtt = send_rtt
+
+        self.queue: Deque[str] = collections.deque()
+        self._qlock = threading.Lock()
+        self._qcond = threading.Condition(self._qlock)
+        self._in_flight: Dict[str, float] = {}
+        self._if_lock = threading.Lock()
+        self.last_heartbeat = time.time()
+        self.endpoint_connected = True
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        # metrics
+        self.dispatched = 0
+        self.results_received = 0
+        self.requeues = 0
+
+    # ------------------------------------------------------------------ control
+    def start(self) -> None:
+        for name, fn in [("dispatch", self._dispatch_loop),
+                         ("recv", self._recv_loop),
+                         ("monitor", self._monitor_loop)]:
+            t = threading.Thread(target=fn, daemon=True,
+                                 name=f"fwd-{self.endpoint_id}-{name}")
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._qcond:
+            self._qcond.notify_all()
+
+    @property
+    def healthy(self) -> bool:
+        return all(t.is_alive() for t in self._threads) and \
+            not self._stop.is_set()
+
+    # ------------------------------------------------------------------ intake
+    def enqueue(self, task_id: str, front: bool = False) -> None:
+        with self._qcond:
+            if front:
+                self.queue.appendleft(task_id)
+            else:
+                self.queue.append(task_id)
+            self._qcond.notify()
+
+    def queue_len(self) -> int:
+        with self._qlock:
+            return len(self.queue)
+
+    def in_flight_count(self) -> int:
+        with self._if_lock:
+            return len(self._in_flight)
+
+    # ------------------------------------------------------------------- loops
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self.endpoint_connected or not self.channel.connected:
+                time.sleep(0.02)
+                continue
+            batch: List[str] = []
+            with self._qcond:
+                while not self.queue and not self._stop.is_set():
+                    self._qcond.wait(timeout=0.1)
+                while self.queue and len(batch) < self.batch_size:
+                    batch.append(self.queue.popleft())
+            if self._stop.is_set() or not batch:
+                continue
+            envs = []
+            for tid in batch:
+                try:
+                    task = self.task_store.get(tid)
+                except KeyError:
+                    continue
+                if task.done:
+                    continue
+                task.status = TaskStatus.DISPATCHED
+                task.stamp("forwarder_sent")
+                envs.append({"task_id": tid,
+                             "function_id": task.function_id,
+                             "container_type": task.container_type,
+                             "payload": task.payload})
+            if not envs:
+                continue
+            if self.send_rtt:
+                time.sleep(self.send_rtt)
+            ok = self.channel.send_to_endpoint(
+                {"type": "task_batch", "tasks": envs}, tag="tasks")
+            if ok:
+                with self._if_lock:
+                    for env in envs:
+                        self._in_flight[env["task_id"]] = time.time()
+                self.dispatched += len(envs)
+            else:
+                # channel refused (disconnected / dropped): requeue in order
+                with self._qcond:
+                    for env in reversed(envs):
+                        self.queue.appendleft(env["task_id"])
+
+    def _recv_loop(self) -> None:
+        while not self._stop.is_set():
+            msg = self.channel.recv_at_service(timeout=0.05)
+            if msg is None:
+                continue
+            env, _tag = msg
+            kind = env.get("type")
+            if kind == "heartbeat":
+                self.last_heartbeat = time.time()
+                if not self.endpoint_connected:
+                    self.endpoint_connected = True      # reconnected
+            elif kind == "ack":
+                for tid in env.get("task_ids", []):
+                    try:
+                        task = self.task_store.get(tid)
+                        task.t.setdefault("endpoint_recv",
+                                          env.get("t_endpoint_recv", now()))
+                    except KeyError:
+                        pass
+            elif kind == "result":
+                self._handle_result(env)
+
+    def _handle_result(self, env: dict) -> None:
+        tid = env["task_id"]
+        with self._if_lock:
+            self._in_flight.pop(tid, None)
+        try:
+            task = self.task_store.get(tid)
+        except KeyError:
+            return
+        if task.done:
+            return
+        task.t.update(env.get("stamps", {}))
+        task.cold_start = env.get("cold_start", False)
+        task.worker_id = env.get("worker_id")
+        task.manager_id = env.get("manager_id")
+        if env["status"] == "SUCCESS":
+            task.result = env.get("result")
+            task.status = TaskStatus.SUCCESS
+        elif env["status"] == "LOST":
+            task.error = env.get("error")
+            task.status = TaskStatus.LOST
+        else:
+            task.error = env.get("error")
+            task.remote_traceback = env.get("remote_traceback", "")
+            task.status = TaskStatus.FAILED
+        task.stamp("result_stored")
+        self.results_received += 1
+        self.task_store.mark_done(tid)
+
+    def _monitor_loop(self) -> None:
+        """Heartbeat-based endpoint liveness (paper: 30 s default; scaled
+        down here). On loss: requeue all in-flight tasks."""
+        while not self._stop.is_set():
+            time.sleep(self.heartbeat_timeout / 4)
+            if time.time() - self.last_heartbeat > self.heartbeat_timeout:
+                if self.endpoint_connected:
+                    self.endpoint_connected = False
+                    self._requeue_in_flight()
+
+    def _requeue_in_flight(self) -> None:
+        with self._if_lock:
+            pending = list(self._in_flight.keys())
+            self._in_flight.clear()
+        requeued = 0
+        for tid in pending:
+            try:
+                task = self.task_store.get(tid)
+            except KeyError:
+                continue
+            if not task.done:
+                task.status = TaskStatus.PENDING
+                self.enqueue(tid, front=True)
+                requeued += 1
+        self.requeues += requeued

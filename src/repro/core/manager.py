@@ -1,0 +1,228 @@
+"""Manager (paper §4.3, §6.2): represents one compute node; owns the node's
+workers, advertises warm-container state + free capacity to the endpoint
+agent, pulls task batches (internal batching §4.6), assigns tasks to workers
+warm-first, and rebalances deployed containers proportionally to the
+arriving task mix.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from .routing import ManagerInfo
+from .tasks import now
+from .warming import ContainerRegistry, proportional_allocation
+from .worker import Worker, WorkItem, WorkResult
+
+
+class Manager:
+    def __init__(
+        self,
+        manager_id: str,
+        n_workers: int,
+        registry: ContainerRegistry,
+        result_cb: Callable[[str, WorkResult], None],
+        *,
+        cache_slots: int = 1,
+        idle_timeout: Optional[float] = None,
+        prefetch: int = 0,
+        prewarm: bool = True,
+        worker_slowdown: float = 0.0,
+        affinity_patience: float = 0.5,
+    ):
+        self.manager_id = manager_id
+        self.registry = registry
+        self.prefetch = prefetch
+        self.prewarm = prewarm
+        # how long a task waits for a BUSY warm container before we evict
+        # a cold worker for it (avoids warm-container churn; bounded so
+        # stragglers cannot starve the queue)
+        self.affinity_patience = affinity_patience
+        self._result_cb = result_cb
+        self.workers: List[Worker] = [
+            Worker(f"{manager_id}/w{i}", registry,
+                   self._on_result, cache_slots=cache_slots,
+                   idle_timeout=idle_timeout, slowdown=worker_slowdown)
+            for i in range(n_workers)
+        ]
+        self.inbox: "queue.Queue[WorkItem]" = queue.Queue()
+        self._in_flight: Dict[str, WorkItem] = {}
+        self._in_flight_lock = threading.Lock()
+        self._mix: collections.Counter = collections.Counter()
+        self._stop = threading.Event()
+        self._killed = False
+        self.last_heartbeat = time.perf_counter()
+        self._assign_thread = threading.Thread(
+            target=self._assign_loop, daemon=True,
+            name=f"manager-{manager_id}")
+
+    # -- lifecycle ---------------------------------------------------------------
+    def start(self) -> None:
+        for w in self.workers:
+            w.start()
+        self._assign_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for w in self.workers:
+            w.stop()
+
+    def kill(self) -> None:
+        """Simulated node failure: everything in flight is lost (until the
+        endpoint's heartbeat monitor notices and re-executes)."""
+        self._killed = True
+        self._stop.set()
+        for w in self.workers:
+            w.kill()
+
+    @property
+    def alive(self) -> bool:
+        return not self._killed and not self._stop.is_set()
+
+    # -- capacity / advertising (paper: managers advertise container types
+    # and available capacity) -----------------------------------------------------
+    def info(self) -> ManagerInfo:
+        warm_idle: Dict[str, int] = collections.Counter()
+        warm_total: Dict[str, int] = collections.Counter()
+        idle = 0
+        for w in self.workers:
+            types = w.warm_types()
+            for t in types:
+                warm_total[t] += 1
+            if w.idle:
+                idle += 1
+                for t in types:
+                    warm_idle[t] += 1
+        return ManagerInfo(
+            manager_id=self.manager_id,
+            idle_workers=idle,
+            queued=self.inbox.qsize() + sum(1 for w in self.workers
+                                            if not w.idle),
+            warm_idle=dict(warm_idle),
+            warm_total=dict(warm_total),
+            capacity=len(self.workers),
+        )
+
+    def room(self) -> int:
+        """How many more tasks this manager will accept right now
+        (capacity − queued + prefetch) — internal batching window."""
+        inf = self.info()
+        return max(inf.capacity + self.prefetch - inf.queued, 0)
+
+    # -- task intake ----------------------------------------------------------------
+    def submit(self, item: WorkItem) -> None:
+        with self._in_flight_lock:
+            self._in_flight[item.task_id] = item
+        self._mix[item.container_type] += 1
+        self.inbox.put(item)
+
+    def submit_batch(self, items: List[WorkItem]) -> None:
+        for it in items:
+            self.submit(it)
+        self._rebalance()
+
+    def in_flight(self) -> List[WorkItem]:
+        with self._in_flight_lock:
+            return list(self._in_flight.values())
+
+    # -- internals --------------------------------------------------------------------
+    def _on_result(self, res: WorkResult) -> None:
+        with self._in_flight_lock:
+            self._in_flight.pop(res.task_id, None)
+        self.last_heartbeat = time.perf_counter()
+        self._result_cb(self.manager_id, res)
+
+    def _pick_worker(self, container_type: str,
+                     patient: bool) -> Optional[Worker]:
+        idle = [w for w in self.workers if w.idle]
+        if not idle:
+            return None
+        warm = [w for w in idle if container_type in w.warm_types()]
+        if warm:
+            return warm[0]
+        planned = [w for w in idle if w.target_type == container_type]
+        if planned:
+            return planned[0]
+        empty = [w for w in idle if not w.warm_types()]
+        if empty:
+            return empty[0]
+        # a BUSY worker has this type warm: within the patience window,
+        # wait for it instead of evicting someone else's warm container
+        if patient and any(container_type in w.warm_types()
+                           for w in self.workers if not w.idle):
+            return None
+        # must evict someone: the least-demanded warm set loses
+        def evict_cost(w: Worker) -> int:
+            return sum(self._mix.get(t, 0) for t in w.warm_types())
+        return min(idle, key=evict_cost)
+
+    def _assign_loop(self) -> None:
+        while not self._stop.is_set():
+            self.last_heartbeat = time.perf_counter()
+            try:
+                item = self.inbox.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            first_seen = item.stamps.setdefault("manager_recv", now())
+            patient = (now() - first_seen) < self.affinity_patience
+            w = self._pick_worker(item.container_type, patient)
+            if w is None:
+                # no worker yet (all busy / waiting for warm affinity):
+                # requeue at the tail so other types keep flowing
+                self.inbox.put(item)
+                if self.inbox.qsize() <= 1:
+                    time.sleep(0.002)
+                else:
+                    time.sleep(0.0002)
+                continue
+            item.stamps["manager_assigned"] = now()
+            w.submit(item)
+
+    def _rebalance(self) -> None:
+        """Paper §6.2: deploy containers per type proportionally to the
+        received task mix; pre-warm planned types on idle workers.
+
+        Stability matters: only workers that are EMPTY or whose warm types
+        are in SURPLUS (deployed > target) are retargeted — otherwise
+        repeated rebalances evict still-needed containers and the fleet
+        thrashes (cold-start churn instead of warming)."""
+        if not self._mix:
+            return
+        targets = proportional_allocation(dict(self._mix), len(self.workers))
+        deployed: collections.Counter = collections.Counter()
+        for w in self.workers:
+            for t in w.warm_types():
+                deployed[t] += 1
+        deficits = {t: max(n - deployed.get(t, 0), 0)
+                    for t, n in targets.items()}
+        surplus = {t: max(deployed.get(t, 0) - targets.get(t, 0), 0)
+                   for t in deployed}
+
+        def retargetable(w: Worker) -> bool:
+            wt = w.warm_types()
+            if not wt:
+                return True
+            return all(surplus.get(t, 0) > 0 for t in wt)
+
+        for w in self.workers:
+            if not any(d > 0 for d in deficits.values()):
+                break
+            if not w.idle or not retargetable(w):
+                continue
+            if w.target_type is not None and \
+                    deficits.get(w.target_type, 0) > 0:
+                deficits[w.target_type] -= 1       # plan already in motion
+                continue
+            t = max(deficits, key=deficits.get)
+            w.target_type = t
+            deficits[t] -= 1
+            for old in w.warm_types():
+                surplus[old] = max(surplus.get(old, 0) - 1, 0)
+            # pre-warm only EMPTY workers: plans steer placement, but a
+            # container is never evicted for a prediction — only by an
+            # actual task (prevents prewarm churn)
+            if self.prewarm and not w.warm_types():
+                w.prewarm(t)

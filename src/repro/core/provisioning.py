@@ -1,0 +1,148 @@
+"""Elastic resource provisioning (paper §4.4, §6.3).
+
+``Provider`` is the Parsl-provider-interface analogue: a uniform way to
+acquire/release nodes (managers) from a local pool, a batch scheduler, or a
+cloud — with realistic acquisition delays simulated for the latter two.
+
+``ElasticStrategy`` is the monitoring+scaling component: provision more
+nodes when pending work exceeds idle capacity, release nodes idle past the
+timeout, bounded by [min_blocks, max_blocks] and an aggressiveness knob —
+exactly the paper's strategy interface.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+
+class Provider:
+    """Acquire/release manager nodes for an endpoint."""
+
+    name = "abstract"
+
+    def __init__(self, nodes_per_block: int = 1, workers_per_node: int = 4):
+        self.nodes_per_block = nodes_per_block
+        self.workers_per_node = workers_per_node
+
+    def acquisition_delay(self) -> float:
+        return 0.0
+
+    def start_block(self, endpoint) -> list:
+        """Returns the list of manager ids started (blocking; may sleep for
+        the scheduler/cloud delay)."""
+        delay = self.acquisition_delay()
+        if delay > 0:
+            time.sleep(delay)
+        ids = []
+        for _ in range(self.nodes_per_block):
+            m = endpoint.add_manager(n_workers=self.workers_per_node)
+            ids.append(m.manager_id)
+        return ids
+
+    def stop_block(self, endpoint, manager_ids: list) -> None:
+        for mid in manager_ids:
+            endpoint.remove_manager(mid)
+
+
+class LocalProvider(Provider):
+    name = "local"
+
+
+class SimSlurmProvider(Provider):
+    """Batch-scheduler queue wait: lognormal-ish delay around ``mean_wait``."""
+
+    name = "slurm"
+
+    def __init__(self, mean_wait: float = 0.2, jitter: float = 0.5,
+                 seed: int = 0, **kw):
+        super().__init__(**kw)
+        self.mean_wait = mean_wait
+        self.jitter = jitter
+        self._rng = random.Random(seed)
+
+    def acquisition_delay(self) -> float:
+        return self.mean_wait * (1.0 + self.jitter * self._rng.random())
+
+
+class SimCloudProvider(Provider):
+    """Cloud instance boot delay (fixed-ish)."""
+
+    name = "cloud"
+
+    def __init__(self, boot_delay: float = 0.1, **kw):
+        super().__init__(**kw)
+        self.boot_delay = boot_delay
+
+    def acquisition_delay(self) -> float:
+        return self.boot_delay
+
+
+class ElasticStrategy(threading.Thread):
+    """Monitor + scale loop (paper §6.3).
+
+    - scale OUT when pending > idle × aggressiveness (up to max_blocks);
+    - scale IN a block whose managers have all been idle > idle_timeout
+      (down to min_blocks; paper default 2 min, configurable).
+    """
+
+    def __init__(self, endpoint, provider: Provider, *,
+                 min_blocks: int = 1, max_blocks: int = 4,
+                 aggressiveness: float = 1.0, idle_timeout: float = 2.0,
+                 interval: float = 0.05):
+        super().__init__(daemon=True, name=f"strategy-{endpoint.endpoint_id}")
+        self.endpoint = endpoint
+        self.provider = provider
+        self.min_blocks = min_blocks
+        self.max_blocks = max_blocks
+        self.aggressiveness = aggressiveness
+        self.idle_timeout = idle_timeout
+        self.interval = interval
+        self._blocks: Dict[str, list] = {}
+        self._idle_since: Dict[str, float] = {}
+        self._stop = threading.Event()
+        self.scale_out_events = 0
+        self.scale_in_events = 0
+
+    def blocks(self) -> int:
+        return len(self._blocks)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def _ensure_min(self) -> None:
+        while len(self._blocks) < self.min_blocks:
+            ids = self.provider.start_block(self.endpoint)
+            self._blocks[f"block{len(self._blocks)}-{time.monotonic():.3f}"] = ids
+
+    def run(self) -> None:
+        self._ensure_min()
+        while not self._stop.is_set():
+            time.sleep(self.interval)
+            try:
+                pending = self.endpoint.pending_tasks()
+                idle = self.endpoint.idle_workers()
+            except Exception:
+                continue
+            # scale out
+            if pending > idle * self.aggressiveness and \
+                    len(self._blocks) < self.max_blocks:
+                ids = self.provider.start_block(self.endpoint)
+                self._blocks[f"block-{time.monotonic():.6f}"] = ids
+                self.scale_out_events += 1
+                continue
+            # scale in: find a block fully idle past the timeout
+            if len(self._blocks) > self.min_blocks and pending == 0:
+                now = time.monotonic()
+                for bid, ids in list(self._blocks.items()):
+                    if self.endpoint.block_idle(ids):
+                        since = self._idle_since.setdefault(bid, now)
+                        if now - since > self.idle_timeout:
+                            self.provider.stop_block(self.endpoint, ids)
+                            del self._blocks[bid]
+                            self._idle_since.pop(bid, None)
+                            self.scale_in_events += 1
+                            break
+                    else:
+                        self._idle_since.pop(bid, None)

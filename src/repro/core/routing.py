@@ -1,0 +1,198 @@
+"""Function routing (paper §6.2).
+
+The funcX agent routes each task to a manager:
+
+  1. prefer managers with a *warm* container of the required type, choosing
+     the one with the most available warm workers (load balance);
+  2. otherwise pick a manager at random (the paper's fallback and the
+     baseline we benchmark against).
+
+Beyond-paper routers:
+  - ``CostAwareRouter`` scores managers by expected completion time
+    (queue wait + cold-start cost when no warm container), using the
+    endpoint's measured build times — a dry-run-informed scheduler.
+  - ``LocalityAwareRouter`` breaks warm ties toward managers whose local
+    store already holds the task's input refs.
+
+All routers consume the same advertised ``ManagerInfo`` snapshots, so
+policies are swappable per endpoint (paper: 'modular scheduling interfaces').
+"""
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class ManagerInfo:
+    """What a manager advertises to the endpoint agent (paper §6.2)."""
+    manager_id: str
+    idle_workers: int
+    queued: int
+    warm_idle: Dict[str, int]          # container_type → idle workers warm
+    warm_total: Dict[str, int]         # container_type → workers warm
+    capacity: int                      # total workers
+    local_keys: frozenset = frozenset()  # store keys held locally
+
+    @property
+    def free_room(self) -> int:
+        return max(self.capacity - self.queued, 0)
+
+
+class Router:
+    name = "abstract"
+
+    def route(self, container_type: str, managers: Sequence[ManagerInfo],
+              input_keys: frozenset = frozenset()) -> Optional[str]:
+        raise NotImplementedError
+
+
+class RandomRouter(Router):
+    """Paper's baseline: uniformly random among managers with room."""
+
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def route(self, container_type, managers, input_keys=frozenset()):
+        if not managers:
+            return None
+        with_room = [m for m in managers if m.free_room > 0]
+        pool = with_room or list(managers)
+        return self.rng.choice(pool).manager_id
+
+
+class WarmingAwareRouter(Router):
+    """Paper §6.2: warm container first, most-available-warm-workers
+    tie-break, random fallback."""
+
+    name = "warming_aware"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def route(self, container_type, managers, input_keys=frozenset()):
+        if not managers:
+            return None
+        warm = [m for m in managers if m.warm_idle.get(container_type, 0) > 0]
+        if warm:
+            best = max(warm, key=lambda m: m.warm_idle[container_type])
+            return best.manager_id
+        # second chance: warm-but-busy (task queues behind a warm worker,
+        # still avoiding a cold start)
+        warm_busy = [m for m in managers
+                     if m.warm_total.get(container_type, 0) > 0
+                     and m.free_room > 0]
+        if warm_busy:
+            best = max(warm_busy, key=lambda m: m.warm_total[container_type])
+            return best.manager_id
+        with_room = [m for m in managers if m.free_room > 0]
+        pool = with_room or list(managers)
+        return self.rng.choice(pool).manager_id
+
+
+class WarmingHashRouter(WarmingAwareRouter):
+    """Beyond-paper: warming-aware with a *consistent-hash* cold fallback.
+
+    The paper falls back to uniform random when no warm container exists,
+    which scatters each type across all managers and (under slot pressure)
+    thrashes containers. Hashing the container type onto the manager ring
+    creates type→manager affinity from the very first task, so the fleet
+    converges to a stable specialization without any coordination."""
+
+    name = "warming_hash"
+
+    def route(self, container_type, managers, input_keys=frozenset()):
+        if not managers:
+            return None
+        warm = [m for m in managers if m.warm_idle.get(container_type, 0) > 0]
+        if warm:
+            return max(warm,
+                       key=lambda m: m.warm_idle[container_type]).manager_id
+        warm_busy = [m for m in managers
+                     if m.warm_total.get(container_type, 0) > 0
+                     and m.free_room > 0]
+        if warm_busy:
+            return max(warm_busy,
+                       key=lambda m: m.warm_total[container_type]).manager_id
+        ordered = sorted(managers, key=lambda m: m.manager_id)
+        h = hash(container_type)
+        for probe in range(len(ordered)):        # linear probe past full ones
+            m = ordered[(h + probe) % len(ordered)]
+            if m.free_room > 0:
+                return m.manager_id
+        return ordered[h % len(ordered)].manager_id
+
+
+class CostAwareRouter(Router):
+    """Beyond-paper: minimize expected completion = queue_wait + cold_cost.
+
+    ``cold_cost(type)`` defaults to the endpoint's running mean of measured
+    build times per type; ``mean_task_s`` estimates queue drain rate."""
+
+    name = "cost_aware"
+
+    def __init__(self, seed: int = 0, default_cold_cost: float = 1.0,
+                 mean_task_s: float = 0.05):
+        self.rng = random.Random(seed)
+        self.default_cold_cost = default_cold_cost
+        self.mean_task_s = mean_task_s
+        self._costs: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def observe_build(self, container_type: str, seconds: float) -> None:
+        with self._lock:
+            prev = self._costs.get(container_type)
+            self._costs[container_type] = (seconds if prev is None
+                                           else 0.8 * prev + 0.2 * seconds)
+
+    def cold_cost(self, container_type: str) -> float:
+        with self._lock:
+            return self._costs.get(container_type, self.default_cold_cost)
+
+    def route(self, container_type, managers, input_keys=frozenset()):
+        if not managers:
+            return None
+
+        def score(m: ManagerInfo) -> float:
+            wait = (m.queued / max(m.capacity, 1)) * self.mean_task_s
+            cold = 0.0 if m.warm_total.get(container_type, 0) > 0 \
+                else self.cold_cost(container_type)
+            # small jitter to spread exact ties
+            return wait + cold + self.rng.random() * 1e-6
+
+        return min(managers, key=score).manager_id
+
+
+class LocalityAwareRouter(WarmingAwareRouter):
+    """Beyond-paper: among equally-warm managers prefer data locality."""
+
+    name = "locality_aware"
+
+    def route(self, container_type, managers, input_keys=frozenset()):
+        if not managers:
+            return None
+        warm = [m for m in managers if m.warm_idle.get(container_type, 0) > 0]
+        if warm and input_keys:
+            def overlap(m):
+                return len(input_keys & m.local_keys)
+            best = max(warm, key=lambda m: (overlap(m),
+                                            m.warm_idle[container_type]))
+            return best.manager_id
+        return super().route(container_type, managers, input_keys)
+
+
+ROUTERS = {
+    "random": RandomRouter,
+    "warming_aware": WarmingAwareRouter,
+    "warming_hash": WarmingHashRouter,
+    "cost_aware": CostAwareRouter,
+    "locality_aware": LocalityAwareRouter,
+}
+
+
+def make_router(name: str, **kw) -> Router:
+    return ROUTERS[name](**kw)

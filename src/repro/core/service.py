@@ -1,0 +1,314 @@
+"""The cloud-hosted funcX service (paper §4.1).
+
+Maintains the registries (users, functions, endpoints, containers), the
+task store and per-endpoint queues + forwarders, enforces auth scopes and
+the 10 MB payload limit, exposes the REST-shaped API (register / submit /
+status / result), runs health checks that restart dead forwarders, and
+purges results after retrieval.
+"""
+from __future__ import annotations
+
+import pickle
+import inspect
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..data import (
+    InMemoryKVStore,
+    KVStore,
+    TransferService,
+)
+from ..serialization import pack
+from .auth import (
+    ALL_SCOPES,
+    AuthService,
+    SCOPE_ENDPOINT,
+    SCOPE_REGISTER_FUNCTION,
+    SCOPE_RUN,
+    Token,
+)
+from .comms import Channel
+from .endpoint import EndpointAgent
+from .errors import (
+    AuthError,
+    EndpointUnavailable,
+    PayloadTooLarge,
+    RegistrationError,
+    TaskFailure,
+    TaskLost,
+)
+from .forwarder import Forwarder
+from .tasks import Task, TaskStatus, TaskStore
+from .warming import ContainerRegistry, ContainerSpec
+
+PAYLOAD_LIMIT = 10 * 1024 * 1024          # paper §5.1
+
+
+@dataclass
+class RegisteredFunction:
+    function_id: str
+    name: str
+    fn: Callable
+    wants_env: bool
+    container_type: str
+    owner: str
+    allowed: Optional[frozenset]          # None → owner only; set → shared
+    description: str = ""
+
+    def authorized(self, identity: str) -> bool:
+        if identity == self.owner:
+            return True
+        return self.allowed is not None and (
+            "*" in self.allowed or identity in self.allowed)
+
+
+@dataclass
+class EndpointRecord:
+    endpoint_id: str
+    name: str
+    owner: str
+    channel: Channel
+    forwarder: Forwarder
+    created: float = field(default_factory=time.time)
+
+    @property
+    def connected(self) -> bool:
+        return self.forwarder.endpoint_connected
+
+
+class FuncXService:
+    def __init__(self, *, heartbeat_timeout: float = 0.5,
+                 payload_limit: int = PAYLOAD_LIMIT,
+                 purge_on_get: bool = True,
+                 forwarder_batch: int = 32,
+                 health_interval: float = 0.25):
+        self.auth = AuthService()
+        self.tasks = TaskStore()
+        self.containers = ContainerRegistry()
+        self.transfer = TransferService()
+        self.functions: Dict[str, RegisteredFunction] = {}
+        self.endpoints: Dict[str, EndpointRecord] = {}
+        self._lock = threading.RLock()
+        self.heartbeat_timeout = heartbeat_timeout
+        self.payload_limit = payload_limit
+        self.purge_on_get = purge_on_get
+        self.forwarder_batch = forwarder_batch
+        self._stop = threading.Event()
+        self._health = threading.Thread(target=self._health_loop,
+                                        daemon=True, name="svc-health")
+        self._health_interval = health_interval
+        self._health.start()
+        # metrics
+        self.submitted = 0
+        self.forwarder_restarts = 0
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        with self._lock:
+            for rec in self.endpoints.values():
+                rec.forwarder.stop()
+                rec.channel.close()
+
+    # ------------------------------------------------------------------- users
+    def register_user(self, name: str,
+                      scopes: Sequence[str] = tuple(ALL_SCOPES)) -> Token:
+        self.auth.register_identity(name)
+        return self.auth.issue(name, scopes)
+
+    # --------------------------------------------------------------- functions
+    def register_function(self, token: Token, fn: Callable, *,
+                          name: Optional[str] = None,
+                          container_type: str = "python",
+                          allowed: Optional[Sequence[str]] = None,
+                          description: str = "") -> str:
+        owner = self.auth.validate(token, SCOPE_REGISTER_FUNCTION)
+        params = list(inspect.signature(fn).parameters)
+        wants_env = len(params) >= 2
+        fid = str(uuid.uuid4())
+        rf = RegisteredFunction(
+            function_id=fid, name=name or fn.__name__, fn=fn,
+            wants_env=wants_env, container_type=container_type, owner=owner,
+            allowed=frozenset(allowed) if allowed is not None else None,
+            description=description)
+        with self._lock:
+            self.functions[fid] = rf
+        return fid
+
+    def update_function(self, token: Token, function_id: str,
+                        fn: Callable) -> None:
+        identity = self.auth.validate(token, SCOPE_REGISTER_FUNCTION)
+        with self._lock:
+            rf = self.functions[function_id]
+            if rf.owner != identity:
+                raise AuthError("only the owner may update a function")
+            rf.fn = fn
+            rf.wants_env = len(inspect.signature(fn).parameters) >= 2
+
+    def export_function(self, function_id: str) -> Tuple[Callable, bool]:
+        """Endpoint-side fetch+cache hook. funcX ships dill-serialized
+        bodies; module-level functions round-trip through pickle here, and
+        closures (e.g. jitted model steps) pass by reference — same-process
+        deployment (see DESIGN.md §2)."""
+        with self._lock:
+            rf = self.functions[function_id]
+        try:
+            fn = pickle.loads(pickle.dumps(rf.fn))
+        except Exception:
+            fn = rf.fn
+        return fn, rf.wants_env
+
+    # --------------------------------------------------------------- containers
+    def register_container(self, spec: ContainerSpec) -> None:
+        self.containers.register(spec)
+
+    # ---------------------------------------------------------------- endpoints
+    def register_endpoint(self, token: Token, name: str, *,
+                          channel: Optional[Channel] = None
+                          ) -> Tuple[str, Channel]:
+        owner = self.auth.validate(token, SCOPE_ENDPOINT)
+        eid = str(uuid.uuid4())
+        channel = channel or Channel()
+        fwd = Forwarder(eid, self.tasks, channel,
+                        batch_size=self.forwarder_batch,
+                        heartbeat_timeout=self.heartbeat_timeout)
+        fwd.start()
+        rec = EndpointRecord(eid, name, owner, channel, fwd)
+        with self._lock:
+            self.endpoints[eid] = rec
+        return eid, channel
+
+    def make_endpoint(self, token: Token, name: str, *,
+                      n_managers: int = 1, workers_per_manager: int = 4,
+                      store: Optional[KVStore] = None,
+                      router: str = "warming_aware",
+                      manager_kw: Optional[dict] = None,
+                      **agent_kw) -> Tuple[str, EndpointAgent]:
+        """Convenience: register + construct + start a wired EndpointAgent
+        (what `funcx-endpoint start` does on a resource)."""
+        eid, channel = self.register_endpoint(token, name)
+        store = store if store is not None else InMemoryKVStore()
+        self.transfer.register_endpoint(eid, store)
+        agent = EndpointAgent(
+            eid, channel, self.export_function,
+            registry=self.containers, router=router, store=store,
+            transfer=self.transfer,
+            heartbeat_interval=self.heartbeat_timeout / 5, **agent_kw)
+        for _ in range(n_managers):
+            agent.add_manager(n_workers=workers_per_manager,
+                              **(manager_kw or {}))
+        agent.start()
+        return eid, agent
+
+    # -------------------------------------------------------------- discovery
+    # (the paper's §10 future work: "APIs that allow users to manage and
+    # discover functions and endpoints")
+    def search_functions(self, token: Token, pattern: str = "") -> List[dict]:
+        identity = self.auth.validate(token, SCOPE_RUN)
+        out = []
+        with self._lock:
+            fns = list(self.functions.values())
+        for rf in fns:
+            if pattern.lower() in rf.name.lower() and rf.authorized(identity):
+                out.append({"function_id": rf.function_id, "name": rf.name,
+                            "container_type": rf.container_type,
+                            "owner": rf.owner,
+                            "description": rf.description})
+        return out
+
+    def list_endpoints(self, token: Token) -> List[dict]:
+        self.auth.validate(token, SCOPE_RUN)
+        with self._lock:
+            recs = list(self.endpoints.values())
+        return [{"endpoint_id": r.endpoint_id, "name": r.name,
+                 "owner": r.owner, "connected": r.connected,
+                 "queued": r.forwarder.queue_len(),
+                 "in_flight": r.forwarder.in_flight_count()}
+                for r in recs]
+
+    # ------------------------------------------------------------------- submit
+    def submit(self, token: Token, function_id: str, endpoint_id: str,
+               payload: Any = None, *,
+               container_type: Optional[str] = None) -> str:
+        identity = self.auth.validate(token, SCOPE_RUN)
+        with self._lock:
+            rf = self.functions.get(function_id)
+            rec = self.endpoints.get(endpoint_id)
+        if rf is None:
+            raise RegistrationError(f"unknown function {function_id}")
+        if rec is None:
+            raise EndpointUnavailable(f"unknown endpoint {endpoint_id}")
+        if not rf.authorized(identity):
+            raise AuthError(
+                f"{identity} is not authorized to run {rf.name}")
+        size = len(pack(payload))
+        if size > self.payload_limit:
+            raise PayloadTooLarge(
+                f"payload {size}B > {self.payload_limit}B; stage via "
+                f"DataRef + TransferService (paper §5.1)")
+        task = Task(function_id=function_id, endpoint_id=endpoint_id,
+                    payload=payload,
+                    container_type=container_type or rf.container_type)
+        task.stamp("submit")
+        self.tasks.put(task)
+        rec.forwarder.enqueue(task.task_id)
+        task.stamp("service_queued")
+        self.submitted += 1
+        return task.task_id
+
+    def submit_batch(self, token: Token,
+                     requests: Sequence[Tuple[str, str, Any]]) -> List[str]:
+        """User-facing batching (§4.6): one call, many tasks."""
+        return [self.submit(token, fid, eid, payload)
+                for fid, eid, payload in requests]
+
+    # ------------------------------------------------------------------ results
+    def status(self, task_id: str) -> TaskStatus:
+        return self.tasks.get(task_id).status
+
+    def get_task(self, task_id: str) -> Task:
+        return self.tasks.get(task_id)
+
+    def get_result(self, task_id: str, timeout: float = 30.0) -> Any:
+        if not self.tasks.wait(task_id, timeout):
+            raise TimeoutError(f"task {task_id} not done in {timeout}s")
+        task = self.tasks.get(task_id)
+        try:
+            if task.status == TaskStatus.SUCCESS:
+                return task.result
+            if task.status == TaskStatus.LOST:
+                raise TaskLost(task.error or "task lost")
+            raise TaskFailure(task.error or "task failed",
+                              task.remote_traceback)
+        finally:
+            if self.purge_on_get:
+                self.tasks.purge(task_id)
+
+    def get_batch_results(self, task_ids: Sequence[str],
+                          timeout: float = 30.0) -> List[Any]:
+        deadline = time.time() + timeout
+        return [self.get_result(tid, max(deadline - time.time(), 0.001))
+                for tid in task_ids]
+
+    # ------------------------------------------------------------------- health
+    def _health_loop(self) -> None:
+        """Service self-healing (paper §4.1: liveness checks + automatic
+        restart)."""
+        while not self._stop.is_set():
+            time.sleep(self._health_interval)
+            with self._lock:
+                recs = list(self.endpoints.values())
+            for rec in recs:
+                if not rec.forwarder.healthy and not self._stop.is_set():
+                    old = rec.forwarder
+                    old.stop()
+                    fwd = Forwarder(rec.endpoint_id, self.tasks, rec.channel,
+                                    batch_size=self.forwarder_batch,
+                                    heartbeat_timeout=self.heartbeat_timeout)
+                    # carry over the queue
+                    fwd.queue.extend(old.queue)
+                    fwd.start()
+                    rec.forwarder = fwd
+                    self.forwarder_restarts += 1

@@ -1,0 +1,116 @@
+"""Task model + lifecycle (paper Fig. 2).
+
+Timestamps intentionally mirror the paper's latency decomposition (§7.1):
+t_s (service), t_f (forwarder), t_e (endpoint/manager queuing), t_w (worker
+execution) — `latency_breakdown()` reproduces Fig. 3 from any finished task.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, Optional
+
+
+class TaskStatus(Enum):
+    PENDING = "PENDING"            # accepted by service, queued
+    DISPATCHED = "DISPATCHED"      # forwarder → endpoint
+    MANAGER_QUEUED = "MANAGER_QUEUED"
+    RUNNING = "RUNNING"
+    SUCCESS = "SUCCESS"
+    FAILED = "FAILED"
+    LOST = "LOST"                  # retry budget exhausted
+
+
+TERMINAL = {TaskStatus.SUCCESS, TaskStatus.FAILED, TaskStatus.LOST}
+
+
+def now() -> float:
+    return time.perf_counter()
+
+
+@dataclass
+class Task:
+    function_id: str
+    endpoint_id: str
+    payload: Any                       # packed args (bytes) or small object
+    container_type: str                # compile signature / container image
+    task_id: str = field(default_factory=lambda: str(uuid.uuid4()))
+    status: TaskStatus = TaskStatus.PENDING
+    result: Any = None
+    error: Optional[str] = None
+    remote_traceback: str = ""
+    retries: int = 0
+    max_retries: int = 2
+    # latency instrumentation (Fig. 3)
+    t: Dict[str, float] = field(default_factory=dict)
+    # warm/cold accounting (Fig. 7)
+    cold_start: bool = False
+    worker_id: Optional[str] = None
+    manager_id: Optional[str] = None
+
+    def stamp(self, name: str) -> None:
+        self.t[name] = now()
+
+    def latency_breakdown(self) -> Dict[str, float]:
+        """Seconds in each tier, funcX Fig. 3 decomposition."""
+        t = self.t
+        get = lambda a, b: max(t.get(b, 0.0) - t.get(a, 0.0), 0.0) \
+            if a in t and b in t else float("nan")
+        return {
+            "t_s": get("submit", "service_queued"),
+            "t_f": get("service_queued", "endpoint_recv"),
+            "t_e": get("endpoint_recv", "worker_start"),
+            "t_w": get("worker_start", "worker_end"),
+            "t_r": get("worker_end", "result_stored"),
+            "total": get("submit", "result_stored"),
+        }
+
+    @property
+    def done(self) -> bool:
+        return self.status in TERMINAL
+
+
+class TaskStore:
+    """Service-side task table (the paper's Redis hashset analogue)."""
+
+    def __init__(self):
+        self._tasks: Dict[str, Task] = {}
+        self._lock = threading.RLock()
+        self._events: Dict[str, threading.Event] = {}
+
+    def put(self, task: Task) -> None:
+        with self._lock:
+            self._tasks[task.task_id] = task
+            self._events.setdefault(task.task_id, threading.Event())
+
+    def get(self, task_id: str) -> Task:
+        with self._lock:
+            return self._tasks[task_id]
+
+    def mark_done(self, task_id: str) -> None:
+        with self._lock:
+            ev = self._events.get(task_id)
+        if ev is not None:
+            ev.set()
+
+    def wait(self, task_id: str, timeout: float) -> bool:
+        with self._lock:
+            ev = self._events.setdefault(task_id, threading.Event())
+        return ev.wait(timeout)
+
+    def purge(self, task_id: str) -> None:
+        """Paper: results are purged once retrieved / after a period."""
+        with self._lock:
+            self._tasks.pop(task_id, None)
+            self._events.pop(task_id, None)
+
+    def all_ids(self):
+        with self._lock:
+            return list(self._tasks.keys())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._tasks)

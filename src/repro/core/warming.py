@@ -1,0 +1,188 @@
+"""Container management (paper §6) — TPU adaptation.
+
+A funcX *container type* maps to a **compile signature** and a warm
+container to a **cached compiled executable** (DESIGN.md §2): the expensive,
+type-specific artifact a worker must construct before serving a function is
+the XLA build, with the same cost profile as Table 3's 8–10 s HPC container
+cold starts.
+
+``ContainerSpec.build()`` performs the cold start (a real ``jax.jit``
+compile for model functions; a configurable delay for benchmark containers).
+``WarmCache`` implements the paper's warming policies: keep-warm with idle
+timeout (§6.1), LRU under bounded slots, and the extensibility hook for
+other strategies.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class ContainerSpec:
+    container_type: str
+    build: Callable[[], Any] = lambda: None
+    teardown: Callable[[Any], None] = lambda env: None
+    # benchmark containers: emulate instantiation cost (Table 3) without JIT
+    simulated_cold_start: float = 0.0
+
+
+@dataclass
+class Container:
+    spec: ContainerSpec
+    env: Any
+    built_at: float
+    build_time: float
+    last_used: float
+    uses: int = 0
+
+    @property
+    def container_type(self) -> str:
+        return self.spec.container_type
+
+
+class ContainerRegistry:
+    """Service/endpoint-level registry of container specs (image registry)."""
+
+    def __init__(self):
+        self._specs: Dict[str, ContainerSpec] = {}
+        self._lock = threading.RLock()
+
+    def register(self, spec: ContainerSpec) -> None:
+        with self._lock:
+            self._specs[spec.container_type] = spec
+
+    def get(self, container_type: str) -> ContainerSpec:
+        with self._lock:
+            if container_type not in self._specs:
+                # bare python environment — no build cost
+                self._specs[container_type] = ContainerSpec(container_type)
+            return self._specs[container_type]
+
+    def types(self) -> List[str]:
+        with self._lock:
+            return list(self._specs)
+
+
+@dataclass
+class WarmStats:
+    cold_starts: int = 0
+    warm_hits: int = 0
+    evictions: int = 0
+    build_time: float = 0.0
+
+
+class WarmCache:
+    """Per-worker warm-container cache.
+
+    policy:
+      - "idle_timeout": keep warm until idle > ``idle_timeout`` (paper §6.1,
+        default 10 min there; seconds here), reaped by ``reap()``.
+      - "lru": bounded ``slots``; evict least-recently-used on pressure.
+    """
+
+    def __init__(self, registry: ContainerRegistry, slots: int = 1,
+                 idle_timeout: Optional[float] = None, policy: str = "lru"):
+        self.registry = registry
+        self.slots = slots
+        self.idle_timeout = idle_timeout
+        self.policy = policy
+        self._warm: Dict[str, Container] = {}
+        self._lock = threading.RLock()
+        self.stats = WarmStats()
+
+    # -- queries -------------------------------------------------------------
+    def warm_types(self) -> List[str]:
+        with self._lock:
+            return list(self._warm)
+
+    def is_warm(self, container_type: str) -> bool:
+        with self._lock:
+            return container_type in self._warm
+
+    # -- acquire -------------------------------------------------------------
+    def get_or_build(self, container_type: str) -> Tuple[Container, bool]:
+        """Returns (container, cold_start?)."""
+        with self._lock:
+            c = self._warm.get(container_type)
+            if c is not None:
+                c.last_used = time.perf_counter()
+                c.uses += 1
+                self.stats.warm_hits += 1
+                return c, False
+        # cold start — build outside the lock (it can take seconds)
+        spec = self.registry.get(container_type)
+        t0 = time.perf_counter()
+        if spec.simulated_cold_start:
+            time.sleep(spec.simulated_cold_start)
+        env = spec.build()
+        build_time = time.perf_counter() - t0
+        c = Container(spec, env, t0, build_time, time.perf_counter(), 1)
+        with self._lock:
+            while len(self._warm) >= self.slots:
+                self._evict_one()
+            self._warm[container_type] = c
+            self.stats.cold_starts += 1
+            self.stats.build_time += build_time
+        return c, True
+
+    def _evict_one(self) -> None:
+        if not self._warm:
+            return
+        victim_key = min(self._warm, key=lambda k: self._warm[k].last_used)
+        victim = self._warm.pop(victim_key)
+        try:
+            victim.spec.teardown(victim.env)
+        except Exception:
+            pass
+        self.stats.evictions += 1
+
+    def reap(self) -> int:
+        """Release containers idle past the timeout (paper §6.1). Returns
+        the number reaped."""
+        if self.idle_timeout is None:
+            return 0
+        cutoff = time.perf_counter() - self.idle_timeout
+        n = 0
+        with self._lock:
+            for key in list(self._warm):
+                if self._warm[key].last_used < cutoff:
+                    victim = self._warm.pop(key)
+                    try:
+                        victim.spec.teardown(victim.env)
+                    except Exception:
+                        pass
+                    self.stats.evictions += 1
+                    n += 1
+        return n
+
+    def drop(self, container_type: str) -> None:
+        with self._lock:
+            self._warm.pop(container_type, None)
+
+
+def proportional_allocation(task_mix: Dict[str, int],
+                            n_slots: int) -> Dict[str, int]:
+    """Paper §6.2: 'the number of deployed containers for a function type is
+    proportional to the number of received tasks of this type' (e.g. 30% of
+    tasks of type A and 10 containers → 3 of type A). Largest-remainder
+    rounding; every present type gets ≥ 1 slot while slots remain."""
+    total = sum(task_mix.values())
+    if total == 0 or n_slots == 0:
+        return {}
+    raw = {t: n_slots * c / total for t, c in task_mix.items()}
+    alloc = {t: int(v) for t, v in raw.items()}
+    # guarantee presence
+    for t in sorted(raw, key=lambda t: raw[t] - alloc[t], reverse=True):
+        if sum(alloc.values()) >= n_slots:
+            break
+        if alloc[t] == 0:
+            alloc[t] = 1
+    # largest remainders
+    while sum(alloc.values()) < n_slots:
+        t = max(raw, key=lambda t: raw[t] - alloc[t])
+        alloc[t] += 1
+        raw[t] = alloc[t]  # stop re-picking the same type forever
+    return {t: v for t, v in alloc.items() if v > 0}

@@ -1,0 +1,132 @@
+"""Worker (paper §4.3): executes one task at a time, optionally inside a
+container — here, against a warm-cached execution environment (compiled
+executable). Blocking single-responsibility loop, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from .tasks import now
+from .warming import ContainerRegistry, WarmCache
+
+_WARMUP = object()        # sentinel inbox item: pre-build a container
+
+
+@dataclass
+class WorkItem:
+    task_id: str
+    container_type: str
+    fn: Callable
+    wants_env: bool
+    payload: Any
+    stamps: Dict[str, float]
+
+
+@dataclass
+class WorkResult:
+    task_id: str
+    status: str                   # "SUCCESS" | "FAILED"
+    result: Any = None
+    error: Optional[str] = None
+    remote_traceback: str = ""
+    stamps: Dict[str, float] = None
+    cold_start: bool = False
+    build_time: float = 0.0
+    worker_id: str = ""
+
+
+class Worker(threading.Thread):
+    def __init__(self, worker_id: str, registry: ContainerRegistry,
+                 result_cb: Callable[[WorkResult], None],
+                 cache_slots: int = 1,
+                 idle_timeout: Optional[float] = None,
+                 slowdown: float = 0.0):
+        super().__init__(daemon=True, name=f"worker-{worker_id}")
+        self.worker_id = worker_id
+        self.cache = WarmCache(registry, slots=cache_slots,
+                               idle_timeout=idle_timeout)
+        self.result_cb = result_cb
+        self.inbox: "queue.Queue" = queue.Queue(maxsize=4)
+        self.busy = threading.Event()
+        self.slowdown = slowdown          # straggler injection (tests)
+        self.target_type: Optional[str] = None   # manager's proportional plan
+        self.tasks_done = 0
+        self._stop = threading.Event()
+        self._killed = False
+
+    # -- control ---------------------------------------------------------------
+    def submit(self, item: WorkItem) -> None:
+        self.busy.set()
+        self.inbox.put(item)
+
+    def prewarm(self, container_type: str) -> None:
+        self.inbox.put((_WARMUP, container_type))
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def kill(self) -> None:
+        """Simulated node failure: stop without draining or reporting."""
+        self._killed = True
+        self._stop.set()
+
+    @property
+    def idle(self) -> bool:
+        return not self.busy.is_set() and self.inbox.empty()
+
+    def warm_types(self):
+        return self.cache.warm_types()
+
+    # -- loop --------------------------------------------------------------------
+    def run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                item = self.inbox.get(timeout=0.05)
+            except queue.Empty:
+                if not self.inbox.empty():
+                    continue
+                self.busy.clear()
+                self.cache.reap()
+                continue
+            if self._killed:
+                return
+            if isinstance(item, tuple) and item[0] is _WARMUP:
+                self.cache.get_or_build(item[1])
+                if self.inbox.empty():
+                    self.busy.clear()
+                continue
+            self._execute(item)
+            if self.inbox.empty():
+                self.busy.clear()
+
+    def _execute(self, item: WorkItem) -> None:
+        stamps = dict(item.stamps)
+        container, cold = self.cache.get_or_build(item.container_type)
+        stamps["worker_start"] = now()
+        try:
+            if self.slowdown:
+                time.sleep(self.slowdown)
+            if item.wants_env:
+                result = item.fn(item.payload, container.env)
+            else:
+                result = item.fn(item.payload)
+            status, error, tb = "SUCCESS", None, ""
+        except Exception as e:              # noqa: BLE001 — remote fault
+            result = None
+            status = "FAILED"
+            error = f"{type(e).__name__}: {e}"
+            tb = traceback.format_exc()
+        stamps["worker_end"] = now()
+        self.tasks_done += 1
+        if self._killed:
+            return                           # result lost with the node
+        self.result_cb(WorkResult(
+            task_id=item.task_id, status=status, result=result, error=error,
+            remote_traceback=tb, stamps=stamps, cold_start=cold,
+            build_time=container.build_time if cold else 0.0,
+            worker_id=self.worker_id))

@@ -1,0 +1,17 @@
+from .staging import SERVICE_PAYLOAD_LIMIT, resolve_inputs, stage_outputs
+from .store import (
+    DeviceStore,
+    InMemoryKVStore,
+    KVStore,
+    SharedFSStore,
+    StoreStats,
+    make_store,
+)
+from .transfer import DataRef, TransferRecord, TransferService, TransferStatus
+
+__all__ = [
+    "DataRef", "DeviceStore", "InMemoryKVStore", "KVStore",
+    "SERVICE_PAYLOAD_LIMIT", "SharedFSStore", "StoreStats", "TransferRecord",
+    "TransferService", "TransferStatus", "make_store", "resolve_inputs",
+    "stage_outputs",
+]

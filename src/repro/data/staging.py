@@ -1,0 +1,61 @@
+"""Automatic data staging (paper §5): inputs that are DataRefs are resolved
+before function execution (intra-endpoint: local store; inter-endpoint:
+TransferService pull), and outputs larger than the service payload limit
+(10 MB in the paper) are written to the endpoint store and replaced by refs.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from ..serialization import pack
+from .store import KVStore
+from .transfer import DataRef, TransferService, TransferStatus
+
+SERVICE_PAYLOAD_LIMIT = 10 * 1024 * 1024      # paper §5.1
+
+
+def _map_structure(obj: Any, fn) -> Any:
+    if isinstance(obj, DataRef):
+        return fn(obj)
+    if isinstance(obj, dict):
+        return {k: _map_structure(v, fn) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        t = type(obj)
+        return t(_map_structure(v, fn) for v in obj)
+    return obj
+
+
+def resolve_inputs(obj: Any, endpoint_id: str, store: KVStore,
+                   transfer: Optional[TransferService] = None) -> Any:
+    """Replace every DataRef in ``obj`` with its value (stage-in)."""
+
+    def fetch(ref: DataRef):
+        # intra-endpoint: straight from the local store
+        if ref.endpoint == endpoint_id and store.exists(ref.key):
+            return store.get(ref.key)
+        # inter-endpoint: Globus-style pull, then read locally
+        if transfer is None:
+            raise KeyError(f"cannot resolve {ref.uri()} without transfer service")
+        tid = transfer.submit(ref.endpoint, ref.key, endpoint_id, sync=True)
+        rec = transfer.status(tid)
+        if rec.status != TransferStatus.SUCCEEDED:
+            raise IOError(f"stage-in failed for {ref.uri()}: {rec.error}")
+        return store.get(ref.key)
+
+    return _map_structure(obj, fetch)
+
+
+def stage_outputs(result: Any, endpoint_id: str, store: KVStore,
+                  key_prefix: str,
+                  limit: int = SERVICE_PAYLOAD_LIMIT) -> Any:
+    """If the serialized result exceeds the service limit, park it in the
+    endpoint store and return a DataRef instead (stage-out)."""
+    try:
+        size = len(pack(result))
+    except Exception:
+        size = limit + 1
+    if size <= limit:
+        return result
+    key = f"{key_prefix}/result"
+    store.set(key, result)
+    return DataRef("globus", endpoint_id, key)

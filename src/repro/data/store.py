@@ -1,0 +1,248 @@
+"""Intra-endpoint data stores (paper §5.2).
+
+The paper adopts (a) an in-memory KV store (Redis) and (b) the shared
+filesystem, after comparing against MPI and raw sockets. We implement both
+for real, plus the TPU-native *device store* (arrays stay in HBM and are
+handed between functions by reference — zero host round-trip, beyond-paper).
+
+All stores share one interface and account bytes/ops for the benchmarks.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from ..serialization import pack, unpack
+
+
+@dataclass
+class StoreStats:
+    sets: int = 0
+    gets: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    set_time: float = 0.0
+    get_time: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(sets=self.sets, gets=self.gets, bytes_in=self.bytes_in,
+                    bytes_out=self.bytes_out, set_time=self.set_time,
+                    get_time=self.get_time)
+
+
+class KVStore:
+    """Interface. Values are arbitrary objects (serialization facade) or raw
+    bytes via the *_raw variants (used by the transfer service)."""
+
+    name = "abstract"
+
+    def set(self, key: str, value: Any) -> None:
+        self.set_raw(key, pack(value, tag=key))
+
+    def get(self, key: str) -> Any:
+        return unpack(self.get_raw(key))[0]
+
+    def set_raw(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get_raw(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def keys(self) -> List[str]:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        return key in self.keys()
+
+    def mset(self, items: Dict[str, Any]) -> None:
+        for k, v in items.items():
+            self.set(k, v)
+
+    def mget(self, keys: Iterable[str]) -> List[Any]:
+        return [self.get(k) for k in keys]
+
+
+class InMemoryKVStore(KVStore):
+    """Redis analogue: lock-protected in-memory hash with optional capacity
+    (LRU eviction) and TTL — the funcX endpoint's co-deployed Redis cluster."""
+
+    name = "memory"
+
+    def __init__(self, max_bytes: Optional[int] = None,
+                 default_ttl: Optional[float] = None):
+        self._data: "OrderedDict[str, Tuple[bytes, float]]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._bytes = 0
+        self.max_bytes = max_bytes
+        self.default_ttl = default_ttl
+        self.stats = StoreStats()
+
+    def set_raw(self, key: str, data: bytes) -> None:
+        t0 = time.perf_counter()
+        with self._lock:
+            if key in self._data:
+                self._bytes -= len(self._data[key][0])
+            expiry = (time.time() + self.default_ttl
+                      if self.default_ttl else float("inf"))
+            self._data[key] = (data, expiry)
+            self._data.move_to_end(key)
+            self._bytes += len(data)
+            while self.max_bytes and self._bytes > self.max_bytes and self._data:
+                _, (old, _e) = self._data.popitem(last=False)
+                self._bytes -= len(old)
+        self.stats.sets += 1
+        self.stats.bytes_in += len(data)
+        self.stats.set_time += time.perf_counter() - t0
+
+    def get_raw(self, key: str) -> bytes:
+        t0 = time.perf_counter()
+        with self._lock:
+            data, expiry = self._data[key]
+            if expiry < time.time():
+                del self._data[key]
+                self._bytes -= len(data)
+                raise KeyError(key)
+            self._data.move_to_end(key)
+        self.stats.gets += 1
+        self.stats.bytes_out += len(data)
+        self.stats.get_time += time.perf_counter() - t0
+        return data
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            if key in self._data:
+                self._bytes -= len(self._data[key][0])
+                del self._data[key]
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return list(self._data.keys())
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+
+class SharedFSStore(KVStore):
+    """Shared-filesystem store: one file per object, atomic rename writes,
+    optional fsync (shared FS semantics make durability explicit)."""
+
+    name = "sharedfs"
+
+    def __init__(self, root: str, fsync: bool = True):
+        self.root = root
+        self.fsync = fsync
+        os.makedirs(root, exist_ok=True)
+        self.stats = StoreStats()
+
+    def _path(self, key: str) -> str:
+        safe = hashlib.sha1(key.encode()).hexdigest()
+        return os.path.join(self.root, safe)
+
+    def set_raw(self, key: str, data: bytes) -> None:
+        t0 = time.perf_counter()
+        path = self._path(key)
+        tmp = path + f".tmp{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, path)
+        self.stats.sets += 1
+        self.stats.bytes_in += len(data)
+        self.stats.set_time += time.perf_counter() - t0
+
+    def get_raw(self, key: str) -> bytes:
+        t0 = time.perf_counter()
+        with open(self._path(key), "rb") as f:
+            data = f.read()
+        self.stats.gets += 1
+        self.stats.bytes_out += len(data)
+        self.stats.get_time += time.perf_counter() - t0
+        return data
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def keys(self) -> List[str]:
+        return os.listdir(self.root)          # hashed names
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def clear(self) -> None:
+        shutil.rmtree(self.root, ignore_errors=True)
+        os.makedirs(self.root, exist_ok=True)
+
+
+class DeviceStore(KVStore):
+    """TPU-native object store (beyond paper): values stay as live
+    ``jax.Array``s in device memory; intra-endpoint consumers receive them
+    by reference — no serialize/host-copy. Falls back to object semantics
+    for non-array values."""
+
+    name = "device"
+
+    def __init__(self):
+        self._data: Dict[str, Any] = {}
+        self._lock = threading.RLock()
+        self.stats = StoreStats()
+
+    def set(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+        self.stats.sets += 1
+
+    def get(self, key: str) -> Any:
+        with self._lock:
+            val = self._data[key]
+        self.stats.gets += 1
+        return val
+
+    def set_raw(self, key: str, data: bytes) -> None:
+        self.set(key, data)
+
+    def get_raw(self, key: str) -> bytes:
+        val = self.get(key)
+        if isinstance(val, bytes):
+            return val
+        return pack(val, tag=key)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return list(self._data.keys())
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+
+def make_store(kind: str, **kw) -> KVStore:
+    if kind == "memory":
+        return InMemoryKVStore(**kw)
+    if kind == "sharedfs":
+        return SharedFSStore(**kw)
+    if kind == "device":
+        return DeviceStore(**kw)
+    raise ValueError(f"unknown store kind {kind!r}")

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for decode attention: one query token per sequence
+against a long KV cache (the serving hot path; memory-bandwidth bound).
+
+Adaptation notes: on GPU this is the "flash-decoding" split-K pattern with
+inter-CTA reduction in global memory; on TPU we walk the cache blocks with
+the innermost "arbitrary" grid dimension and carry the online-softmax
+running stats in VMEM scratch — no cross-core reduction step is needed
+because the sequential grid already owns the whole reduction. q stays
+resident in VMEM for all cache blocks; each (b, h) pair is an independent
+parallel grid cell.
+
+Layouts: q (B, H, D); k/v cache (B, KVH, S, D); lengths (B,).
+Grid: (B, H, nS) with nS innermost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, block_s: int,
+                   window: Optional[int]):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    pos = si * block_s + lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    mask = pos < length
+    if window is not None:
+        mask = jnp.logical_and(mask, pos >= length - window)
+
+    # skip cache blocks that are entirely beyond the valid length
+    @pl.when(si * block_s < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, D)... (D,)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (bs, D)
+        s = lax.dot_general(q[None, :], k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bs)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[0], l_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_prev * corr + p.sum()
+        m_ref[0] = m_new
+        acc_ref[...] = acc_ref[...] * corr + lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(
+    q: jax.Array,                 # (B, H, D)
+    k: jax.Array,                 # (B, KVH, S, D)
+    v: jax.Array,                 # (B, KVH, S, D)
+    lengths: jax.Array,           # (B,) int32
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    KVH, S = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    block_s = min(block_s, S)
+    pad_s = (-S) % block_s
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    ns = (S + pad_s) // block_s
+
+    from jax.experimental.pallas import tpu as pltpu
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_s=block_s,
+                          window=window),
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),   # lengths (B,1)
+            pl.BlockSpec((1, 1, D), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_s, D),
+                         lambda b, h, s, G=G: (b, h // G, s, 0)),
+            pl.BlockSpec((1, 1, block_s, D),
+                         lambda b, h, s, G=G: (b, h // G, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, s: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((D,), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(lengths.reshape(B, 1), q, k, v)
+    return out

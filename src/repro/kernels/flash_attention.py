@@ -1,0 +1,158 @@
+"""Pallas TPU flash-attention kernel (causal / sliding-window, GQA-aware).
+
+Adaptation notes (DESIGN.md §2): the GPU flash-attention algorithm is
+re-blocked for the TPU memory hierarchy — q/k/v tiles live in VMEM via
+BlockSpecs, the online-softmax running statistics live in VMEM scratch that
+persists across the innermost ("arbitrary") kv-block grid dimension, and the
+MXU sees (block_q × head_dim) @ (head_dim × block_k) matmuls with
+128-aligned tiles. There is no warp-level shuffling to port; the reduction
+is carried by the grid schedule instead.
+
+Layout: q (B, H, Sq, D); k/v (B, KVH, Sk, D). Grid: (B, H, nq, nk) with nk
+innermost so each (b, h, qi) accumulates over kv blocks sequentially.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    m_ref, l_ref, acc_ref,        # VMEM scratch (persist across kv steps)
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    sq: int,
+    sk: int,
+    block_q: int,
+    block_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ki * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Skip compute for blocks that are fully masked (causal upper triangle /
+    # outside the sliding window). The grid still visits them, but the MXU
+    # work is gated out — the TPU analogue of early-exit per CTA.
+    q_lo = qi * block_q + q_offset
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_hi)
+    if window is not None:
+        k_hi_blk = k_lo + block_k - 1
+        live = jnp.logical_and(live, k_hi_blk > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < sk
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,                  # (B, H, Sq, D)
+    k: jax.Array,                  # (B, KVH, Sk, D)
+    v: jax.Array,                  # (B, KVH, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = (Sq + pad_q) // block_q
+    nk = (Sk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, sq=Sq, sk=Sk, block_q=block_q, block_k=block_k)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    scratch = [pltpu.VMEM((block_q,), jnp.float32),
+               pltpu.VMEM((block_q,), jnp.float32),
+               pltpu.VMEM((block_q, D), jnp.float32)]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pad_q, D), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)
+    return out[:, :, :Sq]

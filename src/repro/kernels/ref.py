@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel. Deliberately naive — full
+masks, sequential scans — so they are trivially auditable. Kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def ref_attention(
+    q: jax.Array,                 # (B, Sq, H, D)   — model layout
+    k: jax.Array,                 # (B, Sk, KVH, D)
+    v: jax.Array,                 # (B, Sk, KVH, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qr = (q * scale).reshape(B, Sq, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def ref_rglru(a: jax.Array, b: jax.Array,
+              h0: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential recurrence h_t = a_t·h_{t-1} + b_t. a, b: (B, S, W)."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, t):
+        h = a[:, t].astype(jnp.float32) * h + b[:, t].astype(jnp.float32)
+        return h, h
+
+    _, hs = lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype)          # (B, S, W)
+
+
+def ref_ssd(
+    x: jax.Array,                 # (B, S, H, P) — model layout, dt-scaled
+    a: jax.Array,                 # (B, S, H)    — log decays
+    Bm: jax.Array,                # (B, S, H, N)
+    Cm: jax.Array,                # (B, S, H, N)
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token SSD recurrence. Returns (y (B,S,H,P), h (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(a[:, t].astype(jnp.float32))[..., None, None]
+        h = decay * h + jnp.einsum("bhp,bhn->bhpn",
+                                   x[:, t].astype(jnp.float32),
+                                   Bm[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", h, Cm[:, t].astype(jnp.float32))
+        return h, y
+
+    h, ys = lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

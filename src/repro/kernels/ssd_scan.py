@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Adaptation notes: the SSD "state-space duality" algorithm is already block
+structured (quadratic within a chunk, linear state recurrence across
+chunks), which maps directly onto TPU: each (batch, head) pair is a parallel
+grid axis, chunks are the innermost "arbitrary" axis, and the (P × N) state
+carried between chunks lives in VMEM scratch. The intra-chunk quadratic term
+is an MXU matmul of (chunk × N) @ (N × chunk); the causal decay mask is
+built with `broadcasted_iota` (2-D iota, TPU-legal).
+
+Layouts: x (B, H, S, P) dt-scaled inputs; a (B, H, S, 1) log-decays;
+Bm/Cm (B, H, S, N). Outputs: y (B, H, S, P) and final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, h_ref,
+                *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xq = x_ref[0, 0].astype(jnp.float32)                  # (q, P)
+    aq = a_ref[0, 0, :, 0].astype(jnp.float32)            # (q,)
+    bq = b_ref[0, 0].astype(jnp.float32)                  # (q, N)
+    cq = c_ref[0, 0].astype(jnp.float32)                  # (q, N)
+
+    a_cum = jnp.cumsum(aq)                                # (q,)
+    # intra-chunk: L[i, j] = C_i·B_j · exp(acum_i - acum_j) · [j <= i]
+    scores = lax.dot_general(cq, bq, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q, q)
+    ii = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(a_cum[:, None] - a_cum[None, :])
+    L = jnp.where(jj <= ii, scores * decay, 0.0)
+    y = lax.dot_general(L, xq, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)       # (q, P)
+
+    # inter-chunk: y_i += exp(acum_i) · C_i · h_prev
+    h = h_ref[...]                                        # (P, N)
+    y_inter = lax.dot_general(cq, h, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (q, P)
+    y = y + y_inter * jnp.exp(a_cum)[:, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: h ← exp(acum_end)·h + Σ_j exp(acum_end − acum_j)·x_j⊗B_j
+    in_decay = jnp.exp(a_cum[-1] - a_cum)                 # (q,)
+    dh = lax.dot_general(xq * in_decay[:, None], bq,
+                         (((0,), (0,)), ((), ())),
+                         preferred_element_type=jnp.float32)       # (P, N)
+    h_ref[...] = jnp.exp(a_cum[-1]) * h + dh
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_out_ref[0, 0] = h_ref[...]
+
+
+def ssd_scan_kernel(
+    x: jax.Array,                 # (B, H, S, P)
+    a: jax.Array,                 # (B, H, S)
+    Bm: jax.Array,                # (B, H, S, N)
+    Cm: jax.Array,                # (B, H, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # a=0 → decay exp(0)=1 and x=0 → no state contribution: exact padding
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    a4 = a[..., None]                                      # (B, H, S, 1)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S + pad, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(x, a4, Bm, Cm)
+    return y[:, :, :S], state

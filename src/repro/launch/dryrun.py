@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  ``jax.jit(step, in_shardings=…).lower(**abstract_inputs).compile()``
+must succeed on the production meshes — 16×16 single-pod and 2×16×16
+multi-pod — proving the distribution config is coherent without hardware.
+``memory_analysis()`` proves residency; ``cost_analysis()`` + HLO collective
+parsing feed §Roofline.
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count at first init); it is intentionally NOT set in conftest/pyproject so
+tests and benches see the real single CPU device.
+
+Results are cached as JSON under experiments/dryrun/ (one file per cell) so
+re-runs are incremental; --force recomputes.
+
+Usage:
+    python -m repro.launch.dryrun --mesh pod --arch all --shape all
+    python -m repro.launch.dryrun --mesh multipod --arch qwen1.5-110b \
+        --shape train_4k --policy fsdp --remat full
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (
+    ARCH_IDS,
+    SHAPES,
+    TrainConfig,
+    cells,
+    get_config,
+    get_shape,
+)
+from ..configs.registry import Cell
+from ..models import (
+    decode_cache_kwargs,
+    get_model,
+    input_specs,
+)
+from ..models.knobs import RunKnobs
+from ..roofline import analyze, model_flops, parse_collectives
+from ..roofline.analysis import parse_op_bytes
+from ..serve import make_decode, make_prefill
+from ..sharding.rules import ShardCtx, default_rules, spec_for, tree_shardings
+from ..train import abstract_train_state, make_train_step, train_state_axes
+from .mesh import make_production_mesh, mesh_desc
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def make_knobs(args, shape, scan_layers: bool = True) -> RunKnobs:
+    # long sequences use ≥2048 blocks so the unrolled analysis lowerings
+    # (which expand every attention block pair) stay compilable
+    q_block = args.q_block if shape.seq_len < 16384 else max(args.q_block, 2048)
+    kv_block = args.kv_block if shape.seq_len < 16384 else max(args.kv_block, 2048)
+    return RunKnobs(
+        use_kernels=False,
+        q_block=min(q_block, shape.seq_len),
+        kv_block=min(kv_block, shape.seq_len),
+        remat=args.remat,
+        chunked_loss=args.chunked_loss,
+        loss_chunk=args.loss_chunk,
+        scan_layers=scan_layers,
+        attn_stub=getattr(args, "attn_stub", False),
+    )
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh, rules):
+    out = {}
+    for k, s in specs.items():
+        axes = ("act_batch",) + (None,) * (len(s.shape) - 1)
+        out[k] = jax.sharding.NamedSharding(
+            mesh, spec_for(axes, s.shape, mesh, rules))
+    return out
+
+
+def build(cfg, shape, mesh, args, knobs: RunKnobs) -> Tuple[Any, tuple]:
+    """Returns (jitted fn, abstract args) ready to .lower()."""
+    model = get_model(cfg)
+    rules = default_rules(args.policy)
+    ctx = ShardCtx(mesh, rules)
+    kind = shape.kind
+
+    if kind == "train":
+        tc = TrainConfig(microbatch=args.microbatch)
+        step = make_train_step(model, tc, ctx, knobs)
+        state_abs = abstract_train_state(model)
+        state_shd = tree_shardings(train_state_axes(model), state_abs,
+                                   mesh, rules)
+        in_abs = input_specs(cfg, shape)
+        in_shd = batch_shardings(in_abs, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(state_shd, in_shd),
+                         donate_argnums=(0,))
+        return jitted, (state_abs, in_abs)
+
+    params_abs = model.abstract_params(
+        dtype=jnp.dtype(args.param_dtype) if args.param_dtype else None)
+    params_shd = tree_shardings(model.param_axes(), params_abs, mesh, rules)
+
+    if kind == "prefill":
+        fn = make_prefill(model, ctx, knobs)
+        in_abs = input_specs(cfg, shape)
+        in_shd = batch_shardings(in_abs, mesh, rules)
+        jitted = jax.jit(fn, in_shardings=(params_shd, in_shd))
+        return jitted, (params_abs, in_abs)
+
+    if kind == "decode":
+        fn = make_decode(model, ctx, knobs)
+        cache_abs = model.abstract_cache(**decode_cache_kwargs(cfg, shape))
+        cache_shd = tree_shardings(model.cache_axes(), cache_abs, mesh, rules)
+        in_abs = input_specs(cfg, shape)          # {"tokens": (B, 1)}
+        in_shd = batch_shardings(in_abs, mesh, rules)
+        jitted = jax.jit(fn, in_shardings=(params_shd, cache_shd, in_shd),
+                         donate_argnums=(1,))
+        return jitted, (params_abs, cache_abs, in_abs)
+
+    raise ValueError(kind)
+
+
+def _memory_analysis(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out
+
+
+def _analysis_cfg(cfg, periods: int):
+    """Reduced-depth config for one/two pattern periods (unrolled)."""
+    import dataclasses
+    period = 3 if cfg.family == "hybrid" else 1
+    new = cfg.with_(n_layers=period * periods)
+    if cfg.encdec is not None:
+        new = new.with_(encdec=dataclasses.replace(
+            cfg.encdec, n_encoder_layers=periods))
+    return new, period
+
+
+def _one_cost(cfg, shape, mesh, args, knobs) -> Dict[str, float]:
+    jitted, abs_args = build(cfg, shape, mesh, args, knobs)
+    compiled = jitted.lower(*abs_args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll.wire_bytes,
+        "counts": coll.counts,
+        "schedule_head": coll.schedule[:48],
+        "op_bytes": parse_op_bytes(hlo),
+    }
+
+
+def extrapolated_costs(cfg, shape, mesh, args) -> Dict[str, Any]:
+    """XLA cost_analysis counts while (scan) bodies once, so we lower
+    UNROLLED 1-period and 2-period variants; the delta is the exact
+    per-period (fwd+bwd+optimizer+collectives) cost and the total is
+    cost(1) + (n_periods − 1)·delta. For the hybrid (period=3, 38 layers)
+    the 2 trailing recurrent layers count as fractional periods (<2% err)."""
+    knobs = make_knobs(args, shape, scan_layers=False)
+    cfg1, period = _analysis_cfg(cfg, 1)
+    cfg2, _ = _analysis_cfg(cfg, 2)
+    c1 = _one_cost(cfg1, shape, mesh, args, knobs)
+    c2 = _one_cost(cfg2, shape, mesh, args, knobs)
+    n_periods = cfg.n_layers / period
+    out = {"n_periods": n_periods, "period": period,
+           "c1": {k: c1[k] for k in ("flops", "bytes", "wire")},
+           "c2": {k: c2[k] for k in ("flops", "bytes", "wire")},
+           "counts_per_period": {
+               k: c2["counts"].get(k, 0) - c1["counts"].get(k, 0)
+               for k in set(c1["counts"]) | set(c2["counts"])},
+           "op_bytes_per_period": {
+               k: c2["op_bytes"].get(k, 0) - c1["op_bytes"].get(k, 0)
+               for k in set(c1["op_bytes"]) | set(c2["op_bytes"])},
+           "op_bytes_c1": c1["op_bytes"],
+           "schedule_head": c2["schedule_head"]}
+    for k in ("flops", "bytes", "wire"):
+        delta = c2[k] - c1[k]
+        out[k] = c1[k] + (n_periods - 1) * delta
+    return out
+
+
+def run_cell(cell: Cell, mesh_kind: str, args) -> Dict[str, Any]:
+    cfg, shape = cell.configs()
+    rec: Dict[str, Any] = {
+        "arch": cell.arch, "shape": cell.shape, "mesh": mesh_kind,
+        "policy": args.policy, "remat": args.remat,
+        "chunked_loss": args.chunked_loss, "preset": args.preset,
+    }
+    if not cell.runnable:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rec["mesh_desc"] = mesh_desc(mesh)
+    n_dev = mesh.devices.size
+    try:
+        # ---- 1. the dry-run proper: full depth, scan-over-layers ---------
+        t0 = time.perf_counter()
+        jitted, abs_args = build(cfg, shape, mesh, args,
+                                 make_knobs(args, shape, scan_layers=True))
+        lowered = jitted.lower(*abs_args)
+        rec["lower_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t0
+        rec["memory"] = _memory_analysis(compiled)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost_raw"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float)) and
+                           k in ("flops", "bytes accessed",
+                                 "transcendentals")}
+        del compiled, lowered, jitted
+
+        # ---- 2. roofline terms via unrolled 1-/2-period extrapolation ----
+        t0 = time.perf_counter()
+        ex = extrapolated_costs(cfg, shape, mesh, args)
+        rec["analysis_s"] = time.perf_counter() - t0
+        rec["extrapolated"] = {k: ex[k] for k in
+                               ("flops", "bytes", "wire", "n_periods",
+                                "period", "c1", "c2", "counts_per_period",
+                                "op_bytes_per_period", "op_bytes_c1")}
+        model = get_model(cfg)
+        mf = model_flops(shape.kind, model.active_param_count(),
+                         shape.global_batch, shape.seq_len)
+        roof = analyze({"flops": ex["flops"], "bytes accessed": ex["bytes"]},
+                       "", n_dev, mf)
+        # wire bytes come extrapolated, not from the (empty) hlo string
+        roof.wire_bytes_per_device = ex["wire"]
+        roof.t_collective = ex["wire"] / 50e9
+        terms = {"compute": roof.t_compute, "memory": roof.t_memory,
+                 "collective": roof.t_collective}
+        roof.bottleneck = max(terms, key=terms.get)
+        roof.roofline_fraction = roof.t_model / max(max(terms.values()),
+                                                    1e-30)
+        rec["roofline"] = roof.as_dict()
+        rec["roofline"]["schedule_head"] = ex["schedule_head"]
+        rec["status"] = "ok"
+    except Exception as e:                       # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def cell_path(out_dir: str, cell: Cell, mesh_kind: str, preset: str) -> str:
+    name = f"{cell.arch}__{cell.shape}__{mesh_kind}__{preset}.json"
+    return os.path.join(out_dir, name.replace("/", "_"))
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all",
+                   help=f"all | comma list of {ARCH_IDS}")
+    p.add_argument("--shape", default="all",
+                   help=f"all | comma list of {list(SHAPES)}")
+    p.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    p.add_argument("--policy", default="fsdp")
+    p.add_argument("--remat", default="full",
+                   choices=["none", "dots", "full"])
+    p.add_argument("--chunked-loss", action="store_true")
+    p.add_argument("--loss-chunk", type=int, default=512)
+    p.add_argument("--q-block", type=int, default=512)
+    p.add_argument("--kv-block", type=int, default=1024)
+    p.add_argument("--microbatch", type=int, default=None)
+    p.add_argument("--param-dtype", default=None,
+                   help="override param dtype for serving cells "
+                        "(e.g. bfloat16; default = config param_dtype)")
+    p.add_argument("--attn-stub", action="store_true",
+                   help="ANALYSIS ONLY: stub the attention core to isolate "
+                        "its cost (kernel-adjusted §Perf iterations)")
+    p.add_argument("--preset", default="baseline",
+                   help="label for the (policy, remat, …) bundle in filenames")
+    p.add_argument("--out", default=DEFAULT_OUT)
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arch_sel = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shape_sel = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    mesh_sel = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    todo = [c for c in cells()
+            if c.arch in arch_sel and c.shape in shape_sel]
+    failures = 0
+    for mesh_kind in mesh_sel:
+        for cell in todo:
+            path = cell_path(args.out, cell, mesh_kind, args.preset)
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    prev = json.load(f)
+                print(f"[cached] {cell.arch} × {cell.shape} × {mesh_kind}: "
+                      f"{prev['status']}")
+                failures += prev["status"] == "error"
+                continue
+            print(f"[lower+compile] {cell.arch} × {cell.shape} × {mesh_kind} "
+                  f"(preset={args.preset}) ...", flush=True)
+            rec = run_cell(cell, mesh_kind, args)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"  ok: lower={rec['lower_s']:.1f}s "
+                      f"compile={rec['compile_s']:.1f}s "
+                      f"bottleneck={r['bottleneck']} "
+                      f"fraction={r['roofline_fraction']:.3f}")
+            elif rec["status"] == "skipped":
+                print(f"  skipped: {rec['skip_reason']}")
+            else:
+                failures += 1
+                print(f"  ERROR: {rec['error']}")
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

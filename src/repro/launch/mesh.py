@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run overrides the device
+count via XLA_FLAGS before first jax init, while tests/benches see 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 ("data","model") single-pod (256 chips of TPU v5e) or
+    2×16×16 ("pod","data","model") for the 2-pod / 512-chip deployment.
+    The "pod" axis is the funcX federation tier (DCN between pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1) -> Mesh:
+    """Smoke-scale mesh over whatever devices exist (usually 1 CPU)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_desc(mesh: Mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape) + \
+        "(" + ",".join(mesh.axis_names) + ")"

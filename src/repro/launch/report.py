@@ -1,0 +1,135 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--out experiments/tables.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def load(dirname: str) -> List[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(x: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024 or unit == "TB":
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}TB"
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile | bytes/dev (args+temp) "
+        "| collectives/period |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("preset", "baseline") != "baseline":
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — "
+                f"| {r['skip_reason'][:60]}… |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| ERROR | — | — | {r.get('error','')[:60]} |")
+            continue
+        mem = r.get("memory", {})
+        args_b = mem.get("argument_size_in_bytes", 0)
+        temp_b = mem.get("temp_size_in_bytes", 0)
+        colls = r.get("extrapolated", {}).get("counts_per_period", {})
+        coll_s = " ".join(f"{k.split('-')[-1]}×{v}" for k, v in
+                          sorted(colls.items()) if v) or "none"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']:.0f}s | {fmt_bytes(args_b)}+{fmt_bytes(temp_b)} "
+            f"| {coll_s} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[dict], preset: str = "baseline") -> str:
+    lines = [
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) "
+        "| bottleneck | MODEL/HLO | fraction |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("preset", "baseline") != preset or r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['t_compute']:.4f} | {ro['t_memory']:.4f} "
+            f"| {ro['t_collective']:.4f} | {ro['bottleneck']} "
+            f"| {ro['useful_compute_ratio']:.2f} "
+            f"| {ro['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def perf_table(recs: List[dict]) -> str:
+    """All presets for the hillclimbed cells, baseline first."""
+    cells = {}
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        cells.setdefault(key, []).append(r)
+    lines = [
+        "| cell | preset | policy | t_comp | t_mem | t_coll | bottleneck "
+        "| fraction |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, rs in sorted(cells.items()):
+        if len(rs) < 2:
+            continue                     # only hillclimbed cells
+        rs.sort(key=lambda r: (r.get("preset") != "baseline",
+                               r.get("preset", "")))
+        for r in rs:
+            ro = r["roofline"]
+            lines.append(
+                f"| {key[0]}×{key[1]}×{key[2]} | {r.get('preset')} "
+                f"| {r.get('policy')} | {ro['t_compute']:.4f} "
+                f"| {ro['t_memory']:.4f} | {ro['t_collective']:.4f} "
+                f"| {ro['bottleneck']} | {ro['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default=DEFAULT_DIR)
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+    recs = load(args.dir)
+    out = []
+    out.append("## Dry-run table (baseline preset)\n")
+    out.append(dryrun_table(recs))
+    out.append("\n\n## Roofline table (baseline preset)\n")
+    out.append(roofline_table(recs))
+    out.append("\n\n## Perf presets (hillclimbed cells)\n")
+    out.append(perf_table(recs))
+    text = "\n".join(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .api import (
+    Model,
+    concrete_batch,
+    decode_cache_kwargs,
+    get_model,
+    input_specs,
+)
+from .knobs import DEFAULT_KNOBS, RunKnobs
+
+__all__ = ["Model", "RunKnobs", "DEFAULT_KNOBS", "concrete_batch",
+           "decode_cache_kwargs", "get_model", "input_specs"]

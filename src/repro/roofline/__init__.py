@@ -1,0 +1,12 @@
+from .analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    analyze,
+    model_flops,
+    parse_collectives,
+)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "analyze",
+           "model_flops", "parse_collectives"]

@@ -1,0 +1,202 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step at TPU v5e
+constants:
+
+    compute    = HLO_FLOPs_per_device   / 197e12   (bf16 MXU peak)
+    memory     = HLO_bytes_per_device   / 819e9    (HBM bandwidth)
+    collective = wire_bytes_per_device  / 50e9     (ICI per link)
+
+``cost_analysis()`` of the SPMD-partitioned executable reports *per-device*
+flops/bytes. Collective bytes are NOT in cost_analysis — we parse the
+optimized HLO and apply ring-algorithm wire costs per collective given its
+group size n:
+
+    all-gather        out_bytes · (n-1)/n
+    reduce-scatter    out_bytes · (n-1)
+    all-reduce        2 · bytes · (n-1)/n
+    all-to-all        bytes · (n-1)/n
+    collective-permute  bytes
+
+MODEL_FLOPS uses the 6·N·D convention (6·N_active·D for MoE; 2·N·D for
+forward-only kinds), attention excluded — the ratio MODEL_FLOPS/HLO_FLOPs
+then exposes remat/attention/dispatch overhead explicitly.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ar = f32[128,1024]{1,0} all-reduce(...), replica_groups={{0,1},...}
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+_OP_LINE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+([a-z0-9\-]+)")
+
+
+def parse_op_bytes(hlo_text: str) -> Dict[str, int]:
+    """Output bytes per HLO op kind (post-optimization module). Used for the
+    TPU-adjustment analysis: CPU-backend lowering emulates bf16 dots via f32
+    (inflating `convert` traffic) and cannot fuse flash-attention chains —
+    both are corrected analytically in §Perf with this attribution."""
+    acc: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        n = 1
+        for x in dims.split(","):
+            if x.strip():
+                n *= int(x)
+        acc[op] = acc.get(op, 0) + n * _DTYPE_BYTES.get(dtype, 4)
+    return acc
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: float = 0.0
+    schedule: List[str] = field(default_factory=list)     # op summaries
+
+
+def parse_collectives(hlo_text: str, max_schedule: int = 2000) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue                         # avoid double counting async pairs
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(dtype, dims)
+        # tuple-shaped results: sum every component
+        if line.lstrip().startswith("%") and "= (" in line.split(kind)[0]:
+            head = line.split("= (", 1)[1].split(")", 1)[0]
+            parts = _TUPLE_SHAPE_RE.findall(head)
+            if parts:
+                nbytes = sum(_shape_bytes(d, s) for d, s in parts)
+        n = _group_size(line)
+        if kind == "all-gather":
+            wire = nbytes * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * (n - 1) / max(n, 1)
+        elif kind == "all-to-all":
+            wire = nbytes * (n - 1) / max(n, 1)
+        else:                                 # collective-permute
+            wire = nbytes
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.wire_bytes += wire
+        if len(stats.schedule) < max_schedule:
+            stats.schedule.append(f"{kind} {dtype}[{dims}] n={n}")
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float
+    model_flops_per_device: float
+    useful_compute_ratio: float       # model_flops / hlo_flops (per device)
+    t_model: float                    # model flops at peak
+    roofline_fraction: float          # t_model / max(terms) — the score
+    collectives: Dict[str, int] = field(default_factory=dict)
+    collective_bytes: Dict[str, int] = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+def analyze(cost: Dict[str, float], hlo_text: str, n_devices: int,
+            model_flops_global: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll.wire_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf_dev = model_flops_global / max(n_devices, 1)
+    t_model = mf_dev / PEAK_FLOPS
+    t_roof = max(t_c, t_m, t_x, 1e-30)
+    return Roofline(
+        flops_per_device=flops,
+        hbm_bytes_per_device=hbm,
+        wire_bytes_per_device=coll.wire_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops_global=model_flops_global,
+        model_flops_per_device=mf_dev,
+        useful_compute_ratio=mf_dev / max(flops, 1e-30),
+        t_model=t_model,
+        roofline_fraction=t_model / t_roof,
+        collectives=coll.counts,
+        collective_bytes=coll.bytes_by_kind,
+    )
+
+
+def model_flops(kind: str, active_params: int, global_batch: int,
+                seq_len: int) -> float:
+    """6·N·D convention: train = 6ND (fwd+bwd), prefill = 2ND (fwd only),
+    decode = 2·N·B (one token per sequence)."""
+    if kind == "train":
+        return 6.0 * active_params * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * active_params * global_batch * seq_len
+    if kind == "decode":
+        return 2.0 * active_params * global_batch
+    raise ValueError(kind)

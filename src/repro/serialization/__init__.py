@@ -1,0 +1,9 @@
+from .facade import (
+    SerializationError,
+    pack,
+    peek_tag,
+    unpack,
+    unpack_full,
+)
+
+__all__ = ["SerializationError", "pack", "peek_tag", "unpack", "unpack_full"]

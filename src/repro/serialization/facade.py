@@ -1,0 +1,185 @@
+"""Serialization facade (paper §4.5).
+
+funcX: "sorts the serialization libraries by speed and applies them in order
+successively until the object is successfully serialized... buffers with
+headers that include routing tags and the serialization method."
+
+Methods, fastest first:
+  - ``nd``      numpy/jax arrays (+ pytrees of them): raw bytes + dtype/shape
+                envelope (handles ml_dtypes bfloat16, which .npy cannot)
+  - ``msgpack`` plain data (dict/list/str/int/float/bytes/bool/None)
+  - ``json``    orjson for JSON-able objects msgpack rejects (e.g. ints > 64b)
+  - ``pickle``  universal fallback (complex objects, tracebacks, models)
+
+Buffer layout::
+
+    b"RPX1" | flags:u8 | method:u8 | taglen:u16 | tag | payload
+
+flags bit0 = zstd-compressed payload (beyond-paper; large buffers only).
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import struct
+from typing import Any, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+try:
+    import orjson
+except ImportError:                                  # pragma: no cover
+    orjson = None
+try:
+    import zstandard
+except ImportError:                                  # pragma: no cover
+    zstandard = None
+
+MAGIC = b"RPX1"
+_METHODS = ["nd", "msgpack", "json", "pickle"]
+_COMPRESS_THRESHOLD = 1 << 20       # 1 MiB
+FLAG_ZSTD = 0x01
+
+
+class SerializationError(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# ndarray / pytree-of-ndarray codec
+# ---------------------------------------------------------------------------
+
+def _is_array(x) -> bool:
+    return isinstance(x, np.ndarray) or type(x).__module__.startswith("jax")
+
+
+def _encode_tree(obj: Any):
+    """Encode nested dict/list/tuple of arrays + scalars to msgpack-able."""
+    if isinstance(obj, np.ndarray):
+        return {"__nd__": True, "d": str(obj.dtype), "s": list(obj.shape),
+                "b": obj.tobytes()}
+    if _is_array(obj):                               # jax array → host
+        arr = np.asarray(obj)
+        return {"__nd__": True, "d": str(arr.dtype), "s": list(arr.shape),
+                "b": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {"__map__": [[_encode_tree(k), _encode_tree(v)]
+                            for k, v in obj.items()]}
+    if isinstance(obj, tuple):
+        return {"__tup__": [_encode_tree(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_encode_tree(v) for v in obj]
+    if isinstance(obj, (str, bytes, bool, int, float)) or obj is None:
+        return obj
+    raise SerializationError(f"nd codec cannot encode {type(obj)}")
+
+
+def _decode_tree(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get("__nd__"):
+            import ml_dtypes  # noqa: F401  (registers bfloat16 et al.)
+            dtype = np.dtype(obj["d"])
+            return np.frombuffer(obj["b"], dtype=dtype).reshape(obj["s"])
+        if "__map__" in obj:
+            return {_decode_tree(k): _decode_tree(v) for k, v in obj["__map__"]}
+        if "__tup__" in obj:
+            return tuple(_decode_tree(v) for v in obj["__tup__"])
+    if isinstance(obj, list):
+        return [_decode_tree(v) for v in obj]
+    return obj
+
+
+def _nd_dumps(obj: Any) -> bytes:
+    return msgpack.packb(_encode_tree(obj), use_bin_type=True)
+
+
+def _nd_loads(buf: bytes) -> Any:
+    return _decode_tree(msgpack.unpackb(buf, raw=False, strict_map_key=False))
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+def _try_method(method: str, obj: Any) -> Optional[bytes]:
+    try:
+        if method == "nd":
+            return _nd_dumps(obj)
+        if method == "msgpack":
+            return msgpack.packb(obj, use_bin_type=True)
+        if method == "json":
+            if orjson is None:
+                return None
+            # dataclasses must NOT silently degrade to dicts (DataRef etc.
+            # need pickle to round-trip as objects)
+            return orjson.dumps(obj, option=orjson.OPT_PASSTHROUGH_DATACLASS)
+        if method == "pickle":
+            return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    except Exception:
+        return None
+    return None
+
+
+def _load_method(method: str, buf: bytes) -> Any:
+    if method == "nd":
+        return _nd_loads(buf)
+    if method == "msgpack":
+        return msgpack.unpackb(buf, raw=False, strict_map_key=False)
+    if method == "json":
+        if orjson is None:
+            raise SerializationError("orjson unavailable")
+        return orjson.loads(buf)
+    if method == "pickle":
+        return pickle.loads(buf)
+    raise SerializationError(f"unknown method {method!r}")
+
+
+def pack(obj: Any, tag: str = "", compress: Optional[bool] = None) -> bytes:
+    """Serialize with the fastest applicable method; headered buffer."""
+    payload = None
+    method_id = None
+    for i, m in enumerate(_METHODS):
+        payload = _try_method(m, obj)
+        if payload is not None:
+            method_id = i
+            break
+    if payload is None:
+        raise SerializationError(f"no serializer could handle {type(obj)}")
+    flags = 0
+    if compress is None:
+        compress = len(payload) >= _COMPRESS_THRESHOLD and zstandard is not None
+    if compress and zstandard is not None:
+        payload = zstandard.ZstdCompressor(level=1).compress(payload)
+        flags |= FLAG_ZSTD
+    tag_b = tag.encode()
+    header = MAGIC + struct.pack("<BBH", flags, method_id, len(tag_b)) + tag_b
+    return header + payload
+
+
+def unpack(buf: bytes) -> Tuple[Any, str]:
+    """Returns (object, routing_tag). Only the header needs parsing to route."""
+    obj, tag, _ = unpack_full(buf)
+    return obj, tag
+
+
+def unpack_full(buf: bytes) -> Tuple[Any, str, str]:
+    if buf[:4] != MAGIC:
+        raise SerializationError("bad magic")
+    flags, method_id, taglen = struct.unpack("<BBH", buf[4:8])
+    tag = buf[8:8 + taglen].decode()
+    payload = buf[8 + taglen:]
+    if flags & FLAG_ZSTD:
+        if zstandard is None:
+            raise SerializationError("zstd-compressed buffer, no zstandard")
+        payload = zstandard.ZstdDecompressor().decompress(payload)
+    return _load_method(_METHODS[method_id], payload), tag, _METHODS[method_id]
+
+
+def peek_tag(buf: bytes) -> str:
+    """Routing tag without deserializing the payload (paper: 'only the
+    buffers need to be unpacked and deserialized at the destination')."""
+    if buf[:4] != MAGIC:
+        raise SerializationError("bad magic")
+    _, _, taglen = struct.unpack("<BBH", buf[4:8])
+    return buf[8:8 + taglen].decode()

@@ -1,0 +1,4 @@
+from .sampler import sample
+from .serve_step import generate, make_decode, make_prefill
+
+__all__ = ["generate", "make_decode", "make_prefill", "sample"]

@@ -1,0 +1,10 @@
+from .rules import (
+    ShardCtx,
+    default_rules,
+    named_sharding,
+    spec_for,
+    tree_shardings,
+)
+
+__all__ = ["ShardCtx", "default_rules", "named_sharding", "spec_for",
+           "tree_shardings"]

@@ -1,0 +1,171 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Models annotate parameters and activations with *logical* axis names
+("embed", "ffn", "batch", ...). A rules table maps those to mesh axes.
+Changing the table (not the model code) is the §Perf hillclimb surface.
+
+Divisibility fallback: if a dim is not divisible by the product of the mapped
+mesh-axis sizes, the mapping for that dim degrades to replication. This is
+what makes e.g. ``long_500k`` (batch=1) shard cleanly without special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def default_rules(policy: str = "fsdp") -> Rules:
+    """Baseline ("fsdp") = ZeRO-3-style 2-D weight sharding + batch DP.
+
+    Variants (hillclimb):
+      - "fsdp_tp": additionally shards attention-head / ffn activations over
+        "model" (tensor parallelism; GSPMD turns weight all-gathers into
+        activation collectives where profitable).
+      - "dp": replicated weights (only sane for small archs).
+    """
+    base: Rules = {
+        # ---- weights ----
+        "embed": ("data",),            # d_model dim of weight matrices
+        "ffn": ("model",),
+        "heads_dim": ("model",),       # fused (H*hd) projection dim
+        "vocab": ("model",),
+        "experts": ("model",),         # expert parallelism
+        "ssm_inner": ("model",),
+        "lru_width": ("model",),
+        "mla_rank": (),                # small latent ranks: replicate
+        "layers": (),                  # scan axis: never sharded
+        # ---- activations ----
+        "act_batch": ("pod", "data"),
+        "act_seq": (),
+        "act_heads": (),
+        "act_embed": (),
+        "act_ffn": (),
+        # ---- decode caches ----
+        "cache_batch": ("pod", "data"),
+        "cache_seq": ("model",),       # sequence-sharded KV cache
+        "cache_heads": (),
+    }
+    if policy == "dp":
+        base.update({k: () for k in
+                     ("embed", "ffn", "heads_dim", "vocab", "ssm_inner",
+                      "lru_width")})
+        base["experts"] = ("model",)
+    elif policy == "fsdp_tp":
+        base.update({"act_heads": ("model",), "act_ffn": ("model",)})
+    elif policy == "fsdp_seq":
+        base.update({"act_seq": ("model",)})
+    elif policy == "serve_seq":
+        # serve + TP sequence sharding: activations between blocks are
+        # sequence-sharded over "model", so GSPMD turns the per-block TP
+        # all-reduces into reduce-scatter/all-gather pairs (half the wire)
+        base.update({"embed": (), "act_seq": ("model",)})
+    elif policy == "serve":
+        # Inference sharding (beyond-paper §Perf): there is NO optimizer
+        # state at serving time, so weights are sharded for COMPUTE (model
+        # axis only), not for storage — eliminating the per-layer ZeRO
+        # all-gathers over "data" that dominate the baseline's collective
+        # term. Batch/data axes carry requests; params replicate across
+        # them (bf16 params fit: e.g. llama4-scout 203 GB / 16 model ranks
+        # ≈ 12.7 GB/chip).
+        base.update({"embed": ()})
+    elif policy != "fsdp":
+        raise ValueError(f"unknown sharding policy {policy!r}")
+    return base
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    """Build a PartitionSpec for one array, enforcing (a) mesh axes present,
+    (b) no mesh axis used twice, (c) dim divisibility (else replicate)."""
+    sizes = _mesh_sizes(mesh)
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            entries.append(None)
+            continue
+        mapped = tuple(a for a in rules.get(name, ())
+                       if a in sizes and a not in used)
+        if not mapped:
+            entries.append(None)
+            continue
+        total = 1
+        for a in mapped:
+            total *= sizes[a]
+        if dim % total != 0:
+            # try progressively shorter prefixes before replicating
+            ok = ()
+            for cut in range(len(mapped) - 1, 0, -1):
+                t = 1
+                for a in mapped[:cut]:
+                    t *= sizes[a]
+                if dim % t == 0:
+                    ok = mapped[:cut]
+                    break
+            mapped = ok
+        if not mapped:
+            entries.append(None)
+            continue
+        used.update(mapped)
+        entries.append(mapped if len(mapped) > 1 else mapped[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def named_sharding(axes, shape, mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, shape, mesh, rules))
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh,
+                   rules: Rules) -> Any:
+    """axes_tree: pytree of logical-axis tuples; shape_tree: matching pytree
+    of ShapeDtypeStruct/arrays."""
+    return jax.tree.map(
+        lambda axes, arr: named_sharding(axes, arr.shape, mesh, rules),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Threaded through model code; applies activation sharding constraints.
+
+    ``mesh=None`` (smoke tests, single device) makes every call a no-op.
+    """
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+    def constrain(self, x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+        if self.mesh is None or self.rules is None:
+            return x
+        spec = spec_for(axes, x.shape, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def spec(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert self.mesh is not None
+        return spec_for(axes, shape, self.mesh, self.rules)
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+
+NO_SHARDING = ShardCtx()

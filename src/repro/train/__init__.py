@@ -1,0 +1,24 @@
+from . import checkpoint
+from .data import ByteCorpus, SyntheticLM, make_dataset
+from .fedavg import FedAvgCoordinator, compress_tree, decompress_tree
+from .optimizer import (
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+from .train_step import (
+    abstract_train_state,
+    init_train_state,
+    make_train_step,
+    train_state_axes,
+)
+
+__all__ = [
+    "ByteCorpus", "FedAvgCoordinator", "SyntheticLM",
+    "abstract_train_state", "adamw_update", "checkpoint",
+    "clip_by_global_norm", "compress_tree", "decompress_tree",
+    "global_norm", "init_opt_state", "init_train_state", "lr_schedule",
+    "make_dataset", "make_train_step", "train_state_axes",
+]

@@ -1,0 +1,82 @@
+"""Data pipeline substrate.
+
+Two sources, both dependency-free and deterministic:
+
+- :class:`SyntheticLM` — structured pseudo-text (Zipfian unigrams with a
+  copy-back process so a model can actually reduce loss) for drivers/tests.
+- :class:`ByteCorpus` — byte-level tokens from any file on disk, sliding
+  windows, shuffled; used by ``examples/train_100m.py`` on README text.
+
+Both yield host numpy batches ``{"tokens", "labels"}``; the launch layer
+device_puts them with the mesh's batch sharding (data parallel input
+pipeline). ``shard`` / ``num_shards`` slice the stream per data-parallel
+rank for multi-host deployments.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, batch: int,
+                 seed: int = 0, shard: int = 0, num_shards: int = 1,
+                 copy_prob: float = 0.3):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = batch
+        self.copy_prob = copy_prob
+        self.rng = np.random.default_rng(seed * num_shards + shard)
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        self.probs = (1.0 / ranks) / np.sum(1.0 / ranks)      # Zipf
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        toks = self.rng.choice(self.vocab, size=(self.batch, self.seq + 1),
+                               p=self.probs).astype(np.int32)
+        # copy-back: with prob p, token t repeats token t-7 (learnable signal)
+        copy = self.rng.random((self.batch, self.seq + 1)) < self.copy_prob
+        copy[:, :7] = False
+        idx = np.arange(self.seq + 1)
+        shifted = toks[:, np.maximum(idx - 7, 0)]
+        toks = np.where(copy, shifted, toks)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class ByteCorpus:
+    def __init__(self, path: str, seq_len: int, batch: int, seed: int = 0,
+                 shard: int = 0, num_shards: int = 1):
+        with open(path, "rb") as f:
+            data = np.frombuffer(f.read(), dtype=np.uint8)
+        if len(data) < (seq_len + 1) * 2:
+            data = np.tile(data, (seq_len + 1) * 2 // max(len(data), 1) + 1)
+        self.data = data.astype(np.int32)
+        self.seq = seq_len
+        self.batch = batch
+        self.rng = np.random.default_rng(seed * num_shards + shard)
+        self.vocab_size = 256
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        starts = self.rng.integers(0, len(self.data) - self.seq - 1,
+                                   size=self.batch)
+        idx = starts[:, None] + np.arange(self.seq + 1)[None]
+        toks = self.data[idx]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_dataset(kind: str, vocab_size: int, seq_len: int, batch: int,
+                 path: Optional[str] = None, seed: int = 0,
+                 shard: int = 0, num_shards: int = 1):
+    if kind == "synthetic":
+        return SyntheticLM(vocab_size, seq_len, batch, seed, shard, num_shards)
+    if kind == "bytes":
+        assert path is not None
+        return ByteCorpus(path, seq_len, batch, seed, shard, num_shards)
+    raise ValueError(f"unknown dataset kind {kind!r}")

@@ -1,0 +1,80 @@
+"""Optimizers built from scratch (no optax): AdamW + global-norm clipping +
+warmup/cosine schedule. Optimizer state is a pytree shaped like the params,
+so it inherits the parameter NamedShardings (ZeRO-style sharded optimizer
+state for free).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import TrainConfig
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * factor.astype(g.dtype), grads), norm
+
+
+def lr_schedule(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = (jnp.float32(1.0) if tc.warmup_steps <= 0
+            else jnp.minimum(1.0, step / tc.warmup_steps))
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(math.pi * prog))
+    return tc.learning_rate * warm * cos
+
+
+def adamw_update(
+    grads: Any,
+    opt_state: Dict[str, Any],
+    params: Any,
+    step: jax.Array,                 # 0-based step counter
+    tc: TrainConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    lr = lr_schedule(tc, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - tc.beta1 ** t
+    bc2 = 1.0 - tc.beta2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = tc.beta1 * m + (1.0 - tc.beta1) * g
+        v = tc.beta2 * v + (1.0 - tc.beta2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + tc.eps)
+        if tc.weight_decay and p.ndim >= 2:     # decay matrices only
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m.astype(p.dtype), v.astype(p.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,89 @@
+"""Train-step construction: value_and_grad over the model loss, optional
+gradient-accumulation microbatching, AdamW update. The returned function is
+pure (state, batch) → (state, metrics) and is what gets jitted/lowered with
+mesh shardings by the launch layer — and registered as a funcX *function*.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs import ModelConfig, TrainConfig
+from ..models import Model
+from ..models.knobs import DEFAULT_KNOBS, RunKnobs
+from ..sharding.rules import ShardCtx
+from .optimizer import adamw_update, init_opt_state
+
+
+def init_train_state(model: Model, key: jax.Array) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: Model) -> Dict[str, Any]:
+    params = model.abstract_params()
+    zeros = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t)
+    return {"params": params, "opt": {"m": zeros(params), "v": zeros(params)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_axes(model: Model) -> Dict[str, Any]:
+    axes = model.param_axes()
+    return {"params": axes, "opt": {"m": axes, "v": axes}, "step": ()}
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(
+    model: Model,
+    tc: TrainConfig,
+    ctx: ShardCtx = ShardCtx(),
+    knobs: RunKnobs = DEFAULT_KNOBS,
+) -> Callable:
+    """Build (state, batch) → (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, ctx, knobs, tc.z_loss)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.microbatch is not None:
+            gb = jax.tree.leaves(batch)[0].shape[0]
+            n = gb // tc.microbatch
+            mbs = _split_microbatches(batch, n)
+
+            def acc(carry, i):
+                g_acc, l_acc = carry
+                mb = jax.tree.map(lambda x: x[i], mbs)
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss_sum), _ = lax.scan(acc, (g0, jnp.float32(0.0)),
+                                            jnp.arange(n))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = {"ce": loss, "moe_aux": jnp.float32(0.0)}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, state["step"], tc)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,34 @@
+import threading
+import time
+
+import pytest
+
+# NOTE: XLA_FLAGS device-count override is deliberately NOT set here —
+# tests must see the real single CPU device (only launch/dryrun.py uses
+# the 512-device placeholder world).
+
+
+@pytest.fixture
+def service():
+    """A FuncXService with fast heartbeats + cleanup."""
+    from repro.core import FuncXService
+    svc = FuncXService(heartbeat_timeout=0.3)
+    yield svc
+    svc.shutdown()
+    time.sleep(0.05)
+
+
+@pytest.fixture
+def client(service):
+    from repro.core import FuncXClient
+    token = service.register_user("tester")
+    return FuncXClient(service, token)
+
+
+def wait_until(pred, timeout=5.0, interval=0.01):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return False

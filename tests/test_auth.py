@@ -1,0 +1,63 @@
+"""IAM layer (paper §4.7): scoped tokens, delegation, revocation."""
+import time
+
+import pytest
+
+from repro.core import AuthService, SCOPE_REGISTER_FUNCTION, SCOPE_RUN
+from repro.core.errors import AuthError
+
+
+@pytest.fixture
+def auth():
+    a = AuthService(ttl=10.0)
+    a.register_identity("alice")
+    return a
+
+
+def test_issue_and_validate(auth):
+    tok = auth.issue("alice", [SCOPE_RUN])
+    assert auth.validate(tok, SCOPE_RUN) == "alice"
+
+
+def test_missing_scope_rejected(auth):
+    tok = auth.issue("alice", [SCOPE_RUN])
+    with pytest.raises(AuthError, match="missing scope"):
+        auth.validate(tok, SCOPE_REGISTER_FUNCTION)
+
+
+def test_unknown_identity_rejected(auth):
+    with pytest.raises(AuthError):
+        auth.issue("mallory", [SCOPE_RUN])
+
+
+def test_tampered_token_rejected(auth):
+    import dataclasses
+    tok = auth.issue("alice", [SCOPE_RUN])
+    forged = dataclasses.replace(tok, identity="mallory")
+    with pytest.raises(AuthError, match="bad signature"):
+        auth.validate(forged, SCOPE_RUN)
+
+
+def test_expiry():
+    a = AuthService(ttl=0.05)
+    a.register_identity("alice")
+    tok = a.issue("alice", [SCOPE_RUN])
+    time.sleep(0.1)
+    with pytest.raises(AuthError, match="expired"):
+        a.validate(tok, SCOPE_RUN)
+
+
+def test_delegation_narrows_scopes(auth):
+    tok = auth.issue("alice", [SCOPE_RUN, SCOPE_REGISTER_FUNCTION])
+    d = auth.delegate(tok, "bob", [SCOPE_RUN])
+    assert auth.validate(d, SCOPE_RUN) == "bob"
+    assert d.issued_by == "alice"
+    with pytest.raises(AuthError):
+        auth.delegate(tok, "eve", [SCOPE_RUN, "urn:repro:auth:scope:endpoint"])
+
+
+def test_revocation(auth):
+    tok = auth.issue("alice", [SCOPE_RUN])
+    auth.revoke(tok)
+    with pytest.raises(AuthError, match="revoked"):
+        auth.validate(tok, SCOPE_RUN)

@@ -1,0 +1,82 @@
+"""Batching (paper §4.6 + beyond-paper request coalescing)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DynamicBatcher, split_arrays, stack_arrays
+
+
+def test_stack_and_split_roundtrip():
+    payloads = [{"tokens": np.ones((2, 4)), "n": 3},
+                {"tokens": np.zeros((1, 4)), "n": 3}]
+    stacked = stack_arrays(payloads)
+    assert stacked["tokens"].shape == (3, 4)
+    assert stacked["n"] == 3
+    parts = split_arrays({"out": np.arange(3)}, [2, 1])
+    np.testing.assert_array_equal(parts[0]["out"], [0, 1])
+    np.testing.assert_array_equal(parts[1]["out"], [2])
+
+
+def test_stack_rejects_mismatched_scalars():
+    with pytest.raises(ValueError, match="scalar field"):
+        stack_arrays([{"x": np.ones((1, 2)), "n": 3},
+                      {"x": np.ones((1, 2)), "n": 4}])
+
+
+def test_dynamic_batcher_coalesces():
+    calls = []
+    lock = threading.Lock()
+
+    def submit(payload):
+        with lock:
+            calls.append(payload)
+        return f"task-{len(calls)}"
+
+    def result(task_id, timeout):
+        # model: double the tokens
+        idx = int(task_id.split("-")[1]) - 1
+        return {"tokens": np.asarray(calls[idx]["tokens"]) * 2}
+
+    b = DynamicBatcher(submit, result, max_batch=4, max_wait=0.05)
+    futs = [b.submit({"tokens": np.full((1, 3), i)}) for i in range(8)]
+    outs = [f.result(timeout=10) for f in futs]
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(o["tokens"], np.full((1, 3), 2 * i))
+    assert b.batches_sent <= 4            # ≥2 requests per batch on average
+    assert b.requests_sent == 8
+    b.close()
+
+
+def test_dynamic_batcher_propagates_errors():
+    def submit(payload):
+        raise RuntimeError("endpoint down")
+    b = DynamicBatcher(submit, lambda *a: None, max_batch=2, max_wait=0.01)
+    fut = b.submit({"tokens": np.ones((1, 2))})
+    with pytest.raises(RuntimeError, match="endpoint down"):
+        fut.result(timeout=5)
+    b.close()
+
+
+def test_internal_batching_amortizes_rtt(service):
+    """Paper §7.5 in miniature: per-message RTT is amortized by forwarder
+    batch dispatch."""
+    from repro.core import FuncXClient, FuncXService
+    results = {}
+    for batch_size in (1, 32):
+        svc = FuncXService(heartbeat_timeout=0.5, forwarder_batch=batch_size)
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(lambda d: 0)
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=4)
+        svc.endpoints[eid].forwarder.send_rtt = 0.005    # 5 ms per message
+        ids = cl.batch_run([(fid, eid, {}) for _ in range(64)])
+        t0 = time.perf_counter()
+        cl.get_batch_results(ids, timeout=60)
+        results[batch_size] = time.perf_counter() - t0
+        agent.stop()
+        svc.shutdown()
+    # batched dispatch must be several times faster
+    assert results[32] * 3 < results[1], results

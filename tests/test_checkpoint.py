@@ -1,0 +1,90 @@
+"""Checkpoint/restart substrate (fault-tolerance deliverable)."""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _state():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones(3, jnp.bfloat16)},
+            "step": jnp.int32(5)}
+
+
+def _assert_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert x.dtype == y.dtype
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(str(tmp_path), s, 5)
+    out = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: s))
+    _assert_equal(s, out)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_latest_and_gc(tmp_path):
+    s = _state()
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, step)
+    ckpt.gc_old(str(tmp_path), max_to_keep=2)
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4]
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_restore_specific_step(tmp_path):
+    s1, s2 = _state(), _state()
+    s2["step"] = jnp.int32(9)
+    ckpt.save(str(tmp_path), s1, 1)
+    ckpt.save(str(tmp_path), s2, 2)
+    out = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: s1), step=1)
+    assert int(out["step"]) == 5
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), _state(), 1)
+    bad = {"params": {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32),
+                      "b": jax.ShapeDtypeStruct((3,), jnp.bfloat16)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "empty"), _state())
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    ckpt.save(str(tmp_path), _state(), 7)
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ckpt.AsyncCheckpointer(str(tmp_path), max_to_keep=2)
+    s = _state()
+    futs = [saver.save(s, i) for i in (1, 2, 3)]
+    saver.wait()
+    assert all(f.done() for f in futs)
+    assert ckpt.available_steps(str(tmp_path)) == [2, 3]
+    saver.close()
+
+
+def test_async_snapshot_consistency(tmp_path):
+    """Mutating state after save() must not corrupt the snapshot."""
+    saver = ckpt.AsyncCheckpointer(str(tmp_path))
+    s = {"w": np.zeros(4, np.float32)}
+    fut = saver.save(s, 1)
+    s["w"] += 99.0          # mutate the live buffer
+    fut.result()
+    out = ckpt.restore(str(tmp_path), jax.eval_shape(
+        lambda: {"w": jnp.zeros(4)}))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.zeros(4))
+    saver.close()

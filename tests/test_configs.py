@@ -1,0 +1,103 @@
+"""Config registry: the assigned 40-cell grid, published dimensions, skip
+logic, and input-spec construction (no allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    cells,
+    get_config,
+    get_reduced_config,
+    get_shape,
+    runnable_cells,
+)
+from repro.models import decode_cache_kwargs, get_model, input_specs
+
+
+def test_grid_is_40_cells():
+    all_cells = list(cells())
+    assert len(all_cells) == 40                      # 10 archs × 4 shapes
+    skipped = [c for c in all_cells if not c.runnable]
+    assert len(skipped) == 8                         # long_500k × 8 full-attn
+    assert all(c.shape == "long_500k" for c in skipped)
+    runnable = {(c.arch, c.shape) for c in runnable_cells()}
+    assert ("mamba2-370m", "long_500k") in runnable
+    assert ("recurrentgemma-9b", "long_500k") in runnable
+
+
+PUBLISHED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_published_dims_exact(arch):
+    cfg = get_config(arch)
+    L, d, H, KVH, ff, V = PUBLISHED[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (L, d, H, KVH, ff, V)
+
+
+PARAM_RANGES = {
+    "qwen1.5-110b": (100e9, 120e9),
+    "phi4-mini-3.8b": (3.5e9, 4.2e9),
+    "qwen1.5-0.5b": (0.4e9, 0.65e9),
+    "minicpm3-4b": (3.8e9, 4.7e9),
+    "qwen2-vl-7b": (6.8e9, 8.3e9),
+    "recurrentgemma-9b": (7.8e9, 9.8e9),
+    "granite-moe-1b-a400m": (1.2e9, 1.5e9),
+    "llama4-scout-17b-a16e": (95e9, 112e9),
+    "seamless-m4t-large-v2": (1.6e9, 2.4e9),
+    "mamba2-370m": (0.35e9, 0.5e9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_published_size(arch):
+    model = get_model(get_config(arch))
+    lo, hi = PARAM_RANGES[arch]
+    assert lo <= model.param_count() <= hi
+    assert model.active_param_count() <= model.param_count()
+
+
+def test_moe_active_counts():
+    g = get_model(get_config("granite-moe-1b-a400m"))
+    assert 0.3e9 <= g.active_param_count() <= 0.6e9          # "a400m"
+    s = get_model(get_config("llama4-scout-17b-a16e"))
+    assert 8e9 <= s.active_param_count() <= 18e9             # "17b" active
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_no_allocation(arch, shape_name):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    specs = input_specs(cfg, shape)
+    for name, s in specs.items():
+        assert isinstance(s, jax.ShapeDtypeStruct), (name, type(s))
+        assert s.shape[0] == shape.global_batch
+    if shape.kind == "decode":
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        # abstract caches build via eval_shape — no device memory
+        model = get_model(cfg)
+        cache = model.abstract_cache(**decode_cache_kwargs(cfg, shape))
+        assert all(isinstance(l, jax.ShapeDtypeStruct)
+                   for l in jax.tree.leaves(cache))
+
+
+def test_reduced_configs_are_small():
+    for arch in ARCH_IDS:
+        model = get_model(get_reduced_config(arch))
+        assert model.param_count() < 2e6, arch     # CPU-friendly

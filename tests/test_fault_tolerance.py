@@ -1,0 +1,139 @@
+"""Fault tolerance (paper §4.1/§4.3): manager loss → re-execution;
+endpoint disconnect → forwarder requeue; retry budget → LOST; straggler
+speculation; elastic provisioning."""
+import time
+
+import pytest
+
+from repro.core import (
+    ElasticStrategy,
+    FuncXClient,
+    FuncXService,
+    LocalProvider,
+    SimCloudProvider,
+    SimSlurmProvider,
+    TaskLost,
+)
+from conftest import wait_until
+
+
+def test_manager_kill_reexecutes(service, client):
+    def slow(data):
+        time.sleep(0.2)
+        return data["i"]
+    fid = client.register_function(slow)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=2,
+                                       workers_per_manager=2,
+                                       manager_timeout=0.4)
+    ids = client.batch_run([(fid, eid, {"i": i}) for i in range(8)])
+    time.sleep(0.15)
+    agent.kill_manager(list(agent.managers)[0])
+    res = client.get_batch_results(ids, timeout=30)
+    assert sorted(res) == list(range(8))
+    assert agent.tasks_reexecuted > 0
+    agent.stop()
+
+
+def test_all_managers_dead_then_lost(service, client):
+    def slow(data):
+        time.sleep(10)
+        return 1
+    fid = client.register_function(slow)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=1,
+                                       manager_timeout=0.3, max_retries=0)
+    tid = client.run(fid, eid, data={})
+    time.sleep(0.15)
+    agent.kill_manager(list(agent.managers)[0])
+    with pytest.raises(TaskLost):
+        client.get_result(tid, timeout=30)
+    agent.stop()
+
+
+def test_disconnect_requeues_and_recovers(service, client):
+    fid = client.register_function(lambda d: d["i"])
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=2)
+    rec = service.endpoints[eid]
+    rec.channel.disconnect()
+    ids = client.batch_run([(fid, eid, {"i": i}) for i in range(5)])
+    time.sleep(0.5)              # tasks parked service-side
+    assert all(not service.get_task(t).done for t in ids)
+    rec.channel.reconnect()
+    res = client.get_batch_results(ids, timeout=30)
+    assert sorted(res) == list(range(5))
+    agent.stop()
+
+
+def test_heartbeat_detects_disconnect(service, client):
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    rec = service.endpoints[eid]
+    assert wait_until(lambda: rec.connected, timeout=2)
+    rec.channel.disconnect()
+    assert wait_until(lambda: not rec.forwarder.endpoint_connected,
+                      timeout=3)
+    rec.channel.reconnect()
+    assert wait_until(lambda: rec.forwarder.endpoint_connected, timeout=3)
+    agent.stop()
+
+
+def test_speculation_rescues_straggler(service, client):
+    fid = client.register_function(lambda d: 1)
+    eid, agent = service.make_endpoint(
+        client.token, "ep", n_managers=2, workers_per_manager=2,
+        speculation=True, speculation_min=0.3)
+    slow_mgr = list(agent.managers.values())[0]
+    for w in slow_mgr.workers:
+        w.slowdown = 3.0
+    ids = client.batch_run([(fid, eid, {}) for _ in range(16)])
+    t0 = time.perf_counter()
+    res = client.get_batch_results(ids, timeout=60)
+    took = time.perf_counter() - t0
+    assert res == [1] * 16
+    # without speculation the slow manager's share would cost ~9 s
+    # (6 tasks × 3 s / 2 workers); speculation reroutes the stragglers
+    assert agent.speculative_dispatches > 0
+    assert took < 6.0
+    agent.stop()
+
+
+def test_elastic_scale_out_and_in(service, client):
+    def work(data):
+        time.sleep(0.05)
+        return 0
+    fid = client.register_function(work)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=0)
+    strat = ElasticStrategy(agent, LocalProvider(workers_per_node=2),
+                            min_blocks=1, max_blocks=4, idle_timeout=0.4,
+                            interval=0.03)
+    agent.strategy = strat
+    strat.start()
+    assert wait_until(lambda: strat.blocks() >= 1, timeout=3)
+    ids = client.batch_run([(fid, eid, {}) for _ in range(40)])
+    res = client.get_batch_results(ids, timeout=60)
+    assert len(res) == 40
+    assert strat.scale_out_events > 0
+    assert wait_until(lambda: strat.blocks() == 1, timeout=10)
+    assert strat.scale_in_events > 0
+    agent.stop()
+
+
+def test_provider_delays():
+    slurm = SimSlurmProvider(mean_wait=0.05, jitter=0.0)
+    cloud = SimCloudProvider(boot_delay=0.03)
+    assert slurm.acquisition_delay() >= 0.05
+    assert cloud.acquisition_delay() == 0.03
+
+
+def test_forwarder_restart_by_health_check(service, client):
+    fid = client.register_function(lambda d: d)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    rec = service.endpoints[eid]
+    old_forwarder = rec.forwarder
+    old_forwarder._stop.set()        # simulates crashed threads → unhealthy
+    assert wait_until(lambda: service.endpoints[eid].forwarder
+                      is not old_forwarder, timeout=5)
+    assert service.forwarder_restarts >= 1
+    tid = client.run(fid, eid, data=9)
+    assert client.get_result(tid, timeout=10) == 9
+    agent.stop()

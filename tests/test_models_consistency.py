@@ -1,0 +1,92 @@
+"""Strong correctness tests: incremental decoding (prefill + decode_step
+token by token) must reproduce the teacher-forced forward logits, for every
+architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models import get_model
+from repro.models.knobs import RunKnobs
+
+KEY = jax.random.PRNGKey(3)
+KNOBS = RunKnobs(q_block=16, kv_block=16)
+
+
+def _last_logits_full(model, params, batch):
+    """Teacher-forced full forward; return last-position logits."""
+    logits, _ = model.prefill(params, batch, knobs=KNOBS)
+    return logits
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_incremental_decode_matches_prefill(arch):
+    cfg = get_reduced_config(arch)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size, jnp.int32)
+
+    def make_batch(t):
+        b = {"tokens": t}
+        if cfg.family == "audio":
+            b["frames"] = jax.random.normal(
+                KEY, (B, 8, cfg.d_model), jnp.float32).astype(jnp.bfloat16)
+        if cfg.family == "vlm":
+            b["patches"] = jax.random.normal(
+                KEY, (B, cfg.vlm.vision_prefix_len, cfg.d_model),
+                jnp.float32).astype(jnp.bfloat16)
+        return b
+
+    # reference: prefill over the full prefix
+    ref_logits = _last_logits_full(model, params, make_batch(toks))
+
+    # incremental: prefill S//2, then decode the rest token by token
+    half = S // 2
+    # VLM caches must cover the vision prefix slots too
+    prefix = cfg.vlm.vision_prefix_len if cfg.family == "vlm" else 0
+    logits, cache = model.prefill(params, make_batch(toks[:, :half]),
+                                  knobs=KNOBS, cache_len=S + prefix)
+    for i in range(half, S):
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": toks[:, i:i + 1]}, knobs=KNOBS)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(ref_logits, np.float32),
+        atol=0.05, rtol=0.05)
+
+
+def test_mla_absorbed_decode_matches_reconstructed():
+    """MiniCPM3's absorbed-latent decode == full-reconstruction attention."""
+    cfg = get_reduced_config("minicpm3-4b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size, jnp.int32)
+    ref_logits = _last_logits_full(model, params, {"tokens": toks})
+    logits, cache = model.prefill(params, {"tokens": toks[:, :S - 1]},
+                                  knobs=KNOBS, cache_len=S)
+    logits, cache = model.decode_step(params, cache,
+                                      {"tokens": toks[:, S - 1:]},
+                                      knobs=KNOBS)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               atol=0.05, rtol=0.05)
+
+
+def test_local_attention_window_respected():
+    """RecurrentGemma local attention must ignore tokens beyond the window:
+    perturbing a token outside the window leaves logits unchanged... within
+    recurrent-state influence (so we test the attention block in isolation)."""
+    from repro.models.common import chunked_attention
+    q = jax.random.normal(KEY, (1, 64, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 64, 1, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 64, 1, 16))
+    out1 = chunked_attention(q, k, v, causal=True, window=8,
+                             q_block=16, kv_block=16)
+    # perturb k/v well outside any query's window
+    k2 = k.at[:, 0].set(100.0)
+    v2 = v.at[:, 0].set(-100.0)
+    out2 = chunked_attention(q, k2, v2, causal=True, window=8,
+                             q_block=16, kv_block=16)
+    np.testing.assert_allclose(out1[:, 16:], out2[:, 16:], atol=1e-6)

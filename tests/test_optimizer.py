@@ -1,0 +1,97 @@
+"""Optimizer substrate: AdamW + clipping + schedule built from scratch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import TrainConfig
+from repro.train import (
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+
+def test_adamw_converges_quadratic():
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                     weight_decay=0.0, grad_clip=1e9)
+    target = jnp.array([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    opt = init_opt_state(params)
+    for step in range(200):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(grads, opt, params,
+                                      jnp.int32(step), tc)
+    np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+
+def test_weight_decay_applies_to_matrices_only():
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=10,
+                     weight_decay=1.0, grad_clip=1e9)
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones(2)}
+    opt = init_opt_state(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = adamw_update(zero_g, opt, params, jnp.int32(0), tc)
+    assert float(jnp.max(jnp.abs(new["mat"]))) < 1.0      # decayed
+    np.testing.assert_allclose(new["vec"], params["vec"])  # untouched
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # below threshold → untouched
+    g2 = {"a": jnp.full(4, 0.01)}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(c2["a"], g2["a"])
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(tc, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1e-3, rel=1e-3)        # peak post-warmup
+    assert lrs[99] < lrs[10]                               # decayed
+    assert lrs[99] >= 0.1 * 1e-3 * 0.9                     # floor ≈ 10%
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 100.0), st.integers(1, 64))
+def test_property_clip_never_increases_norm(scale, n):
+    g = {"x": jnp.ones(n) * scale}
+    clipped, pre = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= float(pre) + 1e-6
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation over k microbatches == full-batch step."""
+    from repro.configs import get_reduced_config
+    from repro.models import get_model, concrete_batch
+    from repro.configs import SMOKE_SHAPES
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_reduced_config("qwen1.5-0.5b")
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    batch = concrete_batch(cfg, SMOKE_SHAPES["train_4k"], key)
+
+    # tiny lr: Adam's first-step update is ±lr per element, so any
+    # microbatch/full-batch divergence is bounded by 2·lr — a tight check
+    # that accumulation produces the same mean gradients up to bf16 noise.
+    outs, losses = {}, {}
+    for mb in (None, 1):
+        tc = TrainConfig(learning_rate=1e-5, warmup_steps=0, total_steps=2,
+                         microbatch=mb)
+        state = init_train_state(model, key)
+        step = jax.jit(make_train_step(model, tc))
+        new_state, m = step(state, batch)
+        outs[mb] = new_state["params"]
+        losses[mb] = float(m["loss"])
+    assert abs(losses[None] - losses[1]) < 5e-3
+    for a, b in zip(jax.tree.leaves(outs[None]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)

@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models.common import chunked_attention, cross_entropy
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    sq=st.integers(1, 33),
+    extra_k=st.integers(0, 17),
+    kvh=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    qb=st.sampled_from([4, 8, 16]),
+    kb=st.sampled_from([4, 8, 16]),
+)
+def test_chunked_attention_equals_reference(b, sq, extra_k, kvh, g, qb, kb):
+    """The memory-bounded chunked attention must equal naive attention for
+    ANY shape/blocking combination (incl. ragged, GQA, offsets)."""
+    d = 8
+    sk = sq + extra_k
+    key = jax.random.PRNGKey(b * 1000 + sq * 31 + extra_k)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, kvh * g, d))
+    k = jax.random.normal(k2, (b, sk, kvh, d))
+    v = jax.random.normal(k3, (b, sk, kvh, d))
+    off = sk - sq
+    out = chunked_attention(q, k, v, causal=True, q_offset=off,
+                            q_block=qb, kv_block=kb)
+    exp = ref.ref_attention(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------- loss
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 6), st.floats(-3, 3), st.floats(0.5, 4.0))
+def test_cross_entropy_decreases_with_gold_logit(gold, base, bump):
+    """Raising the gold-class logit must never increase the loss."""
+    logits = jnp.full((1, 1, 8), base, jnp.float32)
+    labels = jnp.array([[gold]], jnp.int32)
+    lo = cross_entropy(logits, labels)
+    hi = cross_entropy(logits.at[0, 0, gold].add(bump), labels)
+    assert float(hi) <= float(lo) + 1e-6
+
+
+def test_cross_entropy_uniform_is_log_v():
+    logits = jnp.zeros((2, 3, 16), jnp.float32)
+    labels = jnp.zeros((2, 3), jnp.int32)
+    assert float(cross_entropy(logits, labels)) == pytest.approx(
+        np.log(16), rel=1e-5)
+
+
+# ----------------------------------------------------------------- stores
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from("abcd"),
+              st.sampled_from(["set", "get", "delete"]),
+              st.integers(0, 100)),
+    max_size=24))
+def test_store_sequence_semantics(ops):
+    """The in-memory KV store behaves as a dict under any op sequence."""
+    from repro.data import InMemoryKVStore
+    store = InMemoryKVStore()
+    shadow = {}
+    for key, op, val in ops:
+        if op == "set":
+            store.set(key, val)
+            shadow[key] = val
+        elif op == "get":
+            if key in shadow:
+                assert store.get(key) == shadow[key]
+            else:
+                with pytest.raises(KeyError):
+                    store.get(key)
+        else:
+            store.delete(key)
+            shadow.pop(key, None)
+    assert sorted(store.keys()) == sorted(shadow.keys())
+
+
+# -------------------------------------------------------------- scheduling
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2000))
+def test_lr_schedule_bounds(step):
+    from repro.configs import TrainConfig
+    from repro.train import lr_schedule
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=100, total_steps=1000)
+    lr = float(lr_schedule(tc, jnp.int32(step)))
+    assert 0.0 <= lr <= 1e-3 + 1e-9
+    if step >= tc.total_steps:
+        assert lr <= 1e-4 * 1.01 + 1e-9      # decayed to the floor
+
+
+# -------------------------------------------------------------- task model
+
+def test_latency_breakdown_sums_to_total(service, client):
+    svc_local = service
+    fid = client.register_function(lambda d: None)
+    import repro.core.service as S
+    svc2 = S.FuncXService(heartbeat_timeout=0.3, purge_on_get=False)
+    try:
+        tok = svc2.register_user("u")
+        from repro.core import FuncXClient
+        cl = FuncXClient(svc2, tok)
+        f2 = cl.register_function(lambda d: None)
+        eid, agent = svc2.make_endpoint(tok, "ep", n_managers=1)
+        for _ in range(5):
+            tid = cl.run(f2, eid, data={})
+            cl.get_result(tid, timeout=10)
+            bd = cl.task(tid).latency_breakdown()
+            parts = bd["t_s"] + bd["t_f"] + bd["t_e"] + bd["t_w"] + bd["t_r"]
+            assert parts == pytest.approx(bd["total"], rel=0.05)
+        agent.stop()
+    finally:
+        svc2.shutdown()
+
+
+# ---------------------------------------------------------------- sharding
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.sampled_from([2, 4, 8, 16]))
+def test_spec_for_divisibility_invariant(dim, axis_size):
+    """spec_for never produces a spec whose mesh product doesn't divide
+    the dim."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.sharding import default_rules, spec_for
+    devs = np.array(jax.devices() * (axis_size * 2))[:axis_size * 2]
+    mesh = Mesh(devs.reshape(axis_size, 2), ("data", "model"))
+    spec = spec_for(("embed", "ffn"), (dim, dim), mesh, default_rules())
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for entry, d in zip(tuple(spec) + (None,) * 2, (dim, dim)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        assert d % prod == 0

@@ -1,0 +1,86 @@
+"""Roofline analysis unit tests: HLO collective parsing, ring-cost math,
+model-flops conventions, op-byte attribution."""
+import pytest
+
+from repro.roofline import analyze, model_flops, parse_collectives
+from repro.roofline.analysis import parse_op_bytes
+
+HLO = """
+HloModule test
+  %ar = f32[128,1024]{1,0} all-reduce(f32[128,1024]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[256,512]{1,0} all-gather(bf16[64,512]{1,0} %y), replica_groups=[32,8]<=[256], dimensions={0}
+  %rs = f32[32,16]{1,0} reduce-scatter(f32[128,16]{1,0} %z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %w), source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %v), replica_groups={{0,1}}
+  %dot = f32[128,128]{1,0} dot(f32[128,64]{1,0} %a, f32[64,128]{1,0} %b)
+  %cv = bf16[1000]{0} convert(f32[1000]{0} %c)
+"""
+
+
+def test_parse_collectives_counts():
+    st = parse_collectives(HLO)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "collective-permute": 1,
+                         "all-to-all": 1}
+
+
+def test_ring_cost_formulas():
+    st = parse_collectives(HLO)
+    ar = 128 * 1024 * 4
+    assert st.bytes_by_kind["all-reduce"] == ar
+    # all-reduce wire = 2·S·(n-1)/n with n=4
+    ag = 256 * 512 * 2
+    rs = 32 * 16 * 4
+    cp = 64 * 4
+    a2a = 16 * 16 * 4
+    expect = (2 * ar * 3 / 4            # all-reduce n=4
+              + ag * 7 / 8              # all-gather n=8 (iota groups)
+              + rs * 3                  # reduce-scatter out×(n-1), n=4
+              + cp                      # permute
+              + a2a * 1 / 2)            # all-to-all n=2
+    assert st.wire_bytes == pytest.approx(expect)
+
+
+def test_iota_replica_groups_size():
+    st = parse_collectives(
+        "%ag = f32[8]{0} all-gather(f32[1]{0} %x), replica_groups=[2,128]<=[256]")
+    # [groups, group_size] → n = 128
+    assert st.wire_bytes == pytest.approx(8 * 4 * 127 / 128)
+
+
+def test_async_pairs_not_double_counted():
+    hlo = """
+      %s = f32[64]{0} all-gather-start(f32[16]{0} %x), replica_groups={{0,1,2,3}}
+      %d = f32[64]{0} all-gather-done(f32[64]{0} %s)
+    """
+    st = parse_collectives(hlo)
+    assert st.counts.get("all-gather", 0) == 1
+
+
+def test_parse_op_bytes_attribution():
+    ob = parse_op_bytes(HLO)
+    assert ob["convert"] == 1000 * 2
+    assert ob["dot"] == 128 * 128 * 4
+    assert ob["all-reduce"] == 128 * 1024 * 4
+
+
+def test_model_flops_conventions():
+    n, b, s = 1_000_000, 8, 128
+    assert model_flops("train", n, b, s) == 6.0 * n * b * s
+    assert model_flops("prefill", n, b, s) == 2.0 * n * b * s
+    assert model_flops("decode", n, b, s) == 2.0 * n * b
+    with pytest.raises(ValueError):
+        model_flops("nope", n, b, s)
+
+
+def test_analyze_bottleneck_and_fraction():
+    cost = {"flops": 197e12, "bytes accessed": 0.0}    # exactly 1 s compute
+    r = analyze(cost, "", n_devices=1, model_flops_global=197e12)
+    assert r.bottleneck == "compute"
+    assert r.roofline_fraction == pytest.approx(1.0)
+    assert r.useful_compute_ratio == pytest.approx(1.0)
+    # memory-bound case
+    cost = {"flops": 197e11, "bytes accessed": 819e9 * 2}
+    r = analyze(cost, "", n_devices=1, model_flops_global=197e11)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.05)

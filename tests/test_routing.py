@@ -1,0 +1,87 @@
+"""Function routing (paper §6.2): warming-aware beats random; tie-breaks;
+beyond-paper cost/locality routers."""
+import pytest
+
+from repro.core import (
+    CostAwareRouter,
+    LocalityAwareRouter,
+    ManagerInfo,
+    RandomRouter,
+    WarmingAwareRouter,
+)
+
+
+def mi(mid, idle=2, queued=0, warm_idle=None, warm_total=None, cap=4,
+       keys=()):
+    return ManagerInfo(mid, idle, queued, warm_idle or {},
+                       warm_total or (warm_idle or {}), cap,
+                       frozenset(keys))
+
+
+def test_warming_aware_prefers_warm():
+    r = WarmingAwareRouter()
+    managers = [mi("cold"), mi("warm", warm_idle={"T": 1})]
+    assert r.route("T", managers) == "warm"
+
+
+def test_warming_aware_load_balances_by_warm_count():
+    r = WarmingAwareRouter()
+    managers = [mi("m1", warm_idle={"T": 1}), mi("m2", warm_idle={"T": 3})]
+    # paper: "priority to the one with the most available container workers"
+    assert r.route("T", managers) == "m2"
+
+
+def test_warming_aware_second_chance_warm_busy():
+    r = WarmingAwareRouter()
+    managers = [mi("busywarm", idle=0, queued=2,
+                   warm_idle={}, warm_total={"T": 2}),
+                mi("cold", idle=2)]
+    assert r.route("T", managers) == "busywarm"
+
+
+def test_warming_aware_random_fallback():
+    r = WarmingAwareRouter(seed=1)
+    managers = [mi("a"), mi("b"), mi("c")]
+    picks = {r.route("T", managers) for _ in range(30)}
+    assert len(picks) > 1            # actually random among cold managers
+
+
+def test_random_router_spreads():
+    r = RandomRouter(seed=0)
+    managers = [mi("a"), mi("b")]
+    picks = {r.route("T", managers) for _ in range(30)}
+    assert picks == {"a", "b"}
+
+
+def test_random_router_avoids_full():
+    r = RandomRouter(seed=0)
+    managers = [mi("full", idle=0, queued=4, cap=4), mi("free")]
+    assert all(r.route("T", managers) == "free" for _ in range(10))
+
+
+def test_cost_aware_uses_measured_build_times():
+    r = CostAwareRouter(mean_task_s=0.01)
+    r.observe_build("T", 5.0)
+    managers = [mi("cold"), mi("warm", queued=3, warm_total={"T": 1},
+                               warm_idle={})]
+    # queue wait (3/4 * 0.01) << cold start (5s) → pick warm-but-queued
+    assert r.route("T", managers) == "warm"
+
+
+def test_cost_aware_prefers_short_queue_when_cold_cheap():
+    r = CostAwareRouter(default_cold_cost=0.0001, mean_task_s=1.0)
+    managers = [mi("empty", queued=0), mi("busy", queued=4)]
+    assert r.route("T", managers) == "empty"
+
+
+def test_locality_breaks_warm_ties():
+    r = LocalityAwareRouter()
+    managers = [mi("far", warm_idle={"T": 2}),
+                mi("near", warm_idle={"T": 2}, keys={"input/x"})]
+    assert r.route("T", managers, frozenset({"input/x"})) == "near"
+
+
+def test_empty_managers_returns_none():
+    for r in (RandomRouter(), WarmingAwareRouter(), CostAwareRouter(),
+              LocalityAwareRouter()):
+        assert r.route("T", []) is None

@@ -1,0 +1,107 @@
+"""Serialization facade (paper §4.5): speed-ordered methods, headered
+buffers, routing tags, bf16 arrays, compression."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serialization import pack, peek_tag, unpack, unpack_full
+from repro.serialization.facade import _METHODS
+
+
+def test_roundtrip_plain():
+    for obj in [None, True, 42, 3.14, "hi", b"raw", [1, 2, 3],
+                {"a": 1, "b": [2, {"c": 3}]}, (1, "x")]:
+        out, tag = unpack(pack(obj, tag="t"))
+        assert out == obj
+        assert tag == "t"
+
+
+def test_roundtrip_arrays():
+    import ml_dtypes
+    for dtype in [np.float32, np.int32, np.float64, ml_dtypes.bfloat16]:
+        arr = np.arange(24, dtype=dtype).reshape(2, 3, 4)
+        out, _ = unpack(pack(arr))
+        assert out.dtype == arr.dtype
+        np.testing.assert_array_equal(np.asarray(out, np.float64),
+                                      np.asarray(arr, np.float64))
+
+
+def test_roundtrip_pytree_of_arrays():
+    obj = {"w": np.ones((3, 3), np.float32),
+           "meta": {"step": 7, "name": "x"},
+           "pair": (np.zeros(2), [1, 2])}
+    out, _, method = unpack_full(pack(obj))
+    assert method == "nd"
+    np.testing.assert_array_equal(out["w"], obj["w"])
+    assert out["meta"] == obj["meta"]
+    assert isinstance(out["pair"], tuple)
+
+
+def test_jax_arrays_go_host():
+    import jax.numpy as jnp
+    obj = {"x": jnp.arange(5)}
+    out, _ = unpack(pack(obj))
+    assert isinstance(out["x"], np.ndarray)
+    np.testing.assert_array_equal(out["x"], np.arange(5))
+
+
+def test_pickle_fallback_for_custom_objects():
+    # complex is not representable by nd/msgpack/json → pickle fallback
+    out, _, method = unpack_full(pack(complex(3, 4)))
+    assert method == "pickle"
+    assert out == complex(3, 4)
+    # same for exceptions (funcX serializes tracebacks/exceptions)
+    err, _, method = unpack_full(pack(ValueError("boom")))
+    assert method == "pickle"
+    assert isinstance(err, ValueError) and err.args == ("boom",)
+
+
+def test_dataclasses_round_trip_as_objects():
+    """Regression: orjson must not silently degrade dataclasses to dicts —
+    DataRefs inside payloads have to survive as objects (via pickle)."""
+    from repro.data import DataRef
+    ref = DataRef("globus", "ep-1", "k")
+    out, _, method = unpack_full(pack({"arr": ref}))
+    assert method == "pickle"
+    assert isinstance(out["arr"], DataRef) and out["arr"] == ref
+
+
+def test_method_order_is_speed_sorted():
+    assert _METHODS.index("nd") < _METHODS.index("pickle")
+    assert _METHODS.index("msgpack") < _METHODS.index("pickle")
+
+
+def test_peek_tag_without_deserializing():
+    buf = pack({"big": np.zeros(1000)}, tag="endpoint-42/result")
+    assert peek_tag(buf) == "endpoint-42/result"
+
+
+def test_compression_large_buffer():
+    arr = np.zeros(2 << 20, np.uint8)   # compressible
+    buf = pack(arr)
+    assert len(buf) < arr.nbytes // 10
+    out, _ = unpack(buf)
+    np.testing.assert_array_equal(out, arr)
+
+
+json_like = st.recursive(
+    st.none() | st.booleans() | st.integers(-2**40, 2**40) |
+    st.floats(allow_nan=False, allow_infinity=False, width=32) |
+    st.text(max_size=16),
+    lambda kids: st.lists(kids, max_size=4) |
+    st.dictionaries(st.text(max_size=8), kids, max_size=4),
+    max_leaves=12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(json_like)
+def test_property_roundtrip(obj):
+    out, _ = unpack(pack(obj))
+    assert out == obj
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(max_size=256), st.text(max_size=32))
+def test_property_bytes_and_tags(data, tag):
+    out, t = unpack(pack(data, tag=tag))
+    assert out == data and t == tag

@@ -1,0 +1,132 @@
+"""Cloud service tier (paper §4.1): registration, submission, auth
+enforcement, payload limits, result purge, user-facing batching."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ContainerSpec,
+    FuncXClient,
+    FuncXService,
+    PayloadTooLarge,
+    TaskFailure,
+    TaskStatus,
+)
+from repro.core.errors import AuthError
+
+
+def _echo(data):
+    return data
+
+
+def test_register_and_run(service, client):
+    fid = client.register_function(_echo)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=2)
+    tid = client.run(fid, eid, data={"v": 7})
+    assert client.get_result(tid, timeout=10) == {"v": 7}
+    agent.stop()
+
+
+def test_function_permissions(service):
+    owner_tok = service.register_user("owner")
+    other_tok = service.register_user("other")
+    owner = FuncXClient(service, owner_tok)
+    other = FuncXClient(service, other_tok)
+    private = owner.register_function(_echo, name="private")
+    shared = owner.register_function(_echo, name="shared",
+                                     allowed=["other"])
+    eid, agent = service.make_endpoint(owner_tok, "ep", n_managers=1)
+    with pytest.raises(AuthError):
+        other.run(private, eid, data=1)
+    tid = other.run(shared, eid, data=1)
+    assert other.get_result(tid, timeout=10) == 1
+    agent.stop()
+
+
+def test_payload_limit_enforced(service, client):
+    fid = client.register_function(_echo)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    big = np.random.default_rng(0).integers(
+        0, 255, 11 * 1024 * 1024, dtype=np.uint8)   # incompressible
+    with pytest.raises(PayloadTooLarge):
+        client.run(fid, eid, data=big)
+    agent.stop()
+
+
+def test_function_error_propagates(service, client):
+    def boom(data):
+        raise ValueError("bad input 42")
+    fid = client.register_function(boom)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    tid = client.run(fid, eid, data={})
+    with pytest.raises(TaskFailure, match="bad input 42") as ei:
+        client.get_result(tid, timeout=10)
+    assert "ValueError" in ei.value.remote_traceback
+    agent.stop()
+
+
+def test_result_purged_after_get(service, client):
+    fid = client.register_function(_echo)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    tid = client.run(fid, eid, data=5)
+    assert client.get_result(tid, timeout=10) == 5
+    with pytest.raises(KeyError):
+        service.get_task(tid)       # purged (paper §4.1)
+    agent.stop()
+
+
+def test_user_facing_batch(service, client):
+    fid = client.register_function(lambda d: d["i"] * 2)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=2,
+                                       workers_per_manager=2)
+    outs = client.map(fid, eid, [{"i": i} for i in range(20)], timeout=20)
+    assert outs == [2 * i for i in range(20)]
+    agent.stop()
+
+
+def test_latency_breakdown_fields(service):
+    svc = FuncXService(heartbeat_timeout=0.3, purge_on_get=False)
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(_echo)
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1)
+        tid = cl.run(fid, eid, data=1)
+        cl.get_result(tid, timeout=10)
+        bd = cl.task(tid).latency_breakdown()
+        for k in ("t_s", "t_f", "t_e", "t_w", "total"):
+            assert bd[k] == bd[k] and bd[k] >= 0     # not NaN
+        assert bd["total"] >= bd["t_w"]
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+def test_discovery_apis(service, client):
+    other_tok = service.register_user("other")
+    other = FuncXClient(service, other_tok)
+    f_private = client.register_function(_echo, name="ssx/process_stills")
+    f_shared = client.register_function(_echo, name="ssx/solve",
+                                        allowed=["other"])
+    eid, agent = service.make_endpoint(client.token, "theta-ep",
+                                       n_managers=1)
+    # owner sees both; the other identity only the shared one
+    assert {f["name"] for f in client.search_functions("ssx")} == \
+        {"ssx/process_stills", "ssx/solve"}
+    assert {f["name"] for f in other.search_functions("ssx")} == {"ssx/solve"}
+    eps = client.list_endpoints()
+    assert any(e["endpoint_id"] == eid and e["connected"] for e in eps)
+    agent.stop()
+
+
+def test_container_type_flows_to_worker(service, client):
+    service.register_container(ContainerSpec("special",
+                                             build=lambda: {"mark": 1}))
+    def probe(data, env):
+        return env["mark"]
+    fid = client.register_function(probe, container_type="special")
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    tid = client.run(fid, eid, data={})
+    assert client.get_result(tid, timeout=10) == 1
+    task_cold = service.submitted
+    agent.stop()

@@ -1,0 +1,95 @@
+"""Intra-endpoint stores (paper §5.2): in-memory KV (Redis analogue),
+shared-FS, device store."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import DeviceStore, InMemoryKVStore, SharedFSStore
+
+
+@pytest.fixture(params=["memory", "sharedfs", "device"])
+def store(request, tmp_path):
+    if request.param == "memory":
+        return InMemoryKVStore()
+    if request.param == "sharedfs":
+        return SharedFSStore(str(tmp_path / "fs"))
+    return DeviceStore()
+
+
+def test_set_get_delete(store):
+    store.set("k", {"x": np.arange(4), "n": 3})
+    out = store.get("k")
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(4))
+    assert out["n"] == 3
+    assert store.exists("k")
+    store.delete("k")
+    assert not store.exists("k")
+
+
+def test_mset_mget(store):
+    store.mset({f"k{i}": i for i in range(5)})
+    assert store.mget([f"k{i}" for i in range(5)]) == list(range(5))
+
+
+def test_missing_key_raises(store):
+    with pytest.raises(Exception):
+        store.get("nope")
+
+
+def test_concurrent_access(store):
+    errs = []
+    def writer(i):
+        try:
+            for j in range(50):
+                store.set(f"w{i}/{j}", j)
+        except Exception as e:      # pragma: no cover
+            errs.append(e)
+    ts = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errs
+    assert store.get("w3/49") == 49
+
+
+def test_memory_lru_eviction():
+    s = InMemoryKVStore(max_bytes=5000)
+    for i in range(50):
+        s.set(f"k{i}", np.zeros(100, np.uint8))
+    assert s.nbytes <= 5000
+    assert not s.exists("k0")           # oldest evicted
+    assert s.exists("k49")
+
+
+def test_memory_ttl():
+    import time
+    s = InMemoryKVStore(default_ttl=0.05)
+    s.set("k", 1)
+    assert s.get("k") == 1
+    time.sleep(0.08)
+    with pytest.raises(KeyError):
+        s.get("k")
+
+
+def test_sharedfs_atomic_overwrite(tmp_path):
+    s = SharedFSStore(str(tmp_path / "fs"))
+    s.set("k", "v1")
+    s.set("k", "v2")                     # replace must be atomic
+    assert s.get("k") == "v2"
+
+
+def test_stats_accounting():
+    s = InMemoryKVStore()
+    s.set("a", np.zeros(1000))
+    s.get("a")
+    assert s.stats.sets == 1 and s.stats.gets == 1
+    assert s.stats.bytes_in > 1000      # includes envelope
+    assert s.stats.bytes_out == s.stats.bytes_in
+
+
+def test_device_store_zero_copy():
+    import jax.numpy as jnp
+    s = DeviceStore()
+    arr = jnp.arange(8)
+    s.set("x", arr)
+    assert s.get("x") is arr            # by reference, no copy

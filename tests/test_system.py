@@ -1,0 +1,127 @@
+"""End-to-end behaviour tests for the paper's system: the full federated
+path — register function → submit through the cloud service → forwarder →
+endpoint → warm container → result — including a real JAX model served
+through the FaaS layer and a MapReduce job using the intra-endpoint store."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ContainerSpec, FuncXClient, FuncXService
+from repro.data import DataRef
+
+
+def test_model_serving_through_faas(service, client):
+    """Serve a real (reduced) model: cold start == JIT compile; warm
+    requests reuse the executable cache (the paper's container story)."""
+    from repro.configs import get_reduced_config
+    from repro.models import get_model
+    from repro.models.knobs import RunKnobs
+    from repro.serve import make_prefill
+
+    cfg = get_reduced_config("qwen1.5-0.5b")
+    model = get_model(cfg)
+
+    def build():
+        params = model.init(jax.random.PRNGKey(0))
+        prefill = jax.jit(make_prefill(model,
+                                       knobs=RunKnobs(q_block=16,
+                                                      kv_block=16)))
+        return {"params": params, "prefill": prefill}
+
+    service.register_container(ContainerSpec("model/qwen-smoke",
+                                             build=build))
+
+    def serve(data, env):
+        toks = jnp.asarray(np.asarray(data["tokens"]), jnp.int32)
+        logits, _ = env["prefill"](env["params"], {"tokens": toks})
+        return {"argmax": np.asarray(jnp.argmax(logits, -1))}
+
+    fid = client.register_function(serve, container_type="model/qwen-smoke")
+    eid, agent = service.make_endpoint(client.token, "tpu-pod",
+                                       n_managers=1, workers_per_manager=1)
+    toks = np.zeros((2, 8), np.int32)
+    t0 = time.perf_counter()
+    r1 = client.get_result(client.run(fid, eid, data={"tokens": toks}),
+                           timeout=120)
+    cold_t = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r2 = client.get_result(client.run(fid, eid, data={"tokens": toks}),
+                           timeout=120)
+    warm_t = time.perf_counter() - t0
+    np.testing.assert_array_equal(r1["argmax"], r2["argmax"])
+    assert warm_t * 3 < cold_t        # warm >> faster than JIT cold start
+    agent.stop()
+
+
+def test_mapreduce_wordcount_with_store(service, client):
+    """MapReduce through the FaaS layer + intra-endpoint store (§7.3.1):
+    map tasks shuffle word counts via the store, reduce tasks merge."""
+    texts = ["the cat sat on the mat", "the dog ate the bone",
+             "a cat and a dog"]
+
+    def map_fn(data):
+        from collections import Counter
+        return dict(Counter(data["text"].split()))
+
+    def reduce_fn(data):
+        total = {}
+        for part in data["parts"]:
+            for w, c in part.items():
+                total[w] = total.get(w, 0) + c
+        return total
+
+    mid = client.register_function(map_fn)
+    rid = client.register_function(reduce_fn)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=3)
+    parts = client.map(mid, eid, [{"text": t} for t in texts], timeout=30)
+    total = client.get_result(
+        client.run(rid, eid, data={"parts": parts}), timeout=30)
+    assert total["the"] == 4 and total["cat"] == 2 and total["dog"] == 2
+    agent.stop()
+
+
+def test_inter_endpoint_dataref_flow(service, client):
+    """Function output staged on endpoint A, consumed by a function on
+    endpoint B via DataRef + transfer service (paper §5.1)."""
+    eidA, agentA = service.make_endpoint(client.token, "A", n_managers=1)
+    eidB, agentB = service.make_endpoint(client.token, "B", n_managers=1)
+
+    def produce(data):
+        return np.arange(int(data["n"]), dtype=np.float32)
+
+    def consume(data):
+        return float(np.sum(np.asarray(data["arr"])))
+
+    pid = client.register_function(produce)
+    cid = client.register_function(consume)
+    arr = client.get_result(client.run(pid, eidA, data={"n": 10}),
+                            timeout=30)
+    # stash on A's store and hand B a ref
+    storeA = service.transfer.store_for(eidA)
+    storeA.set("results/arr", arr)
+    out = client.get_result(
+        client.run(cid, eidB,
+                   data={"arr": DataRef("globus", eidA, "results/arr")}),
+        timeout=30)
+    assert out == float(np.arange(10).sum())
+    agentA.stop()
+    agentB.stop()
+
+
+def test_throughput_smoke(service, client):
+    """A few hundred no-op tasks flow end to end (scaled-down §7.2)."""
+    fid = client.register_function(lambda d: None)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=4,
+                                       workers_per_manager=4)
+    n = 300
+    t0 = time.perf_counter()
+    ids = client.batch_run([(fid, eid, {}) for _ in range(n)])
+    client.get_batch_results(ids, timeout=60)
+    dt = time.perf_counter() - t0
+    rate = n / dt
+    assert rate > 100, f"throughput too low: {rate:.0f}/s"
+    agent.stop()

@@ -1,0 +1,93 @@
+"""Container warming (paper §6.1/§6.2): warm cache policies + proportional
+allocation."""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ContainerRegistry, ContainerSpec, WarmCache
+from repro.core.warming import proportional_allocation
+
+
+@pytest.fixture
+def registry():
+    r = ContainerRegistry()
+    r.register(ContainerSpec("A", build=lambda: "envA"))
+    r.register(ContainerSpec("B", build=lambda: "envB"))
+    r.register(ContainerSpec("slow", simulated_cold_start=0.05))
+    return r
+
+
+def test_cold_then_warm(registry):
+    c = WarmCache(registry, slots=2)
+    _, cold1 = c.get_or_build("A")
+    _, cold2 = c.get_or_build("A")
+    assert cold1 and not cold2
+    assert c.stats.cold_starts == 1 and c.stats.warm_hits == 1
+
+
+def test_simulated_cold_start_cost(registry):
+    c = WarmCache(registry, slots=1)
+    t0 = time.perf_counter()
+    c.get_or_build("slow")
+    assert time.perf_counter() - t0 >= 0.05
+    t0 = time.perf_counter()
+    c.get_or_build("slow")
+    assert time.perf_counter() - t0 < 0.02
+
+
+def test_lru_eviction(registry):
+    c = WarmCache(registry, slots=1)
+    c.get_or_build("A")
+    c.get_or_build("B")              # evicts A
+    assert c.warm_types() == ["B"]
+    assert c.stats.evictions == 1
+    _, cold = c.get_or_build("A")    # cold again
+    assert cold
+
+
+def test_idle_reap(registry):
+    c = WarmCache(registry, slots=4, idle_timeout=0.05)
+    c.get_or_build("A")
+    assert c.reap() == 0
+    time.sleep(0.08)
+    assert c.reap() == 1             # paper §6.1: release after idle timeout
+    assert c.warm_types() == []
+
+
+def test_unknown_type_gets_bare_container(registry):
+    c = WarmCache(registry, slots=1)
+    cont, cold = c.get_or_build("unseen-type")
+    assert cold and cont.env is None
+
+
+# ---- proportional allocation (paper §6.2) ---------------------------------
+
+def test_proportional_example_from_paper():
+    # "if 30% of tasks are type A and manager can spawn 10 containers,
+    #  spawn 3 of type A"
+    alloc = proportional_allocation({"A": 30, "B": 70}, 10)
+    assert alloc["A"] == 3 and alloc["B"] == 7
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.dictionaries(st.sampled_from("ABCDEF"),
+                       st.integers(1, 1000), min_size=1, max_size=6),
+       st.integers(1, 32))
+def test_proportional_invariants(mix, slots):
+    alloc = proportional_allocation(mix, slots)
+    assert sum(alloc.values()) == min(slots, max(slots, 0)) or \
+        sum(alloc.values()) <= slots + len(mix)
+    # never allocates to absent types
+    assert set(alloc) <= set(mix)
+    # monotone-ish: the max-count type gets at least the min-count type
+    if len(mix) >= 2 and slots >= len(mix):
+        hi = max(mix, key=mix.get)
+        lo = min(mix, key=mix.get)
+        assert alloc.get(hi, 0) >= alloc.get(lo, 0)
+
+
+def test_proportional_exact_sum():
+    for slots in (1, 3, 7, 10):
+        alloc = proportional_allocation({"A": 5, "B": 3, "C": 2}, slots)
+        assert sum(alloc.values()) == slots
