@@ -1,0 +1,19 @@
+# One-command entry points for the suite and benchmarks.
+#
+#   make test         tier-1 test suite (ROADMAP.md verify command)
+#   make bench-smoke  scaling benchmark in tiny mode (seconds, not minutes)
+#   make bench        full benchmark harness
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench-smoke bench
+
+test:
+	python -m pytest -x -q
+
+bench-smoke:
+	python -m benchmarks.run --only fig4_scaling --tiny
+
+bench:
+	python -m benchmarks.run

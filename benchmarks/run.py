@@ -10,6 +10,7 @@ the FaaS system itself, which runs for real on CPU.
 from __future__ import annotations
 
 import argparse
+import inspect
 import time
 
 SUITES = {
@@ -28,6 +29,8 @@ def main() -> None:
                    help="comma list of suites: " + ",".join(SUITES))
     p.add_argument("--full", action="store_true",
                    help="paper-scale parameters (slower)")
+    p.add_argument("--tiny", action="store_true",
+                   help="smoke-test parameters (suites that support them)")
     args = p.parse_args()
     sel = list(SUITES) if args.only == "all" else args.only.split(",")
 
@@ -38,7 +41,10 @@ def main() -> None:
         print(f"# === {key}: {desc} ===", flush=True)
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         t1 = time.perf_counter()
-        mod.run(full=args.full)
+        kw = {"full": args.full}
+        if args.tiny and "tiny" in inspect.signature(mod.run).parameters:
+            kw["tiny"] = True
+        mod.run(**kw)
         print(f"# {key} done in {time.perf_counter()-t1:.1f}s", flush=True)
     print(f"# all suites done in {time.perf_counter()-t0:.1f}s")
 

@@ -1,8 +1,12 @@
-"""Fig. 4 + §7.2.3 — strong/weak scaling and peak agent throughput.
+"""Fig. 4 + §7.2.3 — strong/weak scaling, peak agent throughput, and the
+many-endpoint federation scenario.
 
-Two modes (DESIGN.md §2 "Scale"):
-  - REAL: threaded workers through the full service→forwarder→endpoint→
-    manager→worker path (up to ~128 workers on this CPU).
+Three modes:
+  - REAL: threaded workers through the full service→forwarder-pool→
+    endpoint→manager→worker path (up to ~128 workers on this CPU).
+  - FEDERATION: a 64+ endpoint fleet through one ForwarderPool — service
+    thread count stays O(1) (the seed spent 3 threads/endpoint), and
+    federation-level warming-aware routing beats random endpoint pick.
   - SIM: discrete-event simulation of the same dispatch pipeline,
     calibrated with the real mode's measured per-task dispatch overhead,
     scaled to 131 072 workers (the paper's Cori point).
@@ -10,6 +14,7 @@ Two modes (DESIGN.md §2 "Scale"):
 from __future__ import annotations
 
 import heapq
+import threading
 import time
 from typing import List
 
@@ -75,6 +80,104 @@ def throughput(n_tasks=3000, workers=64) -> None:
         svc.shutdown()
 
 
+# --------------------------------------------------------------- federation
+
+def federation_threads(n_endpoints: int = 64) -> None:
+    """Service-tier thread cost of N endpoints: the multiplexed pool adds
+    zero threads per registration (the seed's per-endpoint Forwarder spent
+    three)."""
+    svc, client = make_bench_service()
+    try:
+        before = threading.active_count()
+        for i in range(n_endpoints):
+            svc.register_endpoint(client.token, f"ep{i}")
+        grown = threading.active_count() - before
+        emit(f"federation/service_threads_added/endpoints={n_endpoints}",
+             grown, f"seed cost 3/endpoint = {3 * n_endpoints}")
+    finally:
+        svc.shutdown()
+
+
+def federation_throughput(n_endpoints: int = 64,
+                          tasks_per_endpoint: int = 10) -> None:
+    """Fleet-wide throughput: every task submitted WITHOUT an endpoint and
+    placed by the federation router over N live endpoint agents."""
+    from repro.core import FuncXClient, FuncXService
+    svc = FuncXService(heartbeat_timeout=1.0,
+                       endpoint_router="least_loaded")
+    try:
+        tok = svc.register_user("bench")
+        client = FuncXClient(svc, tok)
+        fid = client.register_function(lambda d: None, name="noop")
+        agents = []
+        for i in range(n_endpoints):
+            _, agent = svc.make_endpoint(tok, f"ep{i}", n_managers=1,
+                                         workers_per_manager=1)
+            agents.append(agent)
+        n = n_endpoints * tasks_per_endpoint
+        t0 = time.perf_counter()
+        ids = client.batch_run([(fid, None, {}) for _ in range(n)])
+        client.get_batch_results(ids, timeout=600)
+        t = time.perf_counter() - t0
+        used = {ln.dispatched > 0 for ln in svc.pool.lines()}
+        emit(f"federation/routed_throughput/endpoints={n_endpoints}",
+             n / t, f"tasks/s n={n} all_endpoints_used={used == {True}}")
+        for a in agents:
+            a.stop()
+    finally:
+        svc.shutdown()
+
+
+def federation_routing_win(n_endpoints: int = 8, burst: int = 16,
+                           build_s: float = 0.25) -> None:
+    """§6.2 lifted to the federation: pre-warm half the fleet, then fire a
+    routed burst. Warming-aware endpoint selection avoids every cold
+    container build; random pays one per cold endpoint it scatters onto."""
+    from repro.core import ContainerSpec, FuncXClient, FuncXService
+
+    def run_policy(policy: str) -> float:
+        svc = FuncXService(heartbeat_timeout=0.5, endpoint_router=policy)
+        try:
+            tok = svc.register_user("bench")
+            client = FuncXClient(svc, tok)
+            svc.register_container(ContainerSpec(
+                "fed/heavy", build=lambda: time.sleep(build_s) or {}))
+            fid = client.register_function(lambda d, env: None,
+                                           name="heavy",
+                                           container_type="fed/heavy")
+            eids, agents = [], []
+            for i in range(n_endpoints):
+                eid, agent = svc.make_endpoint(tok, f"ep{i}", n_managers=1,
+                                               workers_per_manager=1)
+                eids.append(eid)
+                agents.append(agent)
+            warm = eids[: n_endpoints // 2]
+            client.get_batch_results(
+                client.batch_run([(fid, e, {}) for e in warm]), timeout=120)
+            # let heartbeats advertise the warm containers
+            deadline = time.time() + 5
+            while time.time() < deadline and not all(
+                    svc.pool.line(e).advertised.warm_total.get("fed/heavy")
+                    for e in warm):
+                time.sleep(0.02)
+            t0 = time.perf_counter()
+            ids = client.batch_run([(fid, None, {}) for _ in range(burst)])
+            client.get_batch_results(ids, timeout=120)
+            t = time.perf_counter() - t0
+            for a in agents:
+                a.stop()
+            return t
+        finally:
+            svc.shutdown()
+
+    t_random = run_policy("random")
+    t_warm = run_policy("warming_aware")
+    emit(f"federation/burst_makespan/random/endpoints={n_endpoints}",
+         t_random * 1e6, f"burst={burst} build={build_s}s")
+    emit(f"federation/burst_makespan/warming_aware/endpoints={n_endpoints}",
+         t_warm * 1e6, f"speedup_vs_random={t_random / t_warm:.2f}x")
+
+
 # ---------------------------------------------------------------------- sim
 
 def simulate(n_workers: int, n_tasks: int, duration_s: float,
@@ -110,9 +213,20 @@ def sim_mode(dispatch_s: float) -> None:
                  f"tasks=100000")
 
 
-def run(full: bool = False) -> None:
+def run(full: bool = False, tiny: bool = False) -> None:
+    if tiny:                     # `make bench-smoke`: seconds, not minutes
+        dispatch = real_mode(workers_list=(4,), n_strong=64)
+        throughput(n_tasks=300, workers=16)
+        federation_threads(n_endpoints=16)
+        federation_throughput(n_endpoints=8, tasks_per_endpoint=5)
+        federation_routing_win(n_endpoints=4, burst=8, build_s=0.1)
+        sim_mode(dispatch)
+        return
     workers = (4, 16, 64) if not full else (4, 16, 64, 128)
     dispatch = real_mode(workers_list=workers,
                          n_strong=512 if not full else 2048)
     throughput(n_tasks=2000 if not full else 10000)
+    federation_threads(n_endpoints=64 if not full else 256)
+    federation_throughput(n_endpoints=64, tasks_per_endpoint=10)
+    federation_routing_win(n_endpoints=8 if not full else 16)
     sim_mode(dispatch)

@@ -1,8 +1,15 @@
 """The paper's primary contribution: a federated FaaS runtime.
 
-service ── forwarder ═╦═ endpoint agent ── managers ── workers
-   (cloud tier)       ║   (resource tier)     (nodes)    (containers /
-                   channel                               compiled executables)
+                 ┌ EndpointRouter (federation routing, §6.2↑)
+service ── ForwarderPool ═╦═ endpoint agent ── managers ── workers
+   (cloud tier,           ║    (resource tier)    (nodes)    (containers /
+    O(1) threads)    ChannelHub                              compiled
+                   + typed protocol                          executables)
+
+One ForwarderPool multiplexes every endpoint's dispatch/recv/monitor over
+a single event loop (ChannelHub select); messages on the wire are typed
+protocol dataclasses; tasks submitted without an endpoint are routed
+across the federation by a pluggable EndpointRouter. See DESIGN.md.
 """
 from .auth import (
     ALL_SCOPES,
@@ -15,7 +22,7 @@ from .auth import (
 )
 from .batching import DynamicBatcher, split_arrays, stack_arrays
 from .client import FuncXClient
-from .comms import Channel
+from .comms import Channel, ChannelHub
 from .endpoint import EndpointAgent
 from .errors import (
     AuthError,
@@ -26,8 +33,18 @@ from .errors import (
     TaskFailure,
     TaskLost,
 )
-from .forwarder import Forwarder
+from .forwarder_pool import EndpointLine, ForwarderPool
 from .manager import Manager
+from .protocol import (
+    Ack,
+    Heartbeat,
+    ProtocolError,
+    ResultMsg,
+    TaskBatch,
+    TaskSpec,
+    from_wire,
+    to_wire,
+)
 from .provisioning import (
     ElasticStrategy,
     LocalProvider,
@@ -37,11 +54,17 @@ from .provisioning import (
 )
 from .routing import (
     CostAwareRouter,
+    EndpointInfo,
+    EndpointRouter,
+    LeastLoadedEndpointRouter,
     LocalityAwareRouter,
     ManagerInfo,
+    RandomEndpointRouter,
     RandomRouter,
     Router,
+    WarmingAwareEndpointRouter,
     WarmingAwareRouter,
+    make_endpoint_router,
     make_router,
 )
 from .service import FuncXService, PAYLOAD_LIMIT, RegisteredFunction
@@ -56,17 +79,20 @@ from .warming import (
 from .worker import Worker, WorkItem, WorkResult
 
 __all__ = [
-    "ALL_SCOPES", "AuthError", "AuthService", "Channel", "Container",
-    "ContainerRegistry", "ContainerSpec", "CostAwareRouter",
-    "DynamicBatcher", "ElasticStrategy", "EndpointAgent",
-    "EndpointUnavailable", "Forwarder", "FuncXClient", "FuncXError",
-    "FuncXService", "LocalProvider", "LocalityAwareRouter", "Manager",
-    "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge", "Provider",
-    "RandomRouter", "RegisteredFunction", "RegistrationError", "Router",
+    "ALL_SCOPES", "Ack", "AuthError", "AuthService", "Channel", "ChannelHub",
+    "Container", "ContainerRegistry", "ContainerSpec", "CostAwareRouter",
+    "DynamicBatcher", "ElasticStrategy", "EndpointAgent", "EndpointInfo",
+    "EndpointLine", "EndpointRouter", "EndpointUnavailable", "ForwarderPool",
+    "FuncXClient", "FuncXError", "FuncXService", "Heartbeat",
+    "LeastLoadedEndpointRouter", "LocalProvider", "LocalityAwareRouter",
+    "Manager", "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge",
+    "ProtocolError", "Provider", "RandomEndpointRouter", "RandomRouter",
+    "RegisteredFunction", "RegistrationError", "ResultMsg", "Router",
     "SCOPE_ENDPOINT", "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN",
     "SCOPE_TRANSFER", "SimCloudProvider", "SimSlurmProvider", "Task",
-    "TaskFailure", "TaskLost", "TaskStatus", "TaskStore", "Token",
-    "WarmCache", "WarmingAwareRouter", "WorkItem", "WorkResult", "Worker",
-    "make_router", "proportional_allocation", "split_arrays",
-    "stack_arrays",
+    "TaskBatch", "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus",
+    "TaskStore", "Token", "WarmCache", "WarmingAwareEndpointRouter",
+    "WarmingAwareRouter", "WorkItem", "WorkResult", "Worker", "from_wire",
+    "make_endpoint_router", "make_router", "proportional_allocation",
+    "split_arrays", "stack_arrays", "to_wire",
 ]

@@ -1,7 +1,7 @@
 """Batching (paper §4.6) + beyond-paper request coalescing.
 
 The paper's two batching forms live elsewhere in the runtime:
-  - *internal batching*: Forwarder.batch_size + Manager.prefetch (managers
+  - *internal batching*: ForwarderPool.batch_size + Manager.prefetch (managers
     request many tasks on behalf of their workers);
   - *user-facing batching*: FuncXService.submit_batch / client.batch_run.
 

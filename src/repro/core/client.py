@@ -30,16 +30,19 @@ class FuncXClient:
             allowed=allowed, description=description)
 
     # -- execution --------------------------------------------------------------
-    def run(self, function_id: str, endpoint_id: str,
+    def run(self, function_id: str, endpoint_id: Optional[str] = None,
             data: Any = None, *, container_type: Optional[str] = None) -> str:
+        """``endpoint_id=None`` lets the service route across the federation
+        via its configured EndpointRouter (DESIGN.md §4)."""
         return self.service.submit(self.token, function_id, endpoint_id,
                                    data, container_type=container_type)
 
-    def batch_run(self, requests: Sequence[Tuple[str, str, Any]]) -> List[str]:
-        """User-facing batching (§4.6)."""
+    def batch_run(self, requests: Sequence[Tuple[str, Optional[str], Any]]
+                  ) -> List[str]:
+        """User-facing batching (§4.6); ``None`` endpoints are routed."""
         return self.service.submit_batch(self.token, requests)
 
-    def map(self, function_id: str, endpoint_id: str,
+    def map(self, function_id: str, endpoint_id: Optional[str],
             payloads: Sequence[Any], timeout: float = 60.0) -> List[Any]:
         ids = self.batch_run([(function_id, endpoint_id, p)
                               for p in payloads])

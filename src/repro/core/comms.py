@@ -5,6 +5,10 @@ routing tags, §4.5). Supports fault injection: ``disconnect()`` /
 ``reconnect()`` emulate network partitions; ``drop_rate`` emulates lossy
 links — both used by the fault-tolerance tests to exercise the paper's
 requeue-on-disconnect and heartbeat-loss behaviours.
+
+``ChannelHub`` is the select()-style multiplexer on top: one thread polls
+the service side of many channels at once (the transport substrate for the
+ForwarderPool — O(1) service threads for N endpoints).
 """
 from __future__ import annotations
 
@@ -12,7 +16,7 @@ import queue
 import random
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from ..serialization import pack, unpack
 
@@ -30,6 +34,7 @@ class Channel:
         self._closed = False
         self.drop_rate = drop_rate
         self._rng = random.Random(seed)
+        self._hub: Optional[Tuple["ChannelHub", str]] = None
         # traffic accounting
         self.bytes_to_endpoint = 0
         self.bytes_to_service = 0
@@ -76,6 +81,9 @@ class Channel:
         buf = pack(obj, tag=tag)
         self.bytes_to_service += len(buf)
         self._to_service.put(buf)
+        hub = self._hub
+        if hub is not None:
+            hub[0]._notify(hub[1])
         return True
 
     def recv_at_service(self, timeout: float = 0.1) -> Optional[tuple]:
@@ -84,3 +92,75 @@ class Channel:
         except queue.Empty:
             return None
         return unpack(buf)
+
+    def pending_to_service(self) -> int:
+        return self._to_service.qsize()
+
+
+class ChannelHub:
+    """select()-style readiness multiplexer over many channels' service side.
+
+    Channels registered with the hub push a readiness token whenever the
+    endpoint sends a message, so one poller thread can sleep on a single
+    queue instead of spinning over N channels. ``poll`` wakes on the first
+    ready channel and then drains every token already available — one
+    syscall-shaped wait per quiet period, not per channel.
+
+    Tokens are advisory: ``poll`` re-checks the channel queue non-blockingly
+    (a duplicate token — possible in the registration race window — yields
+    nothing and is skipped), so correctness never rests on exact 1:1
+    token/message accounting.
+    """
+
+    def __init__(self):
+        self._ready: "queue.Queue[str]" = queue.Queue()
+        self._channels: Dict[str, Channel] = {}
+        self._lock = threading.Lock()
+
+    def register(self, key: str, channel: Channel) -> None:
+        with self._lock:
+            self._channels[key] = channel
+        channel._hub = (self, key)
+        # Messages that arrived before registration (e.g. heartbeats queued
+        # while a ForwarderPool was being restarted) get their tokens now.
+        for _ in range(channel.pending_to_service()):
+            self._ready.put(key)
+
+    def unregister(self, key: str) -> None:
+        with self._lock:
+            ch = self._channels.pop(key, None)
+        if ch is not None and ch._hub is not None and ch._hub[0] is self:
+            ch._hub = None
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return list(self._channels)
+
+    def _notify(self, key: str) -> None:
+        self._ready.put(key)
+
+    def poll(self, timeout: float = 0.1) -> List[Tuple[str, tuple]]:
+        """Block up to ``timeout`` for readiness, then drain everything
+        already ready. Returns ``[(key, (message, tag)), ...]``."""
+        out: List[Tuple[str, tuple]] = []
+        try:
+            key = self._ready.get(timeout=timeout)
+        except queue.Empty:
+            return out
+        pending = [key]
+        while True:
+            try:
+                pending.append(self._ready.get_nowait())
+            except queue.Empty:
+                break
+        for key in pending:
+            with self._lock:
+                ch = self._channels.get(key)
+            if ch is None:
+                continue
+            try:
+                buf = ch._to_service.get_nowait()
+            except queue.Empty:
+                continue                       # duplicate/stale token
+            out.append((key, unpack(buf)))
+        return out

@@ -9,8 +9,10 @@ mirroring the paper:
   the next layer acknowledges);
 - routes tasks to managers via a pluggable, warming-aware router (§6.2);
 - collects results and returns them to the forwarder;
-- heartbeats to the forwarder; detects *lost managers* via their heartbeats
-  and re-executes their in-flight tasks (§4.3 fault tolerance);
+- heartbeats to the forwarder pool, advertising queue depth and
+  warm-container state (the service's federation-level router feeds on
+  these); detects *lost managers* via their heartbeats and re-executes
+  their in-flight tasks (§4.3 fault tolerance);
 - optional speculative re-execution of stragglers (beyond paper);
 - optional elastic provisioning strategy (§6.3).
 """
@@ -25,6 +27,16 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 from ..data import KVStore, TransferService, resolve_inputs, stage_outputs
 from .comms import Channel
 from .manager import Manager
+from .protocol import (
+    Ack,
+    Heartbeat,
+    ProtocolError,
+    ResultMsg,
+    TaskBatch,
+    TaskSpec,
+    from_wire,
+    to_wire,
+)
 from .routing import Router, make_router
 from .tasks import now
 from .warming import ContainerRegistry
@@ -77,7 +89,7 @@ class EndpointAgent:
         self._fn_cache: Dict[str, Tuple[Callable, bool]] = {}
         self._retries: Dict[str, int] = {}
         self._completed: Set[str] = set()
-        self._dispatched_at: Dict[str, Tuple[float, dict, str]] = {}
+        self._dispatched_at: Dict[str, Tuple[float, TaskSpec, str]] = {}
         self._durations: collections.deque = collections.deque(maxlen=256)
 
         self._stop = threading.Event()
@@ -155,35 +167,30 @@ class EndpointAgent:
     # ------------------------------------------------------------------- loops
     def _recv_loop(self) -> None:
         while not self._stop.is_set():
-            msg = self.channel.recv_at_endpoint(timeout=0.05)
-            if msg is None:
+            wire = self.channel.recv_at_endpoint(timeout=0.05)
+            if wire is None:
                 continue
-            env, _tag = msg
-            kind = env.get("type")
-            if kind == "task_batch":
+            env, _tag = wire
+            try:
+                msg = from_wire(env)
+            except ProtocolError:
+                continue
+            if isinstance(msg, TaskBatch):
                 t_recv = now()
-                for t_env in env["tasks"]:
-                    t_env["stamps"] = {"endpoint_recv": t_recv}
-                    self._enqueue(t_env)
+                for spec in msg.tasks:
+                    spec.stamps["endpoint_recv"] = t_recv
+                    self._enqueue(spec)
                 self.channel.send_to_service(
-                    {"type": "ack", "task_ids": [t["task_id"]
-                                                 for t in env["tasks"]],
-                     "t_endpoint_recv": t_recv}, tag="ack")
-            elif kind == "task":
-                env["stamps"] = {"endpoint_recv": now()}
-                self._enqueue(env)
-                self.channel.send_to_service(
-                    {"type": "ack", "task_ids": [env["task_id"]],
-                     "t_endpoint_recv": env["stamps"]["endpoint_recv"]},
-                    tag="ack")
+                    to_wire(Ack(task_ids=[s.task_id for s in msg.tasks],
+                                t_endpoint_recv=t_recv)), tag="ack")
 
-    def _enqueue(self, t_env: dict, front: bool = False) -> None:
+    def _enqueue(self, spec: TaskSpec, front: bool = False) -> None:
         self.tasks_received += 1
         with self._queue_cond:
             if front:
-                self._queue.appendleft(t_env)
+                self._queue.appendleft(spec)
             else:
-                self._queue.append(t_env)
+                self._queue.append(spec)
             self._queue_cond.notify()
 
     def _resolve_fn(self, function_id: str) -> Tuple[Callable, bool]:
@@ -191,21 +198,22 @@ class EndpointAgent:
             self._fn_cache[function_id] = self.fetch_function(function_id)
         return self._fn_cache[function_id]
 
-    def _make_item(self, t_env: dict) -> WorkItem:
+    def _make_item(self, spec: TaskSpec) -> WorkItem:
         # requeued items after manager loss carry their resolved fn
-        if "_resolved" in t_env:
-            fn, wants_env = t_env["_resolved"]
+        if spec.resolved is not None:
+            fn, wants_env = spec.resolved
+            payload = spec.payload
         else:
-            fn, wants_env = self._resolve_fn(t_env["function_id"])
-        payload = t_env["payload"]
-        if self.store is not None and "_resolved" not in t_env:
-            payload = resolve_inputs(payload, self.endpoint_id, self.store,
-                                     self.transfer)
+            fn, wants_env = self._resolve_fn(spec.function_id)
+            payload = spec.payload
+            if self.store is not None:
+                payload = resolve_inputs(payload, self.endpoint_id,
+                                         self.store, self.transfer)
         return WorkItem(
-            task_id=t_env["task_id"],
-            container_type=t_env["container_type"],
+            task_id=spec.task_id,
+            container_type=spec.container_type,
             fn=fn, wants_env=wants_env, payload=payload,
-            stamps=dict(t_env.get("stamps", {})))
+            stamps=dict(spec.stamps))
 
     def _dispatch_loop(self) -> None:
         """Routes queued tasks to managers. Manager state (warm types, free
@@ -228,14 +236,14 @@ class EndpointAgent:
             room = {m.manager_id: m.room() for m in managers}
             per_manager: Dict[str, list] = {}
             leftovers = []
-            for t_env in batch:
-                ct = t_env["container_type"]
+            for spec in batch:
+                ct = spec.container_type
                 target = self.router.route(ct, infos)
                 if target is None or room.get(target, 0) <= 0:
                     # the router's choice is saturated: requeue and retry
                     # against a fresh snapshot (never override the policy
                     # with first-fit — that would erase warm affinity)
-                    leftovers.append(t_env)
+                    leftovers.append(spec)
                     continue
                 room[target] -= 1
                 for inf in infos:          # keep the snapshot coherent
@@ -246,20 +254,20 @@ class EndpointAgent:
                         inf.idle_workers = max(inf.idle_workers - 1, 0)
                         break
                 try:
-                    item = self._make_item(t_env)
+                    item = self._make_item(spec)
                 except Exception as e:         # fn fetch / stage-in failure
-                    self._send_failure(t_env["task_id"],
+                    self._send_failure(spec.task_id,
                                        f"staging: {type(e).__name__}: {e}")
                     continue
                 self._dispatched_at[item.task_id] = (
-                    time.perf_counter(), t_env, target)
+                    time.perf_counter(), spec, target)
                 per_manager.setdefault(target, []).append(item)
             for mid, items in per_manager.items():
                 by_id[mid].submit_batch(items)
             if leftovers:
                 with self._queue_cond:
-                    for t_env in reversed(leftovers):
-                        self._queue.appendleft(t_env)
+                    for spec in reversed(leftovers):
+                        self._queue.appendleft(spec)
                 time.sleep(0.002)
 
     def _on_result(self, manager_id: str, res: WorkResult) -> None:
@@ -275,31 +283,44 @@ class EndpointAgent:
                 and self.store is not None):
             result = stage_outputs(result, self.endpoint_id, self.store,
                                    key_prefix=f"task/{res.task_id}")
-        self.channel.send_to_service({
-            "type": "result", "task_id": res.task_id, "status": res.status,
-            "result": result, "error": res.error,
-            "remote_traceback": res.remote_traceback,
-            "stamps": res.stamps, "cold_start": res.cold_start,
-            "build_time": res.build_time,
-            "worker_id": res.worker_id, "manager_id": manager_id,
-        }, tag="result")
+        self.channel.send_to_service(to_wire(ResultMsg(
+            task_id=res.task_id, status=res.status, result=result,
+            error=res.error, remote_traceback=res.remote_traceback,
+            stamps=res.stamps, cold_start=res.cold_start,
+            build_time=res.build_time, worker_id=res.worker_id,
+            manager_id=manager_id)), tag="result")
 
     def _send_failure(self, task_id: str, error: str,
                       status: str = "FAILED") -> None:
         self._completed.add(task_id)
-        self.channel.send_to_service({
-            "type": "result", "task_id": task_id, "status": status,
-            "result": None, "error": error, "remote_traceback": "",
-            "stamps": {}, "cold_start": False, "build_time": 0.0,
-            "worker_id": "", "manager_id": "",
-        }, tag="result")
+        self.channel.send_to_service(to_wire(ResultMsg(
+            task_id=task_id, status=status, error=error)), tag="result")
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():
-            self.channel.send_to_service(
-                {"type": "heartbeat", "endpoint_id": self.endpoint_id,
-                 "ts": time.time()}, tag="hb")
+            self.channel.send_to_service(to_wire(self._heartbeat()), tag="hb")
             time.sleep(self.heartbeat_interval)
+
+    def _heartbeat(self) -> Heartbeat:
+        """Liveness + load/warm advertisement (consumed by the service's
+        federation-level EndpointRouter)."""
+        warm_idle: Dict[str, int] = {}
+        warm_total: Dict[str, int] = {}
+        capacity = idle = queued = 0
+        for m in self._alive_managers():
+            inf = m.info()
+            capacity += inf.capacity
+            idle += inf.idle_workers
+            queued += inf.queued
+            for t, n in inf.warm_idle.items():
+                warm_idle[t] = warm_idle.get(t, 0) + n
+            for t, n in inf.warm_total.items():
+                warm_total[t] = warm_total.get(t, 0) + n
+        with self._queue_lock:
+            queued += len(self._queue)
+        return Heartbeat(endpoint_id=self.endpoint_id, ts=time.time(),
+                         queued=queued, idle_workers=idle, capacity=capacity,
+                         warm_idle=warm_idle, warm_total=warm_total)
 
     # -- fault tolerance: lost managers & stragglers --------------------------
     def _monitor_loop(self) -> None:
@@ -335,14 +356,11 @@ class EndpointAgent:
                             f"(manager {mid} failed)", status="LOST")
                     else:
                         self.tasks_reexecuted += 1
-                        self._enqueue({
-                            "task_id": item.task_id,
-                            "function_id": "", "container_type":
-                                item.container_type,
-                            "payload": item.payload,
-                            "stamps": item.stamps,
-                            "_resolved": (item.fn, item.wants_env),
-                        }, front=True)
+                        self._enqueue(TaskSpec(
+                            task_id=item.task_id, function_id="",
+                            container_type=item.container_type,
+                            payload=item.payload, stamps=item.stamps,
+                            resolved=(item.fn, item.wants_env)), front=True)
 
     def _check_stragglers(self) -> None:
         if len(self._durations) < 4:
@@ -350,7 +368,7 @@ class EndpointAgent:
         mean = sum(self._durations) / len(self._durations)
         threshold = max(self.speculation_min, self.speculation_factor * mean)
         now_s = time.perf_counter()
-        for task_id, (t0, t_env, mid) in list(self._dispatched_at.items()):
+        for task_id, (t0, spec, mid) in list(self._dispatched_at.items()):
             if task_id in self._completed:
                 continue
             if now_s - t0 > threshold:
@@ -360,10 +378,10 @@ class EndpointAgent:
                 if not others:
                     continue
                 try:
-                    item = self._make_item(t_env)
+                    item = self._make_item(spec)
                 except Exception:
                     continue
                 others[0].submit_batch([item])
                 self.speculative_dispatches += 1
                 # push threshold forward so we don't spam duplicates
-                self._dispatched_at[task_id] = (now_s, t_env, mid)
+                self._dispatched_at[task_id] = (now_s, spec, mid)

@@ -1,0 +1,339 @@
+"""ForwarderPool (paper §4.1, multiplexed): the service-side forwarder tier.
+
+The seed implementation ran one ``Forwarder`` per registered endpoint —
+three dedicated threads each (dispatch / recv / monitor), so N endpoints
+cost 3N service threads. The paper's service scales to thousands of
+endpoints; thread-per-endpoint cannot. This pool keeps the exact same
+per-endpoint semantics (service-side FIFO queue, batch dispatch, in-flight
+tracking, heartbeat liveness, requeue-on-disconnect) but multiplexes all
+endpoints over **one** dispatch loop, **one** recv loop (a ``ChannelHub``
+select), and **one** monitor loop — O(1) threads for any fleet size.
+
+Per-endpoint state lives in an ``EndpointLine``; the pool's condition
+variable wakes the dispatch loop whenever any line has work.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .comms import Channel, ChannelHub
+from .protocol import (
+    Ack,
+    Heartbeat,
+    ProtocolError,
+    ResultMsg,
+    TaskBatch,
+    TaskSpec,
+    from_wire,
+    to_wire,
+)
+from .routing import EndpointInfo
+from .tasks import TaskStatus, TaskStore, now
+
+
+class EndpointLine:
+    """One endpoint's service-side state inside the pool.
+
+    Exposes the slice of the old ``Forwarder`` API that callers (service,
+    tests, benchmarks) observe: ``endpoint_connected``, ``queue_len()``,
+    ``in_flight_count()``, ``send_rtt``, and the dispatch metrics.
+    All mutation happens under the owning pool's lock.
+    """
+
+    def __init__(self, endpoint_id: str, channel: Channel,
+                 lock: threading.RLock):
+        self.endpoint_id = endpoint_id
+        self.channel = channel
+        self._lock = lock
+        self.queue: Deque[str] = collections.deque()
+        self.in_flight: Dict[str, float] = {}
+        self.last_heartbeat = time.time()
+        self.endpoint_connected = True
+        self.send_rtt = 0.0             # per-message latency (benchmarks)
+        self.next_send_at = 0.0         # send_rtt gate; never blocks others
+        self.advertised = Heartbeat(endpoint_id=endpoint_id)
+        # metrics
+        self.dispatched = 0
+        self.results_received = 0
+        self.requeues = 0
+
+    def queue_len(self) -> int:
+        with self._lock:
+            return len(self.queue)
+
+    def in_flight_count(self) -> int:
+        with self._lock:
+            return len(self.in_flight)
+
+    def info(self) -> EndpointInfo:
+        """Snapshot for the federation-level EndpointRouter."""
+        adv = self.advertised
+        with self._lock:
+            service_queue = len(self.queue)
+            in_flight = len(self.in_flight)
+        return EndpointInfo(
+            endpoint_id=self.endpoint_id,
+            connected=self.endpoint_connected and self.channel.connected,
+            service_queue=service_queue,
+            in_flight=in_flight,
+            queued=adv.queued,
+            idle_workers=adv.idle_workers,
+            capacity=adv.capacity,
+            warm_idle=dict(adv.warm_idle),
+            warm_total=dict(adv.warm_total),
+        )
+
+
+class ForwarderPool:
+    def __init__(
+        self,
+        task_store: TaskStore,
+        *,
+        batch_size: int = 32,
+        heartbeat_timeout: float = 0.5,
+    ):
+        self.task_store = task_store
+        self.batch_size = batch_size
+        self.heartbeat_timeout = heartbeat_timeout
+
+        self.hub = ChannelHub()
+        self._lines: Dict[str, EndpointLine] = {}
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        # metrics (pool-wide; per-endpoint counts live on the lines)
+        self.dispatched = 0
+        self.results_received = 0
+        self.requeues = 0
+
+    # ------------------------------------------------------------------ control
+    def start(self) -> None:
+        for name, fn in [("dispatch", self._dispatch_loop),
+                         ("recv", self._recv_loop),
+                         ("monitor", self._monitor_loop)]:
+            t = threading.Thread(target=fn, daemon=True, name=f"pool-{name}")
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+
+    @property
+    def healthy(self) -> bool:
+        return all(t.is_alive() for t in self._threads) and \
+            not self._stop.is_set()
+
+    # -------------------------------------------------------------- membership
+    def register(self, endpoint_id: str, channel: Channel) -> EndpointLine:
+        line = EndpointLine(endpoint_id, channel, self._lock)
+        with self._cond:
+            self._lines[endpoint_id] = line
+        self.hub.register(endpoint_id, channel)
+        return line
+
+    def unregister(self, endpoint_id: str) -> Optional[EndpointLine]:
+        self.hub.unregister(endpoint_id)
+        with self._cond:
+            return self._lines.pop(endpoint_id, None)
+
+    def line(self, endpoint_id: str) -> EndpointLine:
+        with self._lock:
+            return self._lines[endpoint_id]
+
+    def lines(self) -> List[EndpointLine]:
+        with self._lock:
+            return list(self._lines.values())
+
+    def endpoint_infos(self) -> List[EndpointInfo]:
+        return [ln.info() for ln in self.lines()]
+
+    # ------------------------------------------------------------------ intake
+    def enqueue(self, endpoint_id: str, task_id: str,
+                front: bool = False) -> None:
+        with self._cond:
+            line = self._lines[endpoint_id]
+            if front:
+                line.queue.appendleft(task_id)
+            else:
+                line.queue.append(task_id)
+            self._cond.notify()
+
+    def enqueue_many(self, endpoint_id: str, task_ids: List[str]) -> None:
+        with self._cond:
+            self._lines[endpoint_id].queue.extend(task_ids)
+            self._cond.notify()
+
+    # ------------------------------------------------------------------- loops
+    def _sendable(self) -> List[Tuple[EndpointLine, List[str]]]:
+        """Pop up to batch_size queued ids from every line that is ready to
+        send. Caller must hold the lock."""
+        out = []
+        now_t = time.time()
+        for line in self._lines.values():
+            if not line.queue:
+                continue
+            if not line.endpoint_connected or not line.channel.connected:
+                continue
+            if line.send_rtt and line.next_send_at > now_t:
+                continue               # emulated RTT not elapsed yet
+            batch = []
+            while line.queue and len(batch) < self.batch_size:
+                batch.append(line.queue.popleft())
+            out.append((line, batch))
+        return out
+
+    def _wait_timeout(self) -> float:
+        """How long the dispatch loop may sleep: wake early if an
+        RTT-gated line with queued work comes due sooner than the default
+        poll interval. Caller must hold the lock."""
+        t = 0.05
+        now_t = time.time()
+        for line in self._lines.values():
+            if line.queue and line.send_rtt and line.next_send_at > now_t:
+                t = min(t, line.next_send_at - now_t)
+        return max(t, 0.001)
+
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                batches = self._sendable()
+                while not batches and not self._stop.is_set():
+                    self._cond.wait(timeout=self._wait_timeout())
+                    batches = self._sendable()
+            if self._stop.is_set():
+                return
+            for line, task_ids in batches:
+                self._dispatch(line, task_ids)
+
+    def _dispatch(self, line: EndpointLine, task_ids: List[str]) -> None:
+        specs: List[TaskSpec] = []
+        for tid in task_ids:
+            try:
+                task = self.task_store.get(tid)
+            except KeyError:
+                continue
+            if task.done:
+                continue
+            task.status = TaskStatus.DISPATCHED
+            task.stamp("forwarder_sent")
+            specs.append(TaskSpec(task_id=tid,
+                                  function_id=task.function_id,
+                                  container_type=task.container_type,
+                                  payload=task.payload))
+        if not specs:
+            return
+        ok = line.channel.send_to_endpoint(to_wire(TaskBatch(tasks=specs)),
+                                           tag="tasks")
+        with self._lock:
+            if ok:
+                t = time.time()
+                if line.send_rtt:
+                    line.next_send_at = t + line.send_rtt
+                for spec in specs:
+                    line.in_flight[spec.task_id] = t
+                line.dispatched += len(specs)
+                self.dispatched += len(specs)
+            else:
+                # channel refused (disconnected / dropped): requeue in order
+                line.queue.extendleft(reversed([s.task_id for s in specs]))
+
+    def _recv_loop(self) -> None:
+        while not self._stop.is_set():
+            for eid, (env, _tag) in self.hub.poll(timeout=0.05):
+                with self._lock:
+                    line = self._lines.get(eid)
+                if line is None:
+                    continue
+                try:
+                    msg = from_wire(env)
+                except ProtocolError:
+                    continue
+                if isinstance(msg, Heartbeat):
+                    self._handle_heartbeat(line, msg)
+                elif isinstance(msg, Ack):
+                    self._handle_ack(msg)
+                elif isinstance(msg, ResultMsg):
+                    self._handle_result(line, msg)
+
+    def _handle_heartbeat(self, line: EndpointLine, hb: Heartbeat) -> None:
+        line.last_heartbeat = time.time()
+        line.advertised = hb
+        if not line.endpoint_connected:
+            line.endpoint_connected = True          # reconnected
+            with self._cond:
+                self._cond.notify()                 # queued work can flow
+
+    def _handle_ack(self, ack: Ack) -> None:
+        for tid in ack.task_ids:
+            try:
+                task = self.task_store.get(tid)
+                task.t.setdefault("endpoint_recv",
+                                  ack.t_endpoint_recv or now())
+            except KeyError:
+                pass
+
+    def _handle_result(self, line: EndpointLine, res: ResultMsg) -> None:
+        with self._lock:
+            line.in_flight.pop(res.task_id, None)
+        try:
+            task = self.task_store.get(res.task_id)
+        except KeyError:
+            return
+        if task.done:
+            return
+        task.t.update(res.stamps)
+        task.cold_start = res.cold_start
+        task.worker_id = res.worker_id
+        task.manager_id = res.manager_id
+        if res.status == "SUCCESS":
+            task.result = res.result
+            task.status = TaskStatus.SUCCESS
+        elif res.status == "LOST":
+            task.error = res.error
+            task.status = TaskStatus.LOST
+        else:
+            task.error = res.error
+            task.remote_traceback = res.remote_traceback
+            task.status = TaskStatus.FAILED
+        task.stamp("result_stored")
+        line.results_received += 1
+        self.results_received += 1
+        self.task_store.mark_done(res.task_id)
+
+    def _monitor_loop(self) -> None:
+        """Heartbeat-based endpoint liveness (paper: 30 s default; scaled
+        down here). On loss: requeue that endpoint's in-flight tasks."""
+        while not self._stop.is_set():
+            time.sleep(self.heartbeat_timeout / 4)
+            cutoff = time.time() - self.heartbeat_timeout
+            for line in self.lines():
+                if line.endpoint_connected and line.last_heartbeat < cutoff:
+                    line.endpoint_connected = False
+                    self.requeue_in_flight(line)
+
+    def requeue_in_flight(self, line: EndpointLine) -> None:
+        """Put the line's dispatched-but-unresolved tasks back at the head
+        of its queue, preserving dispatch order (FIFO is kept: in-flight
+        tasks left the queue before anything currently in it)."""
+        with self._cond:
+            pending = list(line.in_flight.keys())
+            line.in_flight.clear()
+            requeued = []
+            for tid in pending:
+                try:
+                    task = self.task_store.get(tid)
+                except KeyError:
+                    continue
+                if not task.done:
+                    task.status = TaskStatus.PENDING
+                    requeued.append(tid)
+            line.queue.extendleft(reversed(requeued))
+            line.requeues += len(requeued)
+            self.requeues += len(requeued)
+            self._cond.notify()

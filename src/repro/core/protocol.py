@@ -1,0 +1,124 @@
+"""Typed wire protocol for the service↔endpoint channel (paper §4.5).
+
+One dataclass per message kind, replacing the ad-hoc ``{"type": ...}``
+dict envelopes that used to be assembled by hand on both ends of the
+channel. Messages still travel as plain dicts (the serialization facade
+msgpacks dicts on its fast path), but every encode/decode goes through
+the single ``to_wire`` / ``from_wire`` entry point, so field names exist
+in exactly one place.
+
+Wire kinds:
+
+  ``task_batch``  service → endpoint   batch of TaskSpec (internal batching §4.6)
+  ``ack``         endpoint → service   receipt of a batch (hierarchical queuing)
+  ``heartbeat``   endpoint → service   liveness + load/warm-container
+                                       advertisement (feeds federation routing)
+  ``result``      endpoint → service   one task outcome
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Any, ClassVar, Dict, List, Optional, Tuple
+
+
+class ProtocolError(Exception):
+    pass
+
+
+@dataclass
+class TaskSpec:
+    """One task as shipped service → endpoint (element of a TaskBatch)."""
+    task_id: str
+    function_id: str
+    container_type: str
+    payload: Any = None
+    stamps: Dict[str, float] = field(default_factory=dict)
+    # Endpoint-internal only (set when a lost manager's task is requeued
+    # with its already-resolved function); never serialized.
+    resolved: Optional[Tuple] = None
+
+    def to_dict(self) -> dict:
+        return {"task_id": self.task_id, "function_id": self.function_id,
+                "container_type": self.container_type,
+                "payload": self.payload, "stamps": self.stamps}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TaskSpec":
+        return cls(task_id=d["task_id"], function_id=d["function_id"],
+                   container_type=d["container_type"],
+                   payload=d.get("payload"), stamps=dict(d.get("stamps", {})))
+
+
+@dataclass
+class TaskBatch:
+    kind: ClassVar[str] = "task_batch"
+    tasks: List[TaskSpec] = field(default_factory=list)
+
+
+@dataclass
+class Ack:
+    kind: ClassVar[str] = "ack"
+    task_ids: List[str] = field(default_factory=list)
+    t_endpoint_recv: float = 0.0
+
+
+@dataclass
+class Heartbeat:
+    """Liveness beacon. Beyond bare liveness it advertises the endpoint's
+    load and warm-container state so the service-side EndpointRouter can
+    do federation-level warming-aware placement (paper §6.2, lifted one
+    tier up)."""
+    kind: ClassVar[str] = "heartbeat"
+    endpoint_id: str = ""
+    ts: float = 0.0
+    queued: int = 0                    # tasks pending inside the endpoint
+    idle_workers: int = 0
+    capacity: int = 0                  # total workers across managers
+    warm_idle: Dict[str, int] = field(default_factory=dict)
+    warm_total: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class ResultMsg:
+    kind: ClassVar[str] = "result"
+    task_id: str = ""
+    status: str = "SUCCESS"            # SUCCESS | FAILED | LOST
+    result: Any = None
+    error: Optional[str] = None
+    remote_traceback: str = ""
+    stamps: Dict[str, float] = field(default_factory=dict)
+    cold_start: bool = False
+    build_time: float = 0.0
+    worker_id: str = ""
+    manager_id: str = ""
+
+
+Message = object                      # union of the classes below
+WIRE_TYPES = {cls.kind: cls for cls in (TaskBatch, Ack, Heartbeat, ResultMsg)}
+
+
+def to_wire(msg) -> dict:
+    """Encode a protocol message to its wire dict (``{"type": kind, ...}``)."""
+    kind = getattr(type(msg), "kind", None)
+    if kind not in WIRE_TYPES:
+        raise ProtocolError(f"not a protocol message: {type(msg).__name__}")
+    env: Dict[str, Any] = {"type": kind}
+    if isinstance(msg, TaskBatch):
+        env["tasks"] = [t.to_dict() for t in msg.tasks]
+        return env
+    for f in fields(msg):
+        env[f.name] = getattr(msg, f.name)
+    return env
+
+
+def from_wire(env: dict):
+    """Decode a wire dict back into its typed message."""
+    kind = env.get("type")
+    cls = WIRE_TYPES.get(kind)
+    if cls is None:
+        raise ProtocolError(f"unknown wire type: {kind!r}")
+    if cls is TaskBatch:
+        return TaskBatch(tasks=[TaskSpec.from_dict(t)
+                                for t in env.get("tasks", [])])
+    kwargs = {f.name: env[f.name] for f in fields(cls) if f.name in env}
+    return cls(**kwargs)

@@ -196,3 +196,121 @@ ROUTERS = {
 
 def make_router(name: str, **kw) -> Router:
     return ROUTERS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Federation-level routing (paper §4.1 + §6.2 lifted one tier up): the
+# service picks an *endpoint* for a task submitted without one, the same
+# way an endpoint agent picks a manager. Endpoint state comes from the
+# ForwarderPool: service-side queue depth + in-flight counts are first-hand,
+# endpoint-internal load and warm-container state ride in on heartbeats.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EndpointInfo:
+    """What the service knows about one endpoint when routing across the
+    federation (the endpoint-level analogue of ``ManagerInfo``)."""
+    endpoint_id: str
+    connected: bool = True
+    service_queue: int = 0             # tasks queued service-side
+    in_flight: int = 0                 # dispatched, result not yet back
+    queued: int = 0                    # heartbeat: pending inside endpoint
+    idle_workers: int = 0              # heartbeat
+    capacity: int = 0                  # heartbeat: total workers
+    warm_idle: Dict[str, int] = field(default_factory=dict)
+    warm_total: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def backlog(self) -> int:
+        return self.service_queue + self.in_flight + self.queued
+
+    @property
+    def load(self) -> float:
+        """Backlog normalized by capacity (uncapacitated endpoints —
+        heartbeat not seen yet — count as capacity 1)."""
+        return self.backlog / max(self.capacity, 1)
+
+
+class EndpointRouter:
+    name = "abstract"
+
+    def select(self, container_type: str,
+               endpoints: Sequence[EndpointInfo]) -> Optional[str]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _candidates(endpoints: Sequence[EndpointInfo]) -> List[EndpointInfo]:
+        up = [e for e in endpoints if e.connected]
+        return up or list(endpoints)
+
+
+class RandomEndpointRouter(EndpointRouter):
+    """Baseline: uniformly random among connected endpoints."""
+
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def select(self, container_type, endpoints):
+        if not endpoints:
+            return None
+        return self.rng.choice(self._candidates(endpoints)).endpoint_id
+
+
+class LeastLoadedEndpointRouter(EndpointRouter):
+    """Pick the endpoint with the lowest backlog per unit of capacity."""
+
+    name = "least_loaded"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def select(self, container_type, endpoints):
+        if not endpoints:
+            return None
+        pool = self._candidates(endpoints)
+        return min(pool, key=lambda e: (e.load,
+                                        self.rng.random())).endpoint_id
+
+
+class WarmingAwareEndpointRouter(EndpointRouter):
+    """Paper §6.2 at federation scope: endpoints advertising an *idle warm*
+    container of the required type win (most warm-idle first, least backlog
+    tie-break); then endpoints where the type is warm but busy; then
+    least-loaded — so the 61 % completion-time win from warming-aware
+    manager routing compounds across the fleet."""
+
+    name = "warming_aware"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def select(self, container_type, endpoints):
+        if not endpoints:
+            return None
+        pool = self._candidates(endpoints)
+        warm = [e for e in pool if e.warm_idle.get(container_type, 0) > 0]
+        if warm:
+            best = max(warm, key=lambda e: (e.warm_idle[container_type],
+                                            -e.backlog))
+            return best.endpoint_id
+        warm_busy = [e for e in pool
+                     if e.warm_total.get(container_type, 0) > 0]
+        if warm_busy:
+            best = max(warm_busy, key=lambda e: (e.warm_total[container_type],
+                                                 -e.backlog))
+            return best.endpoint_id
+        return min(pool, key=lambda e: (e.load,
+                                        self.rng.random())).endpoint_id
+
+
+ENDPOINT_ROUTERS = {
+    "random": RandomEndpointRouter,
+    "least_loaded": LeastLoadedEndpointRouter,
+    "warming_aware": WarmingAwareEndpointRouter,
+}
+
+
+def make_endpoint_router(name: str, **kw) -> EndpointRouter:
+    return ENDPOINT_ROUTERS[name](**kw)

@@ -1,10 +1,13 @@
 """The cloud-hosted funcX service (paper §4.1).
 
 Maintains the registries (users, functions, endpoints, containers), the
-task store and per-endpoint queues + forwarders, enforces auth scopes and
-the 10 MB payload limit, exposes the REST-shaped API (register / submit /
-status / result), runs health checks that restart dead forwarders, and
-purges results after retrieval.
+task store and the multiplexed ForwarderPool (one event loop for all
+endpoints — see DESIGN.md §3), enforces auth scopes and the 10 MB payload
+limit, exposes the REST-shaped API (register / submit / status / result),
+routes tasks submitted without an endpoint across the federation via a
+pluggable EndpointRouter (DESIGN.md §4), runs health checks that restart a
+dead pool (carrying queues and requeueing in-flight tasks), and purges
+results after retrieval.
 """
 from __future__ import annotations
 
@@ -40,7 +43,8 @@ from .errors import (
     TaskFailure,
     TaskLost,
 )
-from .forwarder import Forwarder
+from .forwarder_pool import EndpointLine, ForwarderPool
+from .routing import EndpointInfo, EndpointRouter, make_endpoint_router
 from .tasks import Task, TaskStatus, TaskStore
 from .warming import ContainerRegistry, ContainerSpec
 
@@ -71,12 +75,19 @@ class EndpointRecord:
     name: str
     owner: str
     channel: Channel
-    forwarder: Forwarder
+    line: EndpointLine                 # service-side state in the pool
     created: float = field(default_factory=time.time)
 
     @property
+    def forwarder(self) -> EndpointLine:
+        """Back-compat alias from the thread-per-endpoint Forwarder era:
+        the line exposes the same observable surface (endpoint_connected,
+        queue_len, in_flight_count, send_rtt, metrics)."""
+        return self.line
+
+    @property
     def connected(self) -> bool:
-        return self.forwarder.endpoint_connected
+        return self.line.endpoint_connected
 
 
 class FuncXService:
@@ -84,7 +95,8 @@ class FuncXService:
                  payload_limit: int = PAYLOAD_LIMIT,
                  purge_on_get: bool = True,
                  forwarder_batch: int = 32,
-                 health_interval: float = 0.25):
+                 health_interval: float = 0.25,
+                 endpoint_router: "str | EndpointRouter" = "warming_aware"):
         self.auth = AuthService()
         self.tasks = TaskStore()
         self.containers = ContainerRegistry()
@@ -96,6 +108,12 @@ class FuncXService:
         self.payload_limit = payload_limit
         self.purge_on_get = purge_on_get
         self.forwarder_batch = forwarder_batch
+        self.endpoint_router = (
+            endpoint_router if isinstance(endpoint_router, EndpointRouter)
+            else make_endpoint_router(endpoint_router))
+        self.pool = ForwarderPool(self.tasks, batch_size=forwarder_batch,
+                                  heartbeat_timeout=heartbeat_timeout)
+        self.pool.start()
         self._stop = threading.Event()
         self._health = threading.Thread(target=self._health_loop,
                                         daemon=True, name="svc-health")
@@ -107,9 +125,9 @@ class FuncXService:
 
     def shutdown(self) -> None:
         self._stop.set()
+        self.pool.stop()
         with self._lock:
             for rec in self.endpoints.values():
-                rec.forwarder.stop()
                 rec.channel.close()
 
     # ------------------------------------------------------------------- users
@@ -171,11 +189,8 @@ class FuncXService:
         owner = self.auth.validate(token, SCOPE_ENDPOINT)
         eid = str(uuid.uuid4())
         channel = channel or Channel()
-        fwd = Forwarder(eid, self.tasks, channel,
-                        batch_size=self.forwarder_batch,
-                        heartbeat_timeout=self.heartbeat_timeout)
-        fwd.start()
-        rec = EndpointRecord(eid, name, owner, channel, fwd)
+        line = self.pool.register(eid, channel)
+        rec = EndpointRecord(eid, name, owner, channel, line)
         with self._lock:
             self.endpoints[eid] = rec
         return eid, channel
@@ -228,18 +243,44 @@ class FuncXService:
                  "in_flight": r.forwarder.in_flight_count()}
                 for r in recs]
 
+    # ------------------------------------------------------------ federation routing
+    def route_endpoint(self, container_type: str) -> str:
+        """Federation-level endpoint selection (DESIGN.md §4): pick an
+        endpoint for a task submitted without one, using the configured
+        EndpointRouter over the pool's live EndpointInfo snapshots
+        (service queue depth + in-flight first-hand; endpoint load and
+        warm-container state from heartbeats)."""
+        return self._route_from_snapshot(container_type,
+                                         self.pool.endpoint_infos())
+
+    def _route_from_snapshot(self, container_type: str,
+                             infos: List["EndpointInfo"]) -> str:
+        """Route one task against ``infos`` and feed the pick back into the
+        snapshot (queue depth up, warm-idle down) so consecutive picks from
+        the same snapshot — a routed batch — spread instead of all landing
+        on the momentary best endpoint."""
+        if not infos:
+            raise EndpointUnavailable("no endpoints registered")
+        eid = self.endpoint_router.select(container_type, infos)
+        if eid is None:
+            raise EndpointUnavailable("endpoint router returned no endpoint")
+        for inf in infos:
+            if inf.endpoint_id == eid:
+                inf.service_queue += 1
+                if inf.warm_idle.get(container_type, 0) > 0:
+                    inf.warm_idle[container_type] -= 1
+                if inf.idle_workers > 0:
+                    inf.idle_workers -= 1
+                break
+        return eid
+
     # ------------------------------------------------------------------- submit
-    def submit(self, token: Token, function_id: str, endpoint_id: str,
-               payload: Any = None, *,
-               container_type: Optional[str] = None) -> str:
-        identity = self.auth.validate(token, SCOPE_RUN)
+    def _check_request(self, identity: str, function_id: str,
+                       payload: Any) -> RegisteredFunction:
         with self._lock:
             rf = self.functions.get(function_id)
-            rec = self.endpoints.get(endpoint_id)
         if rf is None:
             raise RegistrationError(f"unknown function {function_id}")
-        if rec is None:
-            raise EndpointUnavailable(f"unknown endpoint {endpoint_id}")
         if not rf.authorized(identity):
             raise AuthError(
                 f"{identity} is not authorized to run {rf.name}")
@@ -248,21 +289,67 @@ class FuncXService:
             raise PayloadTooLarge(
                 f"payload {size}B > {self.payload_limit}B; stage via "
                 f"DataRef + TransferService (paper §5.1)")
+        return rf
+
+    def submit(self, token: Token, function_id: str,
+               endpoint_id: Optional[str] = None, payload: Any = None, *,
+               container_type: Optional[str] = None) -> str:
+        identity = self.auth.validate(token, SCOPE_RUN)
+        rf = self._check_request(identity, function_id, payload)
+        ct = container_type or rf.container_type
+        if endpoint_id is None:
+            endpoint_id = self.route_endpoint(ct)
+        with self._lock:
+            rec = self.endpoints.get(endpoint_id)
+        if rec is None:
+            raise EndpointUnavailable(f"unknown endpoint {endpoint_id}")
         task = Task(function_id=function_id, endpoint_id=endpoint_id,
-                    payload=payload,
-                    container_type=container_type or rf.container_type)
+                    payload=payload, container_type=ct)
         task.stamp("submit")
         self.tasks.put(task)
-        rec.forwarder.enqueue(task.task_id)
+        self.pool.enqueue(endpoint_id, task.task_id)
         task.stamp("service_queued")
         self.submitted += 1
         return task.task_id
 
     def submit_batch(self, token: Token,
-                     requests: Sequence[Tuple[str, str, Any]]) -> List[str]:
-        """User-facing batching (§4.6): one call, many tasks."""
-        return [self.submit(token, fid, eid, payload)
-                for fid, eid, payload in requests]
+                     requests: Sequence[Tuple[str, Optional[str], Any]]
+                     ) -> List[str]:
+        """User-facing batching (§4.6): one call, many tasks. The token is
+        validated once and every request is validated/routed *before* any
+        task is stored — a bad request fails the whole batch without
+        orphaning earlier tasks in the store. Endpoint-less requests route
+        against one batch-local snapshot with pick feedback (so a routed
+        burst spreads over the fleet), and each endpoint's share is
+        enqueued in a single pass — not one lock round-trip per task."""
+        identity = self.auth.validate(token, SCOPE_RUN)
+        snapshot: Optional[List[EndpointInfo]] = None
+        checked: List[Tuple[str, str, Any, str]] = []
+        for fid, eid, payload in requests:
+            rf = self._check_request(identity, fid, payload)
+            ct = rf.container_type
+            if eid is None:
+                if snapshot is None:
+                    snapshot = self.pool.endpoint_infos()
+                eid = self._route_from_snapshot(ct, snapshot)
+            elif eid not in self.endpoints:
+                raise EndpointUnavailable(f"unknown endpoint {eid}")
+            checked.append((fid, eid, payload, ct))
+        tasks: List[Task] = []
+        per_endpoint: Dict[str, List[str]] = {}
+        for fid, eid, payload, ct in checked:
+            task = Task(function_id=fid, endpoint_id=eid, payload=payload,
+                        container_type=ct)
+            task.stamp("submit")
+            self.tasks.put(task)
+            tasks.append(task)
+            per_endpoint.setdefault(eid, []).append(task.task_id)
+        for eid, tids in per_endpoint.items():
+            self.pool.enqueue_many(eid, tids)
+        for task in tasks:
+            task.stamp("service_queued")
+        self.submitted += len(tasks)
+        return [t.task_id for t in tasks]
 
     # ------------------------------------------------------------------ results
     def status(self, task_id: str) -> TaskStatus:
@@ -298,17 +385,43 @@ class FuncXService:
         restart)."""
         while not self._stop.is_set():
             time.sleep(self._health_interval)
-            with self._lock:
-                recs = list(self.endpoints.values())
-            for rec in recs:
-                if not rec.forwarder.healthy and not self._stop.is_set():
-                    old = rec.forwarder
-                    old.stop()
-                    fwd = Forwarder(rec.endpoint_id, self.tasks, rec.channel,
-                                    batch_size=self.forwarder_batch,
-                                    heartbeat_timeout=self.heartbeat_timeout)
-                    # carry over the queue
-                    fwd.queue.extend(old.queue)
-                    fwd.start()
-                    rec.forwarder = fwd
-                    self.forwarder_restarts += 1
+            if not self.pool.healthy and not self._stop.is_set():
+                self._restart_pool()
+
+    def _restart_pool(self) -> None:
+        """Replace a dead ForwarderPool, carrying over every endpoint's
+        service-side queue AND requeueing its in-flight tasks. A task whose
+        delivery the dead pool lost would otherwise hang forever; one the
+        endpoint did receive may execute twice, with the duplicate result
+        dropped — the same at-least-once semantics as heartbeat-loss
+        requeue and manager-loss re-execution (paper §4.3)."""
+        old = self.pool
+        old.stop()
+        pool = ForwarderPool(self.tasks, batch_size=self.forwarder_batch,
+                             heartbeat_timeout=self.heartbeat_timeout)
+        with self._lock:
+            for old_line in old.lines():
+                line = pool.register(old_line.endpoint_id, old_line.channel)
+                line.send_rtt = old_line.send_rtt
+                # in-flight first (they left the queue before anything
+                # still in it), statuses back to PENDING; skip finished
+                requeued = []
+                for tid in list(old_line.in_flight) + list(old_line.queue):
+                    try:
+                        task = self.tasks.get(tid)
+                    except KeyError:
+                        continue
+                    if task.done:
+                        continue
+                    if task.status is TaskStatus.DISPATCHED:
+                        task.status = TaskStatus.PENDING
+                        line.requeues += 1
+                        pool.requeues += 1
+                    requeued.append(tid)
+                line.queue.extend(requeued)
+                rec = self.endpoints.get(old_line.endpoint_id)
+                if rec is not None:
+                    rec.line = line
+            self.forwarder_restarts += 1
+            self.pool = pool
+        pool.start()

@@ -125,15 +125,15 @@ def test_provider_delays():
     assert cloud.acquisition_delay() == 0.03
 
 
-def test_forwarder_restart_by_health_check(service, client):
+def test_forwarder_pool_restart_by_health_check(service, client):
     fid = client.register_function(lambda d: d)
     eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
-    rec = service.endpoints[eid]
-    old_forwarder = rec.forwarder
-    old_forwarder._stop.set()        # simulates crashed threads → unhealthy
-    assert wait_until(lambda: service.endpoints[eid].forwarder
-                      is not old_forwarder, timeout=5)
+    old_pool = service.pool
+    old_pool._stop.set()             # simulates crashed loops → unhealthy
+    assert wait_until(lambda: service.pool is not old_pool, timeout=5)
     assert service.forwarder_restarts >= 1
+    # the record's line was swapped onto the new pool
+    assert service.endpoints[eid].line is service.pool.line(eid)
     tid = client.run(fid, eid, data=9)
     assert client.get_result(tid, timeout=10) == 9
     agent.stop()

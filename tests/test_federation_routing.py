@@ -1,0 +1,180 @@
+"""Federation-level routing (DESIGN.md §4): submit without an endpoint and
+let the service's EndpointRouter place the task across the fleet using
+heartbeat-advertised load + warm-container state."""
+import pytest
+
+from repro.core import (
+    ContainerSpec,
+    EndpointInfo,
+    EndpointUnavailable,
+    FuncXClient,
+    FuncXService,
+    LeastLoadedEndpointRouter,
+    RandomEndpointRouter,
+    WarmingAwareEndpointRouter,
+    make_endpoint_router,
+)
+from conftest import wait_until
+
+
+# ------------------------------------------------------------------ unit level
+
+def _info(eid, **kw):
+    return EndpointInfo(endpoint_id=eid, **kw)
+
+
+def test_warming_aware_picks_warm_endpoint_over_cold():
+    eps = [
+        _info("cold", capacity=8, idle_workers=8),
+        _info("warm", capacity=4, idle_workers=2,
+              warm_idle={"model/x": 2}, warm_total={"model/x": 2}),
+        _info("warm_other", capacity=4, idle_workers=4,
+              warm_idle={"model/y": 4}, warm_total={"model/y": 4}),
+    ]
+    r = WarmingAwareEndpointRouter()
+    assert r.select("model/x", eps) == "warm"
+    assert r.select("model/y", eps) == "warm_other"
+    # no warm anywhere: falls back to least loaded, not an error
+    assert r.select("model/z", eps) in {"cold", "warm", "warm_other"}
+
+
+def test_warming_aware_prefers_warm_busy_over_cold_start():
+    eps = [
+        _info("cold_idle", capacity=8, idle_workers=8),
+        _info("warm_busy", capacity=4, queued=1,
+              warm_total={"model/x": 3}),
+    ]
+    assert WarmingAwareEndpointRouter().select("model/x", eps) == "warm_busy"
+
+
+def test_least_loaded_normalizes_by_capacity():
+    eps = [
+        _info("big_busy", capacity=16, queued=16),       # load 1.0
+        _info("small_idle", capacity=2, queued=0),       # load 0.0
+        _info("small_swamped", capacity=2, queued=10),   # load 5.0
+    ]
+    assert LeastLoadedEndpointRouter().select("python", eps) == "small_idle"
+
+
+def test_routers_skip_disconnected_endpoints():
+    eps = [
+        _info("down", connected=False, capacity=8,
+              warm_idle={"python": 8}, warm_total={"python": 8}),
+        _info("up", capacity=2),
+    ]
+    for name in ("random", "least_loaded", "warming_aware"):
+        assert make_endpoint_router(name).select("python", eps) == "up"
+
+
+def test_random_router_covers_fleet():
+    eps = [_info(f"e{i}") for i in range(4)]
+    r = RandomEndpointRouter(seed=1)
+    picked = {r.select("python", eps) for _ in range(100)}
+    assert picked == {"e0", "e1", "e2", "e3"}
+
+
+# ----------------------------------------------------------------- integration
+
+def test_submit_without_endpoint_routes_and_completes(service, client):
+    fid = client.register_function(lambda d: d["i"] * 3)
+    _, a1 = service.make_endpoint(client.token, "ep1", n_managers=1)
+    _, a2 = service.make_endpoint(client.token, "ep2", n_managers=1)
+    ids = client.batch_run([(fid, None, {"i": i}) for i in range(10)])
+    assert client.get_batch_results(ids, timeout=30) == \
+        [3 * i for i in range(10)]
+    a1.stop()
+    a2.stop()
+
+
+def test_submit_without_endpoints_raises(service, client):
+    fid = client.register_function(lambda d: d)
+    with pytest.raises(EndpointUnavailable):
+        client.run(fid, None, data=1)
+
+
+def test_federation_warming_aware_picks_warm_endpoint():
+    svc = FuncXService(heartbeat_timeout=0.3, purge_on_get=False,
+                       endpoint_router="warming_aware")
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        svc.register_container(ContainerSpec("special",
+                                             build=lambda: {"m": 1}))
+        def probe(data, env):
+            return env["m"]
+        fid = cl.register_function(probe, container_type="special")
+        eid_warm, a1 = svc.make_endpoint(tok, "warm", n_managers=1,
+                                         workers_per_manager=1)
+        eid_cold, a2 = svc.make_endpoint(tok, "cold", n_managers=1,
+                                         workers_per_manager=1)
+        # warm one endpoint by targeting it directly...
+        assert cl.get_result(cl.run(fid, eid_warm, data={}), timeout=10) == 1
+        # ...and wait for its heartbeat to advertise the warm container
+        assert wait_until(
+            lambda: svc.pool.line(eid_warm).advertised.warm_idle.get(
+                "special", 0) > 0, timeout=5)
+        # routed submissions now all land on the warm endpoint
+        ids = [cl.run(fid, None, data={}) for _ in range(4)]
+        assert all(svc.get_task(t).endpoint_id == eid_warm for t in ids)
+        assert cl.get_batch_results(ids, timeout=30) == [1] * 4
+        assert all(not svc.get_task(t).cold_start for t in ids)
+        a1.stop()
+        a2.stop()
+    finally:
+        svc.shutdown()
+
+
+def test_batch_submit_groups_by_endpoint(service, client):
+    fid = client.register_function(lambda d: d["i"])
+    eid1, a1 = service.make_endpoint(client.token, "ep1", n_managers=1)
+    eid2, a2 = service.make_endpoint(client.token, "ep2", n_managers=1)
+    reqs = [(fid, [eid1, eid2, None][i % 3], {"i": i}) for i in range(12)]
+    ids = client.batch_run(reqs)
+    assert client.get_batch_results(ids, timeout=30) == list(range(12))
+    a1.stop()
+    a2.stop()
+
+
+def test_routed_batch_spreads_over_fleet():
+    """A routed batch must not collapse onto the momentary best endpoint:
+    each pick feeds back into the batch-local snapshot."""
+    svc = FuncXService(heartbeat_timeout=0.5, endpoint_router="least_loaded")
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(lambda d: d)
+        eids = [svc.register_endpoint(tok, f"ep{i}")[0] for i in range(4)]
+        cl.batch_run([(fid, None, i) for i in range(12)])
+        per_ep = [svc.pool.line(e).queue_len() +
+                  svc.pool.line(e).in_flight_count() for e in eids]
+        assert per_ep == [3, 3, 3, 3]
+    finally:
+        svc.shutdown()
+
+
+def test_failed_batch_orphans_no_tasks(service, client):
+    """A bad request anywhere in the batch fails the whole call before any
+    task is stored — nothing is left PENDING and unreachable."""
+    from repro.core import RegistrationError
+    fid = client.register_function(lambda d: d)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    n_before = len(service.tasks)
+    with pytest.raises(RegistrationError):
+        client.batch_run([(fid, eid, 1), ("no-such-function", eid, 2)])
+    assert len(service.tasks) == n_before
+    assert service.pool.line(eid).queue_len() == 0
+    agent.stop()
+
+
+def test_batch_submit_validates_token_once(service, client, monkeypatch):
+    fid = client.register_function(lambda d: d["i"])
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1)
+    calls = []
+    orig = service.auth.validate
+    monkeypatch.setattr(service.auth, "validate",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    ids = service.submit_batch(client.token,
+                               [(fid, eid, {"i": i}) for i in range(16)])
+    assert len(calls) == 1
+    assert client.get_batch_results(ids, timeout=30) == list(range(16))
+    agent.stop()

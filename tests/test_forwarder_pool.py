@@ -1,0 +1,133 @@
+"""ForwarderPool (DESIGN.md §3): O(1) service threads for N endpoints,
+multiplexed dispatch, requeue ordering on disconnect, and pool restart
+carrying in-flight tasks."""
+import threading
+import time
+
+import pytest
+
+from repro.core import EndpointAgent, FuncXClient, FuncXService, TaskStatus
+from conftest import wait_until
+
+
+def test_o1_service_threads_for_many_endpoints(service, client):
+    """Registering N endpoints must not grow the service tier: the pool's
+    three loops + the health thread serve everyone (the seed spawned 3
+    dedicated threads per endpoint)."""
+    before = {t.name for t in threading.enumerate()}
+    for i in range(12):
+        service.register_endpoint(client.token, f"ep{i}")
+    after = {t.name for t in threading.enumerate()}
+    assert after - before == set(), "registration spawned service threads"
+    # the constant service tier is exactly the pool loops + health check
+    svc_threads = [n for n in after
+                   if n.startswith("pool-") or n == "svc-health"]
+    assert sorted(svc_threads) == ["pool-dispatch", "pool-monitor",
+                                   "pool-recv", "svc-health"]
+
+
+def test_multiplexed_dispatch_across_8_endpoints(service, client):
+    fid = client.register_function(lambda d: d["i"] * 10)
+    eps, agents = [], []
+    for i in range(8):
+        eid, agent = service.make_endpoint(client.token, f"ep{i}",
+                                           n_managers=1,
+                                           workers_per_manager=2)
+        eps.append(eid)
+        agents.append(agent)
+    ids = client.batch_run([(fid, eps[i % 8], {"i": i}) for i in range(48)])
+    assert client.get_batch_results(ids, timeout=30) == \
+        [i * 10 for i in range(48)]
+    # every endpoint got its share through the one dispatch loop
+    for eid in eps:
+        assert service.pool.line(eid).dispatched > 0
+    assert service.pool.dispatched >= 48
+    for a in agents:
+        a.stop()
+
+
+def test_requeue_preserves_fifo_order_on_heartbeat_loss(service, client):
+    """Endpoint with no agent: dispatched tasks sit in flight, the silent
+    heartbeat trips the monitor, and the in-flight set returns to the head
+    of the queue in original dispatch order."""
+    fid = client.register_function(lambda d: d)
+    eid, _ch = service.register_endpoint(client.token, "ep")
+    line = service.pool.line(eid)
+    ids = client.batch_run([(fid, eid, i) for i in range(6)])
+    assert wait_until(lambda: line.in_flight_count() == 6, timeout=5)
+    assert wait_until(lambda: not line.endpoint_connected, timeout=5)
+    assert line.in_flight_count() == 0
+    assert list(line.queue) == ids                # FIFO order preserved
+    assert line.requeues == 6
+    assert all(service.get_task(t).status is TaskStatus.PENDING
+               for t in ids)
+
+
+def test_disconnect_requeue_then_reconnect_completes_in_order(service,
+                                                             client):
+    """Channel partition mid-stream: requeued work flows again after the
+    endpoint reconnects, single worker ⇒ completion order == FIFO."""
+    seen = []
+    fid = client.register_function(lambda d: seen.append(d["i"]) or d["i"])
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=1)
+    rec = service.endpoints[eid]
+    rec.channel.disconnect()
+    ids = client.batch_run([(fid, eid, {"i": i}) for i in range(5)])
+    assert wait_until(lambda: not rec.connected, timeout=5)
+    rec.channel.reconnect()
+    assert client.get_batch_results(ids, timeout=30) == list(range(5))
+    assert seen == sorted(seen)
+    agent.stop()
+
+
+def test_pool_restart_requeues_in_flight(service, client):
+    """Satellite fix: a pool restart must not drop tasks that were already
+    dispatched — they are requeued (ahead of undelivered queue) and run
+    once an agent serves the endpoint."""
+    fid = client.register_function(lambda d: d["i"] + 100)
+    eid, channel = service.register_endpoint(client.token, "ep")
+    ids = client.batch_run([(fid, eid, {"i": i}) for i in range(3)])
+    old_pool = service.pool
+    assert wait_until(
+        lambda: old_pool.line(eid).in_flight_count() == 3, timeout=5)
+    # partition the channel so the restarted pool cannot re-dispatch
+    # before we observe the carried-over queue
+    channel.disconnect()
+    old_pool._stop.set()                 # crash the pool with tasks in flight
+    assert wait_until(lambda: service.pool is not old_pool, timeout=5)
+    line = service.pool.line(eid)
+    assert list(line.queue) == ids       # carried over, dispatch order kept
+    assert line.requeues == 3
+    assert all(service.get_task(t).status is TaskStatus.PENDING
+               for t in ids)
+    # late-attach an agent on the same channel: the tasks drain
+    channel.reconnect()
+    agent = EndpointAgent(eid, channel, service.export_function,
+                          registry=service.containers,
+                          heartbeat_interval=service.heartbeat_timeout / 5)
+    agent.add_manager(n_workers=2)
+    agent.start()
+    assert sorted(client.get_batch_results(ids, timeout=30)) == \
+        [100, 101, 102]
+    agent.stop()
+
+
+def test_heartbeat_advertises_load_and_warm_state(service, client):
+    from repro.core import ContainerSpec
+    service.register_container(ContainerSpec("special",
+                                             build=lambda: {"m": 1}))
+    def probe(data, env):
+        return env["m"]
+    fid = client.register_function(probe, container_type="special")
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=2,
+                                       workers_per_manager=2)
+    # capacity shows up via heartbeats even before any task
+    assert wait_until(
+        lambda: service.pool.line(eid).advertised.capacity == 4, timeout=5)
+    assert client.get_result(client.run(fid, eid, data={}), timeout=10) == 1
+    # ...and the warmed container type is advertised afterwards
+    assert wait_until(
+        lambda: service.pool.line(eid).advertised.warm_total.get(
+            "special", 0) > 0, timeout=5)
+    agent.stop()

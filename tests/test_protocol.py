@@ -1,0 +1,78 @@
+"""Typed wire protocol (DESIGN.md §1): every message kind round-trips
+through to_wire/from_wire and survives the serialization facade (the
+actual channel transport)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Ack,
+    Channel,
+    Heartbeat,
+    ProtocolError,
+    ResultMsg,
+    TaskBatch,
+    TaskSpec,
+    from_wire,
+    to_wire,
+)
+
+MESSAGES = [
+    TaskBatch(tasks=[
+        TaskSpec(task_id="t1", function_id="f1", container_type="python",
+                 payload={"x": 1}, stamps={"endpoint_recv": 1.5}),
+        TaskSpec(task_id="t2", function_id="f2", container_type="model/a",
+                 payload=None),
+    ]),
+    Ack(task_ids=["t1", "t2"], t_endpoint_recv=12.25),
+    Heartbeat(endpoint_id="ep1", ts=99.0, queued=3, idle_workers=2,
+              capacity=8, warm_idle={"python": 2},
+              warm_total={"python": 4, "model/a": 1}),
+    ResultMsg(task_id="t1", status="SUCCESS", result={"y": 2},
+              stamps={"worker_start": 1.0, "worker_end": 2.0},
+              cold_start=True, build_time=0.5, worker_id="w0",
+              manager_id="m0"),
+    ResultMsg(task_id="t2", status="FAILED", error="boom",
+              remote_traceback="Traceback ..."),
+    ResultMsg(task_id="t3", status="LOST", error="lost after 2 retries"),
+]
+
+
+@pytest.mark.parametrize("msg", MESSAGES, ids=lambda m: type(m).__name__)
+def test_roundtrip_direct(msg):
+    assert from_wire(to_wire(msg)) == msg
+
+
+@pytest.mark.parametrize("msg", MESSAGES, ids=lambda m: type(m).__name__)
+def test_roundtrip_through_channel(msg):
+    ch = Channel()
+    assert ch.send_to_service(to_wire(msg), tag=type(msg).kind)
+    env, tag = ch.recv_at_service(timeout=1)
+    assert tag == type(msg).kind
+    assert from_wire(env) == msg
+
+
+def test_array_payload_roundtrips_through_channel():
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    batch = TaskBatch(tasks=[TaskSpec(task_id="t", function_id="f",
+                                      container_type="python",
+                                      payload={"arr": arr})])
+    ch = Channel()
+    ch.send_to_endpoint(to_wire(batch), tag="tasks")
+    env, _ = ch.recv_at_endpoint(timeout=1)
+    out = from_wire(env)
+    np.testing.assert_array_equal(out.tasks[0].payload["arr"], arr)
+
+
+def test_resolved_is_endpoint_internal_only():
+    spec = TaskSpec(task_id="t", function_id="f", container_type="python",
+                    resolved=(lambda: None, False))
+    wire = to_wire(TaskBatch(tasks=[spec]))
+    assert "resolved" not in wire["tasks"][0]
+    assert from_wire(wire).tasks[0].resolved is None
+
+
+def test_unknown_wire_type_rejected():
+    with pytest.raises(ProtocolError):
+        from_wire({"type": "no_such_kind"})
+    with pytest.raises(ProtocolError):
+        to_wire(object())

@@ -2,6 +2,8 @@
 buffers, routing tags, bf16 arrays, compression."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # not in all images
 from hypothesis import given, settings, strategies as st
 
 from repro.serialization import pack, peek_tag, unpack, unpack_full

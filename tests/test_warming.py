@@ -3,6 +3,8 @@ allocation."""
 import time
 
 import pytest
+
+pytest.importorskip("hypothesis")  # not in all images
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ContainerRegistry, ContainerSpec, WarmCache
