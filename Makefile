@@ -1,19 +1,23 @@
 # One-command entry points for the suite and benchmarks.
 #
-#   make test         tier-1 test suite (ROADMAP.md verify command)
-#   make bench-smoke  scaling benchmark in tiny mode (seconds, not minutes)
-#   make bench        full benchmark harness
+#   make test                 tier-1 test suite (ROADMAP.md verify command)
+#   make bench-smoke          scaling benchmark in tiny mode (seconds)
+#   make bench-serialization  §4.5 pack-once data plane benchmarks
+#   make bench                full benchmark harness (writes BENCH_2.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench-smoke bench
+.PHONY: test bench-smoke bench-serialization bench
 
 test:
 	python -m pytest -x -q
 
 bench-smoke:
 	python -m benchmarks.run --only fig4_scaling --tiny
+
+bench-serialization:
+	python -m benchmarks.run --only sec4.5_serialization
 
 bench:
 	python -m benchmarks.run

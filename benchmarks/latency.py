@@ -11,6 +11,7 @@ def run(n_tasks: int = 200, full: bool = False) -> None:
     if full:
         n_tasks = 1000
     from repro.core import FuncXClient, FuncXService
+    from repro.serialization import stats
 
     svc = FuncXService(heartbeat_timeout=0.5, purge_on_get=False)
     try:
@@ -23,6 +24,7 @@ def run(n_tasks: int = 200, full: bool = False) -> None:
         for _ in range(10):
             client.get_result(client.run(fid, eid, data={}), timeout=10)
         parts = {k: [] for k in ("t_s", "t_f", "t_e", "t_w", "t_r", "total")}
+        stats.reset()
         for _ in range(n_tasks):
             tid = client.run(fid, eid, data={})
             client.get_result(tid, timeout=10)
@@ -34,6 +36,16 @@ def run(n_tasks: int = 200, full: bool = False) -> None:
             emit(f"fig3/latency/{k}", float(np.mean(vals)) * 1e6,
                  f"p50={np.percentile(vals, 50)*1e6:.0f}us "
                  f"p99={np.percentile(vals, 99)*1e6:.0f}us n={len(vals)}")
+        # pack-once gauge (DESIGN.md §5): the same tasks whose latency was
+        # just decomposed must have cost exactly one payload serialization
+        # and one payload decode each.
+        s = stats.snapshot()
+        emit("fig3/latency/payload_packs_per_task",
+             s["packs_by_tag"].get("task", 0) / n_tasks,
+             f"n={n_tasks} (invariant: exactly 1.0)")
+        emit("fig3/latency/payload_unpacks_per_task",
+             s["unpacks_by_tag"].get("task", 0) / n_tasks,
+             f"n={n_tasks} (invariant: exactly 1.0)")
         agent.stop()
     finally:
         svc.shutdown()

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..serialization import PackedBuffer, pack_buffer
 from .auth import Token
 from .batching import DynamicBatcher
 from .service import FuncXService
@@ -19,6 +20,16 @@ class FuncXClient:
     def __init__(self, service: FuncXService, token: Token):
         self.service = service
         self.token = token
+
+    # -- pack-once fan-out (DESIGN.md §5) --------------------------------------
+    @staticmethod
+    def pack_payload(data: Any) -> PackedBuffer:
+        """Pre-pack a payload once on the client. The resulting buffer can
+        be passed as ``data`` to :meth:`run` / :meth:`batch_run` any number
+        of times — the service recognizes it and ships the same bytes to
+        every endpoint without re-serializing (the fan-out analogue of
+        ProxyStore's move-the-reference pattern)."""
+        return pack_buffer(data, tag="task")
 
     # -- registration ---------------------------------------------------------
     def register_function(self, fn: Callable, *, name: Optional[str] = None,

@@ -9,6 +9,14 @@ requeue-on-disconnect and heartbeat-loss behaviours.
 ``ChannelHub`` is the select()-style multiplexer on top: one thread polls
 the service side of many channels at once (the transport substrate for the
 ForwarderPool — O(1) service threads for N endpoints).
+
+Pack-once data plane (DESIGN.md §5): envelopes are protocol dicts whose
+user data is already an opaque byte frame, so ``send_*`` packs them with a
+``msgpack`` method hint (one C-speed encode, no trial loop, no payload
+re-serialization); a caller may also hand over an already-packed
+``PackedBuffer`` which is forwarded byte-identical. ``ChannelHub.poll``
+returns *packed* buffers — routing happens on the header tag alone and
+deserialization is deferred to the consumer.
 """
 from __future__ import annotations
 
@@ -18,7 +26,12 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-from ..serialization import pack, unpack
+from ..serialization import (
+    PackedBuffer,
+    SerializationError,
+    pack_buffer,
+    unpack,
+)
 
 
 class ChannelClosed(Exception):
@@ -58,11 +71,21 @@ class Channel:
     def _maybe_drop(self) -> bool:
         return self.drop_rate > 0 and self._rng.random() < self.drop_rate
 
+    @staticmethod
+    def _pack_envelope(obj: Any, tag: str) -> bytes:
+        """Wire bytes for one message. Pre-packed buffers pass through
+        untouched; envelope dicts get a msgpack method hint (protocol
+        envelopes are plain dicts with bin frames — the hint skips the
+        nd tree walk, and a hint miss still falls back to the trial)."""
+        if isinstance(obj, PackedBuffer):
+            return obj.data
+        return pack_buffer(obj, tag=tag, method_hint="msgpack").data
+
     # -- service → endpoint -----------------------------------------------------
     def send_to_endpoint(self, obj: Any, tag: str = "") -> bool:
         if not self.connected or self._maybe_drop():
             return False
-        buf = pack(obj, tag=tag)
+        buf = self._pack_envelope(obj, tag)
         self.bytes_to_endpoint += len(buf)
         self._to_endpoint.put(buf)
         return True
@@ -72,13 +95,16 @@ class Channel:
             buf = self._to_endpoint.get(timeout=timeout)
         except queue.Empty:
             return None
-        return unpack(buf)
+        try:
+            return unpack(buf)
+        except SerializationError:
+            return None                        # poison frame: drop
 
     # -- endpoint → service -----------------------------------------------------
     def send_to_service(self, obj: Any, tag: str = "") -> bool:
         if not self.connected or self._maybe_drop():
             return False
-        buf = pack(obj, tag=tag)
+        buf = self._pack_envelope(obj, tag)
         self.bytes_to_service += len(buf)
         self._to_service.put(buf)
         hub = self._hub
@@ -91,7 +117,10 @@ class Channel:
             buf = self._to_service.get(timeout=timeout)
         except queue.Empty:
             return None
-        return unpack(buf)
+        try:
+            return unpack(buf)
+        except SerializationError:
+            return None                        # poison frame: drop
 
     def pending_to_service(self) -> int:
         return self._to_service.qsize()
@@ -139,10 +168,14 @@ class ChannelHub:
     def _notify(self, key: str) -> None:
         self._ready.put(key)
 
-    def poll(self, timeout: float = 0.1) -> List[Tuple[str, tuple]]:
+    def poll(self, timeout: float = 0.1) -> List[Tuple[str, PackedBuffer]]:
         """Block up to ``timeout`` for readiness, then drain everything
-        already ready. Returns ``[(key, (message, tag)), ...]``."""
-        out: List[Tuple[str, tuple]] = []
+        already ready. Returns ``[(key, PackedBuffer), ...]`` — messages
+        stay *packed*: the buffer's header tag is enough to route, and the
+        consumer decides when (whether) to deserialize (§4.5: "only the
+        buffers need to be unpacked and deserialized at the destination").
+        """
+        out: List[Tuple[str, PackedBuffer]] = []
         try:
             key = self._ready.get(timeout=timeout)
         except queue.Empty:
@@ -153,14 +186,21 @@ class ChannelHub:
                 pending.append(self._ready.get_nowait())
             except queue.Empty:
                 break
+        # one snapshot of the channel map per poll, not one lock round-trip
+        # per ready token
+        with self._lock:
+            channels = dict(self._channels)
         for key in pending:
-            with self._lock:
-                ch = self._channels.get(key)
+            ch = channels.get(key)
             if ch is None:
                 continue
             try:
                 buf = ch._to_service.get_nowait()
             except queue.Empty:
                 continue                       # duplicate/stale token
-            out.append((key, unpack(buf)))
+            try:
+                out.append((key, PackedBuffer.from_bytes(buf)))
+            except SerializationError:
+                continue                       # poison frame: drop, don't
+                #                                kill the shared poller
         return out

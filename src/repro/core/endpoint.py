@@ -24,7 +24,14 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
-from ..data import KVStore, TransferService, resolve_inputs, stage_outputs
+from ..data import (
+    KVStore,
+    SERVICE_PAYLOAD_LIMIT,
+    TransferService,
+    resolve_inputs,
+    stage_outputs,
+)
+from ..serialization import PackedBuffer, SerializationError, pack_buffer
 from .comms import Channel
 from .manager import Manager
 from .protocol import (
@@ -173,8 +180,8 @@ class EndpointAgent:
             env, _tag = wire
             try:
                 msg = from_wire(env)
-            except ProtocolError:
-                continue
+            except (ProtocolError, SerializationError):
+                continue           # poison message: drop, keep the loop
             if isinstance(msg, TaskBatch):
                 t_recv = now()
                 for spec in msg.tasks:
@@ -207,8 +214,19 @@ class EndpointAgent:
             fn, wants_env = self._resolve_fn(spec.function_id)
             payload = spec.payload
             if self.store is not None:
-                payload = resolve_inputs(payload, self.endpoint_id,
-                                         self.store, self.transfer)
+                if isinstance(payload, PackedBuffer):
+                    # Pack-once plane: the payload stays an opaque frame
+                    # unless it *can* contain DataRefs. Refs only survive
+                    # serialization via pickle (nd/msgpack/json reject the
+                    # dataclass), so the header method — no payload decode
+                    # — decides whether stage-in must look inside.
+                    if payload.method == "pickle":
+                        payload = resolve_inputs(
+                            payload.unpack(), self.endpoint_id,
+                            self.store, self.transfer)
+                else:
+                    payload = resolve_inputs(payload, self.endpoint_id,
+                                             self.store, self.transfer)
         return WorkItem(
             task_id=spec.task_id,
             container_type=spec.container_type,
@@ -279,10 +297,46 @@ class EndpointAgent:
             self._durations.append(time.perf_counter() - disp[0])
         self.tasks_completed += 1
         result = res.result
-        if (res.status == "SUCCESS" and self.stage_results
-                and self.store is not None):
-            result = stage_outputs(result, self.endpoint_id, self.store,
-                                   key_prefix=f"task/{res.task_id}")
+        if res.status == "SUCCESS":
+            # Pack the result exactly once (DESIGN.md §5). The same bytes
+            # serve the stage-out size decision, the store write (if the
+            # result is parked behind a DataRef), and the wire frame; the
+            # service stores them opaquely and get_result decodes once.
+            try:
+                packed = pack_buffer(result, tag="ret")
+            except Exception as e:
+                # Unserializable result. A store with object semantics
+                # (DeviceStore) can still park the *live* object behind a
+                # DataRef — the pre-PR escape hatch for device-resident
+                # results; otherwise the task fails with the real reason.
+                staged = None
+                if self.stage_results and self.store is not None:
+                    try:
+                        staged = stage_outputs(
+                            result, self.endpoint_id, self.store,
+                            key_prefix=f"task/{res.task_id}")
+                    except Exception:
+                        staged = None
+                if staged is None or staged is result:
+                    self._send_failure(
+                        res.task_id,
+                        f"result serialization: {type(e).__name__}: {e}")
+                    return
+                self.channel.send_to_service(to_wire(ResultMsg(
+                    task_id=res.task_id, status=res.status,
+                    result=pack_buffer(staged, tag="ret"),
+                    error=res.error, remote_traceback=res.remote_traceback,
+                    stamps=res.stamps, cold_start=res.cold_start,
+                    build_time=res.build_time, worker_id=res.worker_id,
+                    manager_id=manager_id)), tag="result")
+                return
+            if (self.stage_results and self.store is not None
+                    and len(packed) > SERVICE_PAYLOAD_LIMIT):
+                staged = stage_outputs(result, self.endpoint_id, self.store,
+                                       key_prefix=f"task/{res.task_id}",
+                                       packed=packed)
+                packed = pack_buffer(staged, tag="ret")   # tiny DataRef
+            result = packed
         self.channel.send_to_service(to_wire(ResultMsg(
             task_id=res.task_id, status=res.status, result=result,
             error=res.error, remote_traceback=res.remote_traceback,

@@ -19,6 +19,7 @@ import threading
 import time
 from typing import Deque, Dict, List, Optional, Tuple
 
+from ..serialization import SerializationError
 from .comms import Channel, ChannelHub
 from .protocol import (
     Ack,
@@ -244,15 +245,20 @@ class ForwarderPool:
                 line.queue.extendleft(reversed([s.task_id for s in specs]))
 
     def _recv_loop(self) -> None:
+        """Drains the hub. Messages arrive *packed*; the routing tag comes
+        from the buffer header (peek, no payload deserialization), and only
+        the protocol envelope is decoded here — task/result payloads inside
+        it stay opaque byte frames until their consumer unpacks them
+        (pack-once plane, DESIGN.md §5)."""
         while not self._stop.is_set():
-            for eid, (env, _tag) in self.hub.poll(timeout=0.05):
+            for eid, buf in self.hub.poll(timeout=0.05):
                 with self._lock:
                     line = self._lines.get(eid)
                 if line is None:
                     continue
                 try:
-                    msg = from_wire(env)
-                except ProtocolError:
+                    msg = from_wire(buf.unpack())
+                except (ProtocolError, SerializationError):
                     continue
                 if isinstance(msg, Heartbeat):
                     self._handle_heartbeat(line, msg)

@@ -14,11 +14,21 @@ Wire kinds:
   ``heartbeat``   endpoint → service   liveness + load/warm-container
                                        advertisement (feeds federation routing)
   ``result``      endpoint → service   one task outcome
+
+Pack-once data plane (DESIGN.md §5): task payloads and result values that
+are already :class:`~repro.serialization.PackedBuffer`\\ s travel inside the
+envelope as **opaque byte frames** (msgpack bin — one memcpy, zero
+re-serialization) under the ``payload_b`` / ``result_b`` keys, and are
+re-wrapped as PackedBuffers on decode without touching the payload bytes.
+Plain objects keep the legacy inline embedding, so hand-built messages and
+endpoint-internal requeues are unaffected.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field, fields
 from typing import Any, ClassVar, Dict, List, Optional, Tuple
+
+from ..serialization import PackedBuffer
 
 
 class ProtocolError(Exception):
@@ -38,15 +48,22 @@ class TaskSpec:
     resolved: Optional[Tuple] = None
 
     def to_dict(self) -> dict:
-        return {"task_id": self.task_id, "function_id": self.function_id,
-                "container_type": self.container_type,
-                "payload": self.payload, "stamps": self.stamps}
+        d = {"task_id": self.task_id, "function_id": self.function_id,
+             "container_type": self.container_type, "stamps": self.stamps}
+        if isinstance(self.payload, PackedBuffer):
+            d["payload_b"] = self.payload.data      # opaque frame, no re-pack
+        else:
+            d["payload"] = self.payload
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "TaskSpec":
+        pb = d.get("payload_b")
+        payload = (PackedBuffer.from_bytes(pb) if pb is not None
+                   else d.get("payload"))
         return cls(task_id=d["task_id"], function_id=d["function_id"],
                    container_type=d["container_type"],
-                   payload=d.get("payload"), stamps=dict(d.get("stamps", {})))
+                   payload=payload, stamps=dict(d.get("stamps", {})))
 
 
 @dataclass
@@ -108,6 +125,9 @@ def to_wire(msg) -> dict:
         return env
     for f in fields(msg):
         env[f.name] = getattr(msg, f.name)
+    if isinstance(msg, ResultMsg) and isinstance(msg.result, PackedBuffer):
+        env["result_b"] = msg.result.data           # opaque frame, no re-pack
+        env["result"] = None
     return env
 
 
@@ -121,4 +141,6 @@ def from_wire(env: dict):
         return TaskBatch(tasks=[TaskSpec.from_dict(t)
                                 for t in env.get("tasks", [])])
     kwargs = {f.name: env[f.name] for f in fields(cls) if f.name in env}
+    if cls is ResultMsg and env.get("result_b") is not None:
+        kwargs["result"] = PackedBuffer.from_bytes(env["result_b"])
     return cls(**kwargs)

@@ -24,7 +24,7 @@ from ..data import (
     KVStore,
     TransferService,
 )
-from ..serialization import pack
+from ..serialization import PackedBuffer, pack_buffer
 from .auth import (
     ALL_SCOPES,
     AuthService,
@@ -275,8 +275,12 @@ class FuncXService:
         return eid
 
     # ------------------------------------------------------------------- submit
-    def _check_request(self, identity: str, function_id: str,
-                       payload: Any) -> RegisteredFunction:
+    def _check_request(self, identity: str, function_id: str, payload: Any
+                       ) -> Tuple[RegisteredFunction, PackedBuffer]:
+        """Validate + **pack once** (DESIGN.md §5): the same bytes serve the
+        10 MB limit check and then travel the whole pipeline — the task, the
+        wire envelope's opaque frame, and the worker's lazy unpack. A
+        pre-packed payload (client fan-out) passes through byte-identical."""
         with self._lock:
             rf = self.functions.get(function_id)
         if rf is None:
@@ -284,18 +288,18 @@ class FuncXService:
         if not rf.authorized(identity):
             raise AuthError(
                 f"{identity} is not authorized to run {rf.name}")
-        size = len(pack(payload))
-        if size > self.payload_limit:
+        packed = pack_buffer(payload, tag="task")
+        if len(packed) > self.payload_limit:
             raise PayloadTooLarge(
-                f"payload {size}B > {self.payload_limit}B; stage via "
+                f"payload {len(packed)}B > {self.payload_limit}B; stage via "
                 f"DataRef + TransferService (paper §5.1)")
-        return rf
+        return rf, packed
 
     def submit(self, token: Token, function_id: str,
                endpoint_id: Optional[str] = None, payload: Any = None, *,
                container_type: Optional[str] = None) -> str:
         identity = self.auth.validate(token, SCOPE_RUN)
-        rf = self._check_request(identity, function_id, payload)
+        rf, packed = self._check_request(identity, function_id, payload)
         ct = container_type or rf.container_type
         if endpoint_id is None:
             endpoint_id = self.route_endpoint(ct)
@@ -304,7 +308,7 @@ class FuncXService:
         if rec is None:
             raise EndpointUnavailable(f"unknown endpoint {endpoint_id}")
         task = Task(function_id=function_id, endpoint_id=endpoint_id,
-                    payload=payload, container_type=ct)
+                    payload=packed, container_type=ct)
         task.stamp("submit")
         self.tasks.put(task)
         self.pool.enqueue(endpoint_id, task.task_id)
@@ -324,9 +328,9 @@ class FuncXService:
         enqueued in a single pass — not one lock round-trip per task."""
         identity = self.auth.validate(token, SCOPE_RUN)
         snapshot: Optional[List[EndpointInfo]] = None
-        checked: List[Tuple[str, str, Any, str]] = []
+        checked: List[Tuple[str, str, PackedBuffer, str]] = []
         for fid, eid, payload in requests:
-            rf = self._check_request(identity, fid, payload)
+            rf, packed = self._check_request(identity, fid, payload)
             ct = rf.container_type
             if eid is None:
                 if snapshot is None:
@@ -334,11 +338,11 @@ class FuncXService:
                 eid = self._route_from_snapshot(ct, snapshot)
             elif eid not in self.endpoints:
                 raise EndpointUnavailable(f"unknown endpoint {eid}")
-            checked.append((fid, eid, payload, ct))
+            checked.append((fid, eid, packed, ct))
         tasks: List[Task] = []
         per_endpoint: Dict[str, List[str]] = {}
-        for fid, eid, payload, ct in checked:
-            task = Task(function_id=fid, endpoint_id=eid, payload=payload,
+        for fid, eid, packed, ct in checked:
+            task = Task(function_id=fid, endpoint_id=eid, payload=packed,
                         container_type=ct)
             task.stamp("submit")
             self.tasks.put(task)
@@ -364,7 +368,7 @@ class FuncXService:
         task = self.tasks.get(task_id)
         try:
             if task.status == TaskStatus.SUCCESS:
-                return task.result
+                return task.result_value()        # decode-once (DESIGN.md §5)
             if task.status == TaskStatus.LOST:
                 raise TaskLost(task.error or "task lost")
             raise TaskFailure(task.error or "task failed",

@@ -35,7 +35,8 @@ def now() -> float:
 class Task:
     function_id: str
     endpoint_id: str
-    payload: Any                       # packed args (bytes) or small object
+    payload: Any                       # PackedBuffer (pack-once plane) or a
+    #                                    plain object on legacy/test paths
     container_type: str                # compile signature / container image
     task_id: str = field(default_factory=lambda: str(uuid.uuid4()))
     status: TaskStatus = TaskStatus.PENDING
@@ -67,6 +68,17 @@ class Task:
             "t_r": get("worker_end", "result_stored"),
             "total": get("submit", "result_stored"),
         }
+
+    def result_value(self) -> Any:
+        """The decoded result. Results arrive as opaque PackedBuffers and
+        stay packed at rest; the first read decodes once and *replaces*
+        the buffer with the object — retaining both the wire bytes and
+        the decoded value (e.g. under purge_on_get=False) would double
+        result memory for nothing."""
+        from ..serialization import PackedBuffer
+        if isinstance(self.result, PackedBuffer):
+            self.result = self.result.unpack()
+        return self.result
 
     @property
     def done(self) -> bool:

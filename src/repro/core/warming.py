@@ -158,6 +158,19 @@ class WarmCache:
                     n += 1
         return n
 
+    def next_reap_deadline(self) -> Optional[float]:
+        """``time.perf_counter()`` moment the oldest-idle warm container
+        becomes reapable, or None when there is nothing to reap. Lets the
+        worker loop block until a deadline instead of polling ``reap()``
+        on every idle wakeup."""
+        if self.idle_timeout is None:
+            return None
+        with self._lock:
+            if not self._warm:
+                return None
+            oldest = min(c.last_used for c in self._warm.values())
+        return oldest + self.idle_timeout
+
     def drop(self, container_type: str) -> None:
         with self._lock:
             self._warm.pop(container_type, None)

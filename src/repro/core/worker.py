@@ -11,10 +11,16 @@ import traceback
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
+from ..serialization import PackedBuffer
 from .tasks import now
 from .warming import ContainerRegistry, WarmCache
 
 _WARMUP = object()        # sentinel inbox item: pre-build a container
+
+# Idle inbox wait. Long enough that an idle worker sleeps instead of
+# spinning at 20 Hz; short enough that stop()/kill() and warm-cache reap
+# deadlines are honoured promptly.
+_IDLE_WAIT = 0.5
 
 
 @dataclass
@@ -82,16 +88,27 @@ class Worker(threading.Thread):
     def warm_types(self):
         return self.cache.warm_types()
 
+    def _idle_wait(self) -> float:
+        """How long the loop may block on the inbox: until the next warm
+        container hits its idle timeout (so reaping happens on a deadline,
+        not on every 20 Hz wakeup), capped at ``_IDLE_WAIT``."""
+        deadline = self.cache.next_reap_deadline()
+        if deadline is None:
+            return _IDLE_WAIT
+        return min(max(deadline - time.perf_counter(), 0.005), _IDLE_WAIT)
+
     # -- loop --------------------------------------------------------------------
     def run(self) -> None:
         while not self._stop.is_set():
             try:
-                item = self.inbox.get(timeout=0.05)
+                item = self.inbox.get(timeout=self._idle_wait())
             except queue.Empty:
                 if not self.inbox.empty():
                     continue
                 self.busy.clear()
-                self.cache.reap()
+                deadline = self.cache.next_reap_deadline()
+                if deadline is not None and time.perf_counter() >= deadline:
+                    self.cache.reap()
                 continue
             if self._killed:
                 return
@@ -111,10 +128,17 @@ class Worker(threading.Thread):
         try:
             if self.slowdown:
                 time.sleep(self.slowdown)
+            # Lazy unpack (DESIGN.md §5): the payload crossed every hop as
+            # an opaque frame; this is its single decode, at the consumer,
+            # just before the call. The buffer caches the decoded object,
+            # so a speculative or requeued re-delivery costs no re-decode.
+            payload = item.payload
+            if isinstance(payload, PackedBuffer):
+                payload = payload.unpack()
             if item.wants_env:
-                result = item.fn(item.payload, container.env)
+                result = item.fn(payload, container.env)
             else:
-                result = item.fn(item.payload)
+                result = item.fn(payload)
             status, error, tb = "SUCCESS", None, ""
         except Exception as e:              # noqa: BLE001 — remote fault
             result = None

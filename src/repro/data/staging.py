@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
-from ..serialization import pack
+from ..serialization import PackedBuffer, pack_buffer
 from .store import KVStore
 from .transfer import DataRef, TransferService, TransferStatus
 
@@ -47,15 +47,30 @@ def resolve_inputs(obj: Any, endpoint_id: str, store: KVStore,
 
 def stage_outputs(result: Any, endpoint_id: str, store: KVStore,
                   key_prefix: str,
-                  limit: int = SERVICE_PAYLOAD_LIMIT) -> Any:
+                  limit: int = SERVICE_PAYLOAD_LIMIT,
+                  packed: Optional[PackedBuffer] = None) -> Any:
     """If the serialized result exceeds the service limit, park it in the
-    endpoint store and return a DataRef instead (stage-out)."""
-    try:
-        size = len(pack(result))
-    except Exception:
-        size = limit + 1
-    if size <= limit:
+    endpoint store and return a DataRef instead (stage-out).
+
+    ``packed`` is the pack-once fast path: when the caller already holds
+    the result's wire buffer (the endpoint packs every result exactly once
+    before shipping it), its length decides the threshold and its *bytes*
+    are what lands in the store — no second serialization either way."""
+    if packed is None:
+        try:
+            packed = pack_buffer(result, tag=f"{key_prefix}/result")
+        except Exception:
+            packed = None
+    if packed is not None and len(packed) <= limit:
         return result
     key = f"{key_prefix}/result"
-    store.set(key, result)
+    # The raw-bytes write is only valid for stores whose ``get`` decodes
+    # what ``set_raw`` wrote (the KVStore base behaviour). DeviceStore
+    # overrides ``get`` with live-object semantics — handing it wire bytes
+    # would surface headered bytes to the consumer AND forfeit its
+    # keep-arrays-on-device purpose, so it takes the object path.
+    if packed is not None and type(store).get is KVStore.get:
+        store.set_raw(key, packed.data)      # same bytes, no re-pack
+    else:
+        store.set(key, result)
     return DataRef("globus", endpoint_id, key)

@@ -99,9 +99,11 @@ class InMemoryKVStore(KVStore):
             while self.max_bytes and self._bytes > self.max_bytes and self._data:
                 _, (old, _e) = self._data.popitem(last=False)
                 self._bytes -= len(old)
-        self.stats.sets += 1
-        self.stats.bytes_in += len(data)
-        self.stats.set_time += time.perf_counter() - t0
+            # stats mutate under the same lock — concurrent setters would
+            # otherwise lose read-modify-write increments
+            self.stats.sets += 1
+            self.stats.bytes_in += len(data)
+            self.stats.set_time += time.perf_counter() - t0
 
     def get_raw(self, key: str) -> bytes:
         t0 = time.perf_counter()
@@ -112,9 +114,9 @@ class InMemoryKVStore(KVStore):
                 self._bytes -= len(data)
                 raise KeyError(key)
             self._data.move_to_end(key)
-        self.stats.gets += 1
-        self.stats.bytes_out += len(data)
-        self.stats.get_time += time.perf_counter() - t0
+            self.stats.gets += 1
+            self.stats.bytes_out += len(data)
+            self.stats.get_time += time.perf_counter() - t0
         return data
 
     def delete(self, key: str) -> None:
@@ -147,6 +149,7 @@ class SharedFSStore(KVStore):
         self.fsync = fsync
         os.makedirs(root, exist_ok=True)
         self.stats = StoreStats()
+        self._stats_lock = threading.Lock()
 
     def _path(self, key: str) -> str:
         safe = hashlib.sha1(key.encode()).hexdigest()
@@ -162,17 +165,19 @@ class SharedFSStore(KVStore):
                 f.flush()
                 os.fsync(f.fileno())
         os.replace(tmp, path)
-        self.stats.sets += 1
-        self.stats.bytes_in += len(data)
-        self.stats.set_time += time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.sets += 1
+            self.stats.bytes_in += len(data)
+            self.stats.set_time += time.perf_counter() - t0
 
     def get_raw(self, key: str) -> bytes:
         t0 = time.perf_counter()
         with open(self._path(key), "rb") as f:
             data = f.read()
-        self.stats.gets += 1
-        self.stats.bytes_out += len(data)
-        self.stats.get_time += time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.gets += 1
+            self.stats.bytes_out += len(data)
+            self.stats.get_time += time.perf_counter() - t0
         return data
 
     def delete(self, key: str) -> None:
@@ -208,12 +213,12 @@ class DeviceStore(KVStore):
     def set(self, key: str, value: Any) -> None:
         with self._lock:
             self._data[key] = value
-        self.stats.sets += 1
+            self.stats.sets += 1
 
     def get(self, key: str) -> Any:
         with self._lock:
             val = self._data[key]
-        self.stats.gets += 1
+            self.stats.gets += 1
         return val
 
     def set_raw(self, key: str, data: bytes) -> None:

@@ -1,9 +1,15 @@
 from .facade import (
+    PackedBuffer,
     SerializationError,
+    clear_method_cache,
     pack,
+    pack_buffer,
     peek_tag,
+    stats,
     unpack,
     unpack_full,
 )
 
-__all__ = ["SerializationError", "pack", "peek_tag", "unpack", "unpack_full"]
+__all__ = ["PackedBuffer", "SerializationError", "clear_method_cache",
+           "pack", "pack_buffer", "peek_tag", "stats", "unpack",
+           "unpack_full"]

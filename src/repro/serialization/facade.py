@@ -1,12 +1,13 @@
-"""Serialization facade (paper §4.5).
+"""Serialization facade (paper §4.5) — the pack-once data plane.
 
 funcX: "sorts the serialization libraries by speed and applies them in order
 successively until the object is successfully serialized... buffers with
 headers that include routing tags and the serialization method."
 
 Methods, fastest first:
-  - ``nd``      numpy/jax arrays (+ pytrees of them): raw bytes + dtype/shape
-                envelope (handles ml_dtypes bfloat16, which .npy cannot)
+  - ``nd``      numpy/jax arrays (+ pytrees of them) and tuples: raw bytes +
+                dtype/shape envelope (handles ml_dtypes bfloat16, which .npy
+                cannot; preserves tuple-ness, which msgpack cannot)
   - ``msgpack`` plain data (dict/list/str/int/float/bytes/bool/None)
   - ``json``    orjson for JSON-able objects msgpack rejects (e.g. ints > 64b)
   - ``pickle``  universal fallback (complex objects, tracebacks, models)
@@ -16,13 +17,29 @@ Buffer layout::
     b"RPX1" | flags:u8 | method:u8 | taglen:u16 | tag | payload
 
 flags bit0 = zstd-compressed payload (beyond-paper; large buffers only).
+
+Pack-once invariant (DESIGN.md §5): a payload's bytes are produced **once**
+at its producer via :func:`pack_buffer` and carried end-to-end as a
+:class:`PackedBuffer` — an opaque byte frame whose routing tag and method
+are readable without touching the payload — and decoded **once** at the
+consumer via :meth:`PackedBuffer.unpack`. Fast paths over the original
+trial-by-exception facade:
+
+  - a per-type method-dispatch cache (the last method that worked for a
+    type is tried first; a full speed-ordered trial only runs on miss or
+    when the cached method stops applying);
+  - reusable thread-local zstd compression contexts (context construction
+    cost off the per-buffer path);
+  - buffer-frame array encoding: C-contiguous array bodies enter msgpack
+    as memoryviews, eliminating the intermediate ``tobytes()`` copy that
+    dominated large-array pack cost.
 """
 from __future__ import annotations
 
-import io
 import pickle
 import struct
-from typing import Any, Optional, Tuple
+import threading
+from typing import Any, Dict, Optional, Tuple, Union
 
 import msgpack
 import numpy as np
@@ -38,12 +55,77 @@ except ImportError:                                  # pragma: no cover
 
 MAGIC = b"RPX1"
 _METHODS = ["nd", "msgpack", "json", "pickle"]
+_METHOD_IDS = {m: i for i, m in enumerate(_METHODS)}
 _COMPRESS_THRESHOLD = 1 << 20       # 1 MiB
 FLAG_ZSTD = 0x01
+
+BufferLike = Union[bytes, bytearray, memoryview, "PackedBuffer"]
 
 
 class SerializationError(Exception):
     pass
+
+
+# ---------------------------------------------------------------------------
+# instrumentation — the pack-once acceptance gauge
+# ---------------------------------------------------------------------------
+
+# Routing tags the data plane emits. Stats bucket anything else (store
+# writes tag buffers by *key*, which is unbounded) under "other" so the
+# per-tag dicts stay O(1) for the life of the process.
+_WELL_KNOWN_TAGS = frozenset({"task", "ret", "tasks", "ack", "hb",
+                              "result", "heartbeat", "task_batch", ""})
+
+
+class FacadeStats:
+    """Counts actual serializations/deserializations (header-only operations
+    — ``peek_tag``, wrapping existing bytes — never count). ``packs_by_tag``
+    is how the benchmarks assert the pack-once invariant: exactly one
+    ``"task"``-tagged pack per submitted task, one ``"ret"`` per result."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            self.packs = 0
+            self.unpacks = 0
+            self.cache_hits = 0
+            self.cache_misses = 0
+            self.packs_by_tag: Dict[str, int] = {}
+            self.unpacks_by_tag: Dict[str, int] = {}
+
+    def count_pack(self, tag: str, cache_hit: Optional[bool]) -> None:
+        if tag not in _WELL_KNOWN_TAGS:
+            tag = "other"
+        with self._lock:
+            self.packs += 1
+            self.packs_by_tag[tag] = self.packs_by_tag.get(tag, 0) + 1
+            if cache_hit is True:
+                self.cache_hits += 1
+            elif cache_hit is False:
+                self.cache_misses += 1
+
+    def count_unpack(self, tag: str) -> None:
+        if tag not in _WELL_KNOWN_TAGS:
+            tag = "other"
+        with self._lock:
+            self.unpacks += 1
+            self.unpacks_by_tag[tag] = self.unpacks_by_tag.get(tag, 0) + 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "packs": self.packs, "unpacks": self.unpacks,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "packs_by_tag": dict(self.packs_by_tag),
+                "unpacks_by_tag": dict(self.unpacks_by_tag),
+            }
+
+
+stats = FacadeStats()
 
 
 # ---------------------------------------------------------------------------
@@ -54,22 +136,46 @@ def _is_array(x) -> bool:
     return isinstance(x, np.ndarray) or type(x).__module__.startswith("jax")
 
 
-def _encode_tree(obj: Any):
-    """Encode nested dict/list/tuple of arrays + scalars to msgpack-able."""
+class _NdInapplicable(Exception):
+    """Raised when a tree holds neither arrays nor tuples — msgpack will
+    round-trip it faithfully and much faster than the tree walk."""
+
+
+def _array_body(arr: np.ndarray):
+    """Array bytes for the wire. C-contiguous buffers go in as memoryviews
+    (msgpack copies them straight into the output frame — no intermediate
+    ``tobytes()`` materialization); everything else falls back to a copy.
+    Custom dtypes (ml_dtypes bfloat16) reject the buffer protocol, hence
+    the try."""
+    if arr.flags["C_CONTIGUOUS"]:
+        try:
+            return arr.data.cast("B")
+        except (BufferError, ValueError, TypeError):
+            pass
+    return arr.tobytes()
+
+
+def _encode_tree(obj: Any, state: list):
+    """Encode nested dict/list/tuple of arrays + scalars to msgpack-able.
+    ``state[0]`` flips True when the tree actually needs the nd codec
+    (contains an array or a tuple)."""
     if isinstance(obj, np.ndarray):
+        state[0] = True
         return {"__nd__": True, "d": str(obj.dtype), "s": list(obj.shape),
-                "b": obj.tobytes()}
+                "b": _array_body(obj)}
     if _is_array(obj):                               # jax array → host
+        state[0] = True
         arr = np.asarray(obj)
         return {"__nd__": True, "d": str(arr.dtype), "s": list(arr.shape),
-                "b": arr.tobytes()}
+                "b": _array_body(arr)}
     if isinstance(obj, dict):
-        return {"__map__": [[_encode_tree(k), _encode_tree(v)]
+        return {"__map__": [[_encode_tree(k, state), _encode_tree(v, state)]
                             for k, v in obj.items()]}
     if isinstance(obj, tuple):
-        return {"__tup__": [_encode_tree(v) for v in obj]}
+        state[0] = True
+        return {"__tup__": [_encode_tree(v, state) for v in obj]}
     if isinstance(obj, list):
-        return [_encode_tree(v) for v in obj]
+        return [_encode_tree(v, state) for v in obj]
     if isinstance(obj, (str, bytes, bool, int, float)) or obj is None:
         return obj
     raise SerializationError(f"nd codec cannot encode {type(obj)}")
@@ -90,24 +196,90 @@ def _decode_tree(obj: Any):
     return obj
 
 
-def _nd_dumps(obj: Any) -> bytes:
-    return msgpack.packb(_encode_tree(obj), use_bin_type=True)
+def _nd_frames_single(arr: np.ndarray):
+    """Zero-copy frames for a bare ndarray — the large-payload hot path.
+
+    Hand-rolls the msgpack map ``{"__nd__": True, "d":…, "s":…, "b": bin}``
+    so the array body is the *final* wire segment: the caller joins
+    header + prefix + body in one pass, making the join the only copy of
+    the array data (the generic ``packb`` path costs a second one staging
+    the body inside msgpack's output buffer). Decodes with plain
+    ``unpackb`` — the frames are byte-identical to what packb would emit.
+    """
+    body = _array_body(arr)
+    n = body.nbytes if isinstance(body, memoryview) else len(body)
+    if n >= 1 << 32:                      # msgpack bin32 ceiling
+        raise SerializationError("array exceeds msgpack bin32 limit")
+    meta = msgpack.packb({"__nd__": True, "d": str(arr.dtype),
+                          "s": list(arr.shape)}, use_bin_type=True)
+    # fixmap(3) -> fixmap(4): make room for the trailing "b" entry
+    assert meta[0] == 0x83
+    if n < 1 << 8:
+        bin_hdr = b"\xc4" + n.to_bytes(1, "big")
+    elif n < 1 << 16:
+        bin_hdr = b"\xc5" + n.to_bytes(2, "big")
+    else:
+        bin_hdr = b"\xc6" + n.to_bytes(4, "big")
+    return (b"\x84" + meta[1:] + b"\xa1b" + bin_hdr, body)
 
 
-def _nd_loads(buf: bytes) -> Any:
+def _nd_dumps(obj: Any):
+    """Returns wire bytes, or a tuple of frames (the caller concatenates —
+    tuples let the single-array fast path defer its one big copy to the
+    final join with the buffer header)."""
+    if isinstance(obj, np.ndarray):
+        return _nd_frames_single(obj)
+    if _is_array(obj):
+        return _nd_frames_single(np.asarray(obj))
+    state = [False]
+    encoded = _encode_tree(obj, state)
+    if not state[0]:
+        raise _NdInapplicable()
+    return msgpack.packb(encoded, use_bin_type=True)
+
+
+def _nd_loads(buf) -> Any:
     return _decode_tree(msgpack.unpackb(buf, raw=False, strict_map_key=False))
 
 
 # ---------------------------------------------------------------------------
-# facade
+# zstd contexts — constructed once per thread, reused for every buffer
 # ---------------------------------------------------------------------------
+
+_zstd_local = threading.local()
+
+
+def _zstd_compressor():
+    c = getattr(_zstd_local, "compressor", None)
+    if c is None:
+        c = _zstd_local.compressor = zstandard.ZstdCompressor(level=1)
+    return c
+
+
+def _zstd_decompressor():
+    d = getattr(_zstd_local, "decompressor", None)
+    if d is None:
+        d = _zstd_local.decompressor = zstandard.ZstdDecompressor()
+    return d
+
+
+# ---------------------------------------------------------------------------
+# method dispatch — cached per type, speed-ordered trial as fallback
+# ---------------------------------------------------------------------------
+
+_method_cache: Dict[type, str] = {}
+
 
 def _try_method(method: str, obj: Any) -> Optional[bytes]:
     try:
         if method == "nd":
             return _nd_dumps(obj)
         if method == "msgpack":
-            return msgpack.packb(obj, use_bin_type=True)
+            # strict_types: tuples (and exotic subclasses) must FAIL here
+            # rather than silently degrade to lists — the dispatch cache
+            # retries msgpack first for every dict, and fidelity has to
+            # survive a cache hit on a dict that happens to hold tuples.
+            return msgpack.packb(obj, use_bin_type=True, strict_types=True)
         if method == "json":
             if orjson is None:
                 return None
@@ -121,7 +293,7 @@ def _try_method(method: str, obj: Any) -> Optional[bytes]:
     return None
 
 
-def _load_method(method: str, buf: bytes) -> Any:
+def _load_method(method: str, buf) -> Any:
     if method == "nd":
         return _nd_loads(buf)
     if method == "msgpack":
@@ -129,57 +301,232 @@ def _load_method(method: str, buf: bytes) -> Any:
     if method == "json":
         if orjson is None:
             raise SerializationError("orjson unavailable")
-        return orjson.loads(buf)
+        return orjson.loads(bytes(buf))
     if method == "pickle":
         return pickle.loads(buf)
     raise SerializationError(f"unknown method {method!r}")
 
 
-def pack(obj: Any, tag: str = "", compress: Optional[bool] = None) -> bytes:
-    """Serialize with the fastest applicable method; headered buffer."""
-    payload = None
-    method_id = None
-    for i, m in enumerate(_METHODS):
+def _encode_payload(obj: Any,
+                    method_hint: Optional[str] = None
+                    ) -> Tuple[bytes, str, bool]:
+    """Serialize ``obj`` with the fastest applicable method. Tries the
+    hinted/cached method first; on failure (the cached method stopped
+    applying to this type — e.g. a dict that used to hold arrays now holds
+    a DataRef) falls back to the full speed-ordered trial and re-caches.
+    Returns (payload, method, cache_hit)."""
+    t = type(obj)
+    first = method_hint if method_hint is not None else _method_cache.get(t)
+    if first is not None:
+        payload = _try_method(first, obj)
+        if payload is not None:
+            return payload, first, True
+    for m in _METHODS:
+        if m == first:
+            continue
         payload = _try_method(m, obj)
         if payload is not None:
-            method_id = i
-            break
-    if payload is None:
-        raise SerializationError(f"no serializer could handle {type(obj)}")
+            # Never cache the lossy-capable methods: pickle succeeds on
+            # anything (one odd instance would pin a whole type to the
+            # slowest method), and orjson "succeeds" coercively — a
+            # cache hit on dict→json would degrade tuples to lists and
+            # datetimes to strings that a full trial routes to nd/pickle.
+            if m not in ("pickle", "json"):
+                _method_cache[t] = m
+            return payload, m, False
+    raise SerializationError(f"no serializer could handle {type(obj)}")
+
+
+# ---------------------------------------------------------------------------
+# PackedBuffer — the unit the data plane moves
+# ---------------------------------------------------------------------------
+
+class PackedBuffer:
+    """One packed payload: headered wire bytes plus cached routing metadata.
+
+    Producers create it exactly once (`pack_buffer`); every hop in between
+    moves/embeds the bytes opaquely (``data`` is a msgpack bin frame inside
+    protocol envelopes); the consumer calls :meth:`unpack` exactly once.
+    ``tag`` and ``method`` come from the header without touching the
+    payload, so routing never deserializes. The decoded object is cached so
+    re-delivery (speculation, manager-loss requeue) costs no second decode.
+    """
+
+    __slots__ = ("data", "tag", "method", "_obj", "_decoded")
+
+    def __init__(self, data: bytes, tag: str, method: str):
+        self.data = data
+        self.tag = tag
+        self.method = method
+        self._obj = None
+        self._decoded = False
+
+    @classmethod
+    def from_bytes(cls, data: BufferLike) -> "PackedBuffer":
+        """Wrap existing wire bytes; parses only the header (no payload
+        deserialization, no copy for bytes input)."""
+        if isinstance(data, PackedBuffer):
+            return data
+        if not isinstance(data, bytes):
+            data = bytes(data)
+        if data[:4] != MAGIC:
+            raise SerializationError("bad magic")
+        try:
+            _, method_id, taglen = struct.unpack("<BBH", data[4:8])
+            tag = data[8:8 + taglen].decode()
+        except Exception as e:                 # truncated / mangled header
+            raise SerializationError(f"corrupt header: {e}") from e
+        if method_id >= len(_METHODS):
+            raise SerializationError(f"unknown method id {method_id}")
+        return cls(data, tag, _METHODS[method_id])
+
+    def unpack(self) -> Any:
+        """Decode the payload (consumer-side, once; cached thereafter)."""
+        if not self._decoded:
+            self._obj = _unpack_payload(self.data)
+            self._decoded = True
+            stats.count_unpack(self.tag)
+        return self._obj
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.data)
+
+    def to_bytes(self) -> bytes:
+        return self.data
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, PackedBuffer):
+            return self.data == other.data
+        return NotImplemented
+
+    def __hash__(self) -> int:
+        return hash(self.data)
+
+    def __repr__(self) -> str:
+        return (f"PackedBuffer(tag={self.tag!r}, method={self.method!r}, "
+                f"nbytes={len(self.data)})")
+
+
+def pack_buffer(obj: Any, tag: str = "", compress: Optional[bool] = None,
+                method_hint: Optional[str] = None) -> PackedBuffer:
+    """Pack once: serialize ``obj`` into a headered, routable buffer.
+
+    ``method_hint`` short-circuits dispatch for callers that know their
+    object shape (protocol envelopes are always msgpack-able dicts);
+    correctness never depends on it — a failing hint falls back to the
+    full trial."""
+    if isinstance(obj, PackedBuffer):
+        return obj                       # already packed: pack-once holds
+    payload, method, cache_hit = _encode_payload(obj, method_hint)
+    # encoders may hand back a tuple of frames (single-array fast path):
+    # they stay separate until the one join below, so the array body is
+    # copied exactly once on its way into the wire buffer
+    frames = payload if isinstance(payload, tuple) else (payload,)
+    total = sum(f.nbytes if isinstance(f, memoryview) else len(f)
+                for f in frames)
     flags = 0
     if compress is None:
-        compress = len(payload) >= _COMPRESS_THRESHOLD and zstandard is not None
+        compress = total >= _COMPRESS_THRESHOLD and zstandard is not None
     if compress and zstandard is not None:
-        payload = zstandard.ZstdCompressor(level=1).compress(payload)
+        joined = frames[0] if len(frames) == 1 else b"".join(frames)
+        frames = (_zstd_compressor().compress(joined),)
         flags |= FLAG_ZSTD
     tag_b = tag.encode()
-    header = MAGIC + struct.pack("<BBH", flags, method_id, len(tag_b)) + tag_b
-    return header + payload
+    header = MAGIC + struct.pack("<BBH", flags, _METHOD_IDS[method],
+                                 len(tag_b)) + tag_b
+    buf = PackedBuffer(b"".join((header, *frames)), tag, method)
+    stats.count_pack(tag, cache_hit)
+    return buf
 
 
-def unpack(buf: bytes) -> Tuple[Any, str]:
+def pack(obj: Any, tag: str = "", compress: Optional[bool] = None,
+         method_hint: Optional[str] = None) -> bytes:
+    """Serialize with the fastest applicable method; headered buffer."""
+    return pack_buffer(obj, tag=tag, compress=compress,
+                       method_hint=method_hint).data
+
+
+# ---------------------------------------------------------------------------
+# unpack / peek
+# ---------------------------------------------------------------------------
+
+def _as_buffer(buf: BufferLike):
+    if isinstance(buf, PackedBuffer):
+        return buf.data
+    return buf
+
+
+def _parse_header(buf) -> Tuple[int, int, str, Any]:
+    """(flags, method_id, tag, payload_view) — payload is a zero-copy view."""
+    if bytes(buf[:4]) != MAGIC:
+        raise SerializationError("bad magic")
+    try:
+        flags, method_id, taglen = struct.unpack("<BBH", buf[4:8])
+        tag = bytes(buf[8:8 + taglen]).decode()
+    except Exception as e:                     # truncated / mangled header
+        raise SerializationError(f"corrupt header: {e}") from e
+    payload = memoryview(buf)[8 + taglen:]
+    return flags, method_id, tag, payload
+
+
+def _decode_payload(flags: int, method_id: int, payload) -> Any:
+    """Shared decode tail for every unpack entry point. Wraps decoder
+    failures (corrupt/truncated frames raise msgpack/pickle-specific
+    exceptions) in SerializationError so consumers — notably the pool's
+    single multiplexed recv loop — can guard on one type."""
+    if flags & FLAG_ZSTD:
+        if zstandard is None:
+            raise SerializationError("zstd-compressed buffer, no zstandard")
+        payload = _zstd_decompressor().decompress(payload)
+    if method_id >= len(_METHODS):
+        raise SerializationError(f"unknown method id {method_id}")
+    try:
+        return _load_method(_METHODS[method_id], payload)
+    except SerializationError:
+        raise
+    except Exception as e:
+        raise SerializationError(
+            f"{_METHODS[method_id]} decode failed: "
+            f"{type(e).__name__}: {e}") from e
+
+
+def _unpack_payload(buf) -> Any:
+    flags, method_id, _tag, payload = _parse_header(buf)
+    return _decode_payload(flags, method_id, payload)
+
+
+def unpack(buf: BufferLike) -> Tuple[Any, str]:
     """Returns (object, routing_tag). Only the header needs parsing to route."""
     obj, tag, _ = unpack_full(buf)
     return obj, tag
 
 
-def unpack_full(buf: bytes) -> Tuple[Any, str, str]:
-    if buf[:4] != MAGIC:
-        raise SerializationError("bad magic")
-    flags, method_id, taglen = struct.unpack("<BBH", buf[4:8])
-    tag = buf[8:8 + taglen].decode()
-    payload = buf[8 + taglen:]
-    if flags & FLAG_ZSTD:
-        if zstandard is None:
-            raise SerializationError("zstd-compressed buffer, no zstandard")
-        payload = zstandard.ZstdDecompressor().decompress(payload)
-    return _load_method(_METHODS[method_id], payload), tag, _METHODS[method_id]
+def unpack_full(buf: BufferLike) -> Tuple[Any, str, str]:
+    if isinstance(buf, PackedBuffer):
+        return buf.unpack(), buf.tag, buf.method
+    raw = _as_buffer(buf)
+    flags, method_id, tag, payload = _parse_header(raw)
+    obj = _decode_payload(flags, method_id, payload)
+    stats.count_unpack(tag)
+    return obj, tag, _METHODS[method_id]
 
 
-def peek_tag(buf: bytes) -> str:
+def peek_tag(buf: BufferLike) -> str:
     """Routing tag without deserializing the payload (paper: 'only the
     buffers need to be unpacked and deserialized at the destination')."""
-    if buf[:4] != MAGIC:
+    if isinstance(buf, PackedBuffer):
+        return buf.tag
+    raw = _as_buffer(buf)
+    if bytes(raw[:4]) != MAGIC:
         raise SerializationError("bad magic")
-    _, _, taglen = struct.unpack("<BBH", buf[4:8])
-    return buf[8:8 + taglen].decode()
+    _, _, taglen = struct.unpack("<BBH", raw[4:8])
+    return bytes(raw[8:8 + taglen]).decode()
+
+
+def clear_method_cache() -> None:
+    """Test hook: forget learned type→method dispatch."""
+    _method_cache.clear()

@@ -1,0 +1,415 @@
+"""Pack-once data plane (DESIGN.md §5): facade fast paths, PackedBuffer,
+opaque protocol frames, and the one-pack/one-decode invariant on the live
+service → endpoint → worker → result path.
+
+Unlike test_serialization.py this module is NOT hypothesis-gated — it is
+the facade's baseline coverage in minimal images."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serialization import (
+    PackedBuffer,
+    SerializationError,
+    clear_method_cache,
+    pack,
+    pack_buffer,
+    peek_tag,
+    stats,
+    unpack,
+    unpack_full,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_dispatch_cache():
+    clear_method_cache()
+    yield
+    clear_method_cache()
+
+
+# ---------------------------------------------------------------------------
+# facade coverage (satellite: zstd, bf16, peek_tag, method-cache fallback)
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_plain_not_gated():
+    for obj in [None, True, 42, 3.14, "hi", b"raw", [1, 2, 3],
+                {"a": 1, "b": [2, {"c": 3}]}, (1, "x")]:
+        out, tag = unpack(pack(obj, tag="t"))
+        assert out == obj
+        assert tag == "t"
+
+
+def test_bfloat16_roundtrip():
+    import ml_dtypes
+    arr = np.arange(24, dtype=ml_dtypes.bfloat16).reshape(2, 3, 4)
+    out, _, method = unpack_full(pack(arr))
+    assert method == "nd"
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(np.asarray(out, np.float64),
+                                  np.asarray(arr, np.float64))
+
+
+def test_peek_tag_without_deserializing():
+    buf = pack({"big": np.zeros(1000)}, tag="endpoint-42/result")
+    assert peek_tag(buf) == "endpoint-42/result"
+    assert peek_tag(bytearray(buf)) == "endpoint-42/result"
+    assert peek_tag(PackedBuffer.from_bytes(buf)) == "endpoint-42/result"
+    with pytest.raises(SerializationError):
+        peek_tag(b"XXXX????")
+
+
+def test_zstd_roundtrip():
+    pytest.importorskip("zstandard")
+    arr = np.zeros(2 << 20, np.uint8)            # compressible
+    buf = pack(arr)
+    assert len(buf) < arr.nbytes // 10           # FLAG_ZSTD path taken
+    out, _ = unpack(buf)
+    np.testing.assert_array_equal(out, arr)
+    # explicit compress of a small payload
+    small = pack({"k": "v" * 64}, compress=True)
+    assert unpack(small)[0] == {"k": "v" * 64}
+
+
+def test_method_cache_learns_and_falls_back():
+    """A type's cached method is tried first; when it stops applying to an
+    instance (dict of arrays vs plain dict vs dict holding a DataRef) the
+    trial loop still finds the right method — and pickle, which succeeds
+    on anything, must never be cached for the whole type."""
+    from repro.data import DataRef
+    assert unpack_full(pack({"w": np.ones(3)}))[2] == "nd"       # cached: nd
+    assert unpack_full(pack({"plain": 1}))[2] == "msgpack"       # fallback
+    ref = {"arr": DataRef("globus", "ep", "k")}
+    out, _, method = unpack_full(pack(ref))
+    assert method == "pickle"
+    assert isinstance(out["arr"], DataRef)
+    # pickle was not cached for dict: arrays still get the fast method
+    assert unpack_full(pack({"w": np.ones(3)}))[2] == "nd"
+
+
+def test_plain_containers_use_msgpack_tuples_use_nd():
+    assert unpack_full(pack({"a": [1, "x"]}))[2] == "msgpack"
+    assert unpack_full(pack((1, "x")))[2] == "nd"    # tuple-ness preserved
+    out, _ = unpack(pack({"p": (1, 2)}))
+    assert out == {"p": (1, 2)} and isinstance(out["p"], tuple)
+
+
+def test_single_array_fast_frames_boundaries():
+    """The hand-rolled msgpack framing (bin8/16/32) must be byte-level
+    valid at every size-class boundary, for any layout."""
+    for n in [0, 1, 255, 256, 65535, 65536, 1 << 20]:
+        arr = (np.arange(n) % 251).astype(np.uint8)
+        out, _, method = unpack_full(pack(arr))
+        assert method == "nd"
+        np.testing.assert_array_equal(out, arr)
+    noncontig = np.arange(100, dtype=np.float32).reshape(10, 10)[:, ::2]
+    np.testing.assert_array_equal(unpack(pack(noncontig))[0], noncontig)
+    fortran = np.asfortranarray(np.arange(12, dtype=np.float64).reshape(3, 4))
+    np.testing.assert_array_equal(unpack(pack(fortran))[0], fortran)
+    scalar = np.float32(7)                        # 0-d array path
+    assert unpack(pack(np.asarray(scalar)))[0] == scalar
+
+
+# ---------------------------------------------------------------------------
+# PackedBuffer
+# ---------------------------------------------------------------------------
+
+def test_packed_buffer_semantics():
+    pb = pack_buffer({"x": np.arange(5)}, tag="task")
+    assert pb.tag == "task" and pb.method == "nd"
+    assert len(pb) == len(pb.data) == pb.nbytes
+    # header-only wrap: no payload decode
+    pb2 = PackedBuffer.from_bytes(pb.data)
+    assert pb2 == pb and pb2.tag == "task" and pb2.method == "nd"
+    # decode is cached (decode-once per consumer)
+    v1 = pb2.unpack()
+    assert pb2.unpack() is v1
+    np.testing.assert_array_equal(v1["x"], np.arange(5))
+    # packing a PackedBuffer is the identity — pack-once holds on re-entry
+    assert pack_buffer(pb) is pb
+
+
+def test_packed_buffer_unpack_counts_once():
+    stats.reset()
+    pb = pack_buffer(np.ones(10), tag="task")
+    pb.unpack(), pb.unpack(), pb.unpack()
+    s = stats.snapshot()
+    assert s["packs_by_tag"]["task"] == 1
+    assert s["unpacks_by_tag"]["task"] == 1
+
+
+# ---------------------------------------------------------------------------
+# protocol: payloads travel as opaque byte frames
+# ---------------------------------------------------------------------------
+
+def test_taskspec_packed_payload_is_opaque_frame():
+    from repro.core import Channel, TaskBatch, TaskSpec, from_wire, to_wire
+    payload = pack_buffer({"arr": np.arange(6, dtype=np.float32)}, tag="task")
+    batch = TaskBatch(tasks=[TaskSpec(task_id="t", function_id="f",
+                                      container_type="python",
+                                      payload=payload)])
+    env = to_wire(batch)
+    assert env["tasks"][0]["payload_b"] == payload.data   # bytes, not object
+    assert "payload" not in env["tasks"][0]
+    ch = Channel()
+    stats.reset()
+    assert ch.send_to_endpoint(env, tag="tasks")
+    out_env, tag = ch.recv_at_endpoint(timeout=1)
+    assert tag == "tasks"
+    out = from_wire(out_env)
+    got = out.tasks[0].payload
+    assert isinstance(got, PackedBuffer) and got == payload
+    # crossing the channel must not have re-serialized the payload
+    assert stats.snapshot()["packs_by_tag"].get("task", 0) == 0
+    np.testing.assert_array_equal(got.unpack()["arr"],
+                                  np.arange(6, dtype=np.float32))
+
+
+def test_resultmsg_packed_result_roundtrips():
+    from repro.core import ResultMsg, from_wire, to_wire
+    packed = pack_buffer({"y": np.ones(4)}, tag="ret")
+    msg = ResultMsg(task_id="t", status="SUCCESS", result=packed)
+    out = from_wire(to_wire(msg))
+    assert out == msg
+    assert isinstance(out.result, PackedBuffer)
+    np.testing.assert_array_equal(out.result.unpack()["y"], np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# the live pipeline: one pack at submit, one decode at the worker,
+# one pack per result, one decode at get_result
+# ---------------------------------------------------------------------------
+
+def test_pack_once_invariant_end_to_end():
+    from repro.core import FuncXClient, FuncXService
+    svc = FuncXService(heartbeat_timeout=0.5)
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(
+            lambda d: float(np.sum(d["x"])), name="sum")
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=2)
+        cl.get_result(cl.run(fid, eid,
+                             data={"x": np.ones(4, np.float32)}), timeout=10)
+        stats.reset()
+        n = 8
+        tids = [cl.run(fid, eid,
+                       data={"x": np.arange(64, dtype=np.float32)})
+                for _ in range(n)]
+        outs = [cl.get_result(t, timeout=15) for t in tids]
+        assert outs == [float(np.sum(np.arange(64)))] * n
+        s = stats.snapshot()
+        assert s["packs_by_tag"].get("task", 0) == n
+        assert s["unpacks_by_tag"].get("task", 0) == n
+        assert s["packs_by_tag"].get("ret", 0) == n
+        assert s["unpacks_by_tag"].get("ret", 0) == n
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+def test_prepacked_fanout_packs_once():
+    from repro.core import FuncXClient, FuncXService
+    svc = FuncXService(heartbeat_timeout=0.5)
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(lambda d: int(d["k"]), name="k")
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=2)
+        stats.reset()
+        pp = cl.pack_payload({"k": 42})
+        tids = [cl.run(fid, eid, data=pp) for _ in range(5)]
+        assert [cl.get_result(t, timeout=15) for t in tids] == [42] * 5
+        assert stats.snapshot()["packs_by_tag"].get("task", 0) == 1
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+def test_payload_limit_uses_packed_size():
+    """The 10 MB check consumes the same bytes that ship — a payload whose
+    packed form fits must pass even if a naive repr would not."""
+    from repro.core import FuncXClient, FuncXService, PayloadTooLarge
+    svc = FuncXService(heartbeat_timeout=0.5, payload_limit=1 << 16)
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(lambda d: None, name="noop")
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=1)
+        with pytest.raises(PayloadTooLarge):
+            cl.run(fid, eid, data=np.zeros(1 << 17, np.uint8))
+        cl.get_result(cl.run(fid, eid, data=np.zeros(64, np.uint8)),
+                      timeout=10)
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# satellites with observable behaviour
+# ---------------------------------------------------------------------------
+
+def test_worker_reaps_on_deadline_not_every_wakeup():
+    """The worker blocks long on an empty inbox and still honours the warm
+    cache's idle timeout via the reap deadline."""
+    from repro.core import ContainerRegistry, Worker
+    done = []
+    w = Worker("w0", ContainerRegistry(), done.append,
+               cache_slots=2, idle_timeout=0.15)
+    w.start()
+    try:
+        from repro.core.worker import WorkItem
+        w.submit(WorkItem(task_id="t", container_type="ct", fn=lambda d: d,
+                          wants_env=False, payload=None, stamps={}))
+        deadline = time.perf_counter() + 5
+        while not done and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert done and done[0].status == "SUCCESS"
+        assert w.warm_types() == ["ct"]
+        deadline = time.perf_counter() + 5
+        while w.warm_types() and time.perf_counter() < deadline:
+            time.sleep(0.02)
+        assert w.warm_types() == []          # reaped without a task arriving
+    finally:
+        w.stop()
+
+
+def test_corrupt_buffers_raise_serialization_error():
+    """Corrupt frames must surface as SerializationError — the pool's
+    single recv loop guards on that type; anything else kills it."""
+    good = pack({"k": 1}, tag="result")
+    for bad in [b"XXXX" + good[4:],          # bad magic
+                good[:6],                    # truncated header
+                good[:-3],                   # truncated payload
+                good[:8] + b"\xff\xff\xff"]:  # mangled body
+        with pytest.raises(SerializationError):
+            unpack(bad)
+    mangled = bytearray(good)
+    mangled[5] = 250                         # unknown method id
+    with pytest.raises(SerializationError):
+        unpack(bytes(mangled))
+    with pytest.raises(SerializationError):
+        PackedBuffer.from_bytes(bytes(mangled))
+
+
+def test_endpoint_recv_survives_poison_payload_frame():
+    """A TaskBatch carrying a malformed payload_b must not kill the
+    endpoint recv thread (from_wire raises SerializationError there)."""
+    from repro.core import Channel
+    ch = Channel()
+    ch.send_to_endpoint(
+        {"type": "task_batch",
+         "tasks": [{"task_id": "t", "function_id": "f",
+                    "container_type": "python",
+                    "payload_b": b"RPX1\x00\x00\x03\x00hb\xff"}]},
+        tag="tasks")
+    env, _ = ch.recv_at_endpoint(timeout=1)
+    from repro.core import from_wire
+    with pytest.raises(SerializationError):
+        from_wire(env)                        # what the guard must catch
+    # raw poison bytes on the queue are dropped by recv itself
+    ch._to_endpoint.put(b"RPX1\x00\x00\x03\x00hb\xff\xde\xad")
+    assert ch.recv_at_endpoint(timeout=0.2) is None
+
+
+def test_unserializable_result_parks_live_object_in_devicestore():
+    """Pre-PR escape hatch preserved: a result that cannot serialize is
+    staged as a live object behind a DataRef when the endpoint store has
+    object semantics (DeviceStore)."""
+    from repro.core import FuncXClient, FuncXService
+    from repro.data import DataRef, DeviceStore
+    svc = FuncXService(heartbeat_timeout=0.5)
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(lambda d: (lambda x: x), name="mk_fn")
+        store = DeviceStore()
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=1, store=store)
+        ref = cl.get_result(cl.run(fid, eid, data=None), timeout=15)
+        assert isinstance(ref, DataRef)
+        assert callable(store.get(ref.key))   # the live lambda, by reference
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+def test_result_value_releases_wire_bytes():
+    """With purge_on_get=False the service must not retain wire bytes AND
+    the decoded object — the first decode replaces the buffer."""
+    from repro.core import FuncXClient, FuncXService
+    svc = FuncXService(heartbeat_timeout=0.5, purge_on_get=False)
+    try:
+        tok = svc.register_user("u")
+        cl = FuncXClient(svc, tok)
+        fid = cl.register_function(lambda d: {"v": 7}, name="f")
+        eid, agent = svc.make_endpoint(tok, "ep", n_managers=1,
+                                       workers_per_manager=1)
+        tid = cl.run(fid, eid, data=None)
+        assert cl.get_result(tid, timeout=15) == {"v": 7}
+        t = svc.get_task(tid)
+        assert not isinstance(t.result, PackedBuffer)
+        assert cl.get_result(tid, timeout=1) == {"v": 7}   # repeat reads ok
+        agent.stop()
+    finally:
+        svc.shutdown()
+
+
+def test_hub_survives_poison_frame():
+    """A frame with an undecodable header must be dropped by the hub —
+    not kill the shared poller thread (nor force a pool restart)."""
+    from repro.core import Channel, ChannelHub
+    hub = ChannelHub()
+    ch = Channel()
+    hub.register("k", ch)
+    ch._to_service.put(b"RPX1\x00\x00\x03\x00hb\xff\xde\xad")  # bad utf-8 tag
+    hub._notify("k")
+    assert hub.poll(timeout=0.2) == []       # dropped silently
+    assert ch.send_to_service({"type": "ack", "task_ids": [],
+                               "t_endpoint_recv": 0.0}, tag="ack")
+    out = hub.poll(timeout=1.0)
+    assert len(out) == 1 and out[0][1].tag == "ack"   # poller still alive
+
+
+def test_stage_outputs_devicestore_keeps_object_semantics():
+    """DeviceStore.get returns live objects; staging must not hand it wire
+    bytes (and must keep arrays by reference, its whole point)."""
+    from repro.data import DataRef, DeviceStore, stage_outputs
+    store = DeviceStore()
+    big = np.zeros(1 << 14, np.uint8)
+    packed = pack_buffer(big, tag="ret")
+    ref = stage_outputs(big, "ep", store, "t11", limit=1 << 10, packed=packed)
+    assert isinstance(ref, DataRef)
+    got = store.get("t11/result")
+    assert isinstance(got, np.ndarray)       # the object, not RPX1 bytes
+    assert got is big                        # by reference — zero copies
+    np.testing.assert_array_equal(got, big)
+
+
+def test_stats_tags_are_bounded():
+    """Store writes tag buffers by key; stats must bucket unknown tags so
+    the per-tag dicts stay O(1) in a long-running service."""
+    stats.reset()
+    for i in range(50):
+        pack({"v": i}, tag=f"task/{i}/result")
+    s = stats.snapshot()
+    assert s["packs_by_tag"] == {"other": 50}
+
+
+def test_stage_outputs_reuses_packed_bytes():
+    from repro.data import DataRef, InMemoryKVStore, stage_outputs
+    store = InMemoryKVStore()
+    big = np.zeros(1 << 14, np.uint8)
+    packed = pack_buffer(big, tag="ret")
+    stats.reset()
+    ref = stage_outputs(big, "ep", store, "t9", limit=1 << 10, packed=packed)
+    assert isinstance(ref, DataRef)
+    # staging wrote the existing bytes — no new serialization happened
+    assert stats.snapshot()["packs"] == 0
+    np.testing.assert_array_equal(store.get("t9/result"), big)
+    small = stage_outputs({"v": 1}, "ep", store, "t10", limit=1 << 20)
+    assert small == {"v": 1}
