@@ -1,17 +1,25 @@
 # One-command entry points for the suite and benchmarks.
 #
 #   make test                 tier-1 test suite (ROADMAP.md verify command)
+#   make test-fast            fast lane: skips tests marked `slow`
+#   make lint                 ruff check (stdlib dead-import sweep if no ruff)
 #   make bench-smoke          scaling benchmark in tiny mode (seconds)
 #   make bench-serialization  §4.5 pack-once data plane benchmarks
-#   make bench                full benchmark harness (writes BENCH_2.json)
+#   make bench                full benchmark harness (writes BENCH_4.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench-smoke bench-serialization bench
+.PHONY: test test-fast lint bench-smoke bench-serialization bench
 
 test:
 	python -m pytest -x -q
+
+test-fast:
+	python -m pytest -x -q -m "not slow"
+
+lint:
+	python -m tools.lint
 
 bench-smoke:
 	python -m benchmarks.run --only fig4_scaling --tiny

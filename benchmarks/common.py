@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import time
 from contextlib import contextmanager
-from typing import Callable, Iterable, List, Optional
+from typing import List
 
 ROWS: List[str] = []
 

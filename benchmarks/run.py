@@ -27,7 +27,7 @@ SUITES = {
                              "§4.5 pack-once data plane throughput"),
 }
 
-ARTIFACT = "BENCH_2.json"
+ARTIFACT = "BENCH_4.json"          # seeded from BENCH_2.json (PR 2 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

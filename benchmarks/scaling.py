@@ -1,12 +1,16 @@
 """Fig. 4 + §7.2.3 — strong/weak scaling, peak agent throughput, and the
 many-endpoint federation scenario.
 
-Three modes:
+Four modes:
   - REAL: threaded workers through the full service→forwarder-pool→
     endpoint→manager→worker path (up to ~128 workers on this CPU).
   - FEDERATION: a 64+ endpoint fleet through one ForwarderPool — service
     thread count stays O(1) (the seed spent 3 threads/endpoint), and
     federation-level warming-aware routing beats random endpoint pick.
+  - MULTIPROCESS: the same fleet as N actual OS processes dialing the
+    service's TCP listener (``python -m repro.core.endpoint --connect``)
+    vs N same-process thread endpoints — tasks/s and p50/p99 task latency
+    for both deployment modes (DESIGN.md §2).
   - SIM: discrete-event simulation of the same dispatch pipeline,
     calibrated with the real mode's measured per-task dispatch overhead,
     scaled to 131 072 workers (the paper's Cori point).
@@ -14,6 +18,7 @@ Three modes:
 from __future__ import annotations
 
 import heapq
+import subprocess
 import threading
 import time
 from typing import List
@@ -178,6 +183,99 @@ def federation_routing_win(n_endpoints: int = 8, burst: int = 16,
          t_warm * 1e6, f"speedup_vs_random={t_random / t_warm:.2f}x")
 
 
+# ------------------------------------------------------------- multiprocess
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
+
+
+def _measured_batch(svc, client, fid, eids, n_tasks, timeout=300):
+    """Round-robin a batch over ``eids``; returns (tasks/s, p50 s, p99 s)
+    with per-task latency read from the submit→result_stored stamps
+    (requires ``purge_on_get=False``)."""
+    reqs = [(fid, eids[i % len(eids)], {}) for i in range(n_tasks)]
+    t0 = time.perf_counter()
+    ids = client.batch_run(reqs)
+    client.get_batch_results(ids, timeout=timeout)
+    elapsed = time.perf_counter() - t0
+    lats = []
+    for tid in ids:
+        t = svc.tasks.get(tid).t
+        if "submit" in t and "result_stored" in t:
+            lats.append(t["result_stored"] - t["submit"])
+        svc.tasks.purge(tid)
+    return n_tasks / elapsed, _percentile(lats, 0.50), _percentile(lats, 0.99)
+
+
+def multiprocess_mode(n_endpoints: int = 4, tasks_per_endpoint: int = 50,
+                      workers: int = 4) -> None:
+    """DESIGN.md §2 deployment modes, measured head-to-head: N endpoint
+    agents as OS subprocesses over TcpTransport vs the same N as threads
+    over LocalTransport, same service, same task mix."""
+    from repro.core import FuncXClient, FuncXService
+    from repro.core.endpoint import demo_noop
+
+    n_tasks = n_endpoints * tasks_per_endpoint
+
+    # -- threads / LocalTransport ------------------------------------------
+    svc = FuncXService(heartbeat_timeout=1.0, purge_on_get=False)
+    try:
+        tok = svc.register_user("bench")
+        client = FuncXClient(svc, tok)
+        fid = client.register_function(demo_noop)
+        eids, agents = [], []
+        for i in range(n_endpoints):
+            eid, agent = svc.make_endpoint(tok, f"thr{i}", n_managers=1,
+                                           workers_per_manager=workers)
+            eids.append(eid)
+            agents.append(agent)
+        _measured_batch(svc, client, fid, eids, min(n_tasks, 32))   # warm
+        rate, p50, p99 = _measured_batch(svc, client, fid, eids, n_tasks)
+        emit(f"federation/multiproc/threads/tasks_per_s/"
+             f"endpoints={n_endpoints}", rate, f"n={n_tasks}")
+        emit(f"federation/multiproc/threads/latency_p50_us", p50 * 1e6,
+             f"p99_us={p99 * 1e6:.0f}")
+        for a in agents:
+            a.stop()
+    finally:
+        svc.shutdown()
+
+    # -- subprocesses / TcpTransport ---------------------------------------
+    from repro.core.endpoint import spawn_endpoint_process
+    svc = FuncXService(heartbeat_timeout=1.0, purge_on_get=False)
+    procs = []
+    try:
+        tok = svc.register_user("bench")
+        client = FuncXClient(svc, tok)
+        fid = client.register_function(demo_noop)
+        address = svc.listen()
+        token = client.endpoint_credentials()
+        eids = []
+        for i in range(n_endpoints):
+            p, eid = spawn_endpoint_process(address, token, name=f"proc{i}",
+                                            workers=workers)
+            procs.append(p)
+            eids.append(eid)
+        _measured_batch(svc, client, fid, eids, min(n_tasks, 32))   # warm
+        rate, p50, p99 = _measured_batch(svc, client, fid, eids, n_tasks)
+        emit(f"federation/multiproc/subprocess/tasks_per_s/"
+             f"endpoints={n_endpoints}", rate, f"n={n_tasks}")
+        emit(f"federation/multiproc/subprocess/latency_p50_us", p50 * 1e6,
+             f"p99_us={p99 * 1e6:.0f}")
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                p.kill()
+        svc.shutdown()
+
+
 # ---------------------------------------------------------------------- sim
 
 def simulate(n_workers: int, n_tasks: int, duration_s: float,
@@ -220,6 +318,7 @@ def run(full: bool = False, tiny: bool = False) -> None:
         federation_threads(n_endpoints=16)
         federation_throughput(n_endpoints=8, tasks_per_endpoint=5)
         federation_routing_win(n_endpoints=4, burst=8, build_s=0.1)
+        multiprocess_mode(n_endpoints=2, tasks_per_endpoint=25)
         sim_mode(dispatch)
         return
     workers = (4, 16, 64) if not full else (4, 16, 64, 128)
@@ -229,4 +328,6 @@ def run(full: bool = False, tiny: bool = False) -> None:
     federation_threads(n_endpoints=64 if not full else 256)
     federation_throughput(n_endpoints=64, tasks_per_endpoint=10)
     federation_routing_win(n_endpoints=8 if not full else 16)
+    multiprocess_mode(n_endpoints=4 if not full else 8,
+                      tasks_per_endpoint=50 if not full else 100)
     sim_mode(dispatch)

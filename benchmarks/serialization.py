@@ -107,9 +107,7 @@ def _throughput(fn, *, seconds: float = 0.4, min_reps: int = 3) -> float:
 
 
 def run(full: bool = False, tiny: bool = False) -> None:
-    from repro.serialization import (
-        clear_method_cache, pack, pack_buffer, stats, unpack,
-    )
+    from repro.serialization import clear_method_cache, pack, stats, unpack
 
     seconds = 0.08 if tiny else (0.8 if full else 0.3)
     rng = np.random.default_rng(0)

@@ -13,7 +13,7 @@ import time
 import numpy as np
 
 from repro.core import FuncXClient, FuncXService
-from repro.data import DataRef, InMemoryKVStore, SharedFSStore
+from repro.data import InMemoryKVStore, SharedFSStore
 
 
 def map_fn(data):

@@ -7,7 +7,6 @@ synthetic copy-task data (loss provably decreases), async checkpointing,
 and a mid-run simulated crash + restart from the latest checkpoint.
 """
 import argparse
-import os
 import tempfile
 import time
 

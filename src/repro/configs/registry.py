@@ -5,10 +5,10 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 from .base import ModelConfig, ShapeConfig
-from .shapes import SHAPES, SMOKE_SHAPES, get_shape
+from .shapes import SHAPES, get_shape
 
 from . import (
     granite_moe_1b_a400m,

@@ -22,8 +22,17 @@ from .auth import (
 )
 from .batching import DynamicBatcher, split_arrays, stack_arrays
 from .client import FuncXClient
-from .comms import Channel, ChannelHub
-from .endpoint import EndpointAgent
+from .comms import (
+    Channel,
+    ChannelHub,
+    LocalTransport,
+    SocketReactor,
+    TcpListener,
+    TcpTransport,
+    Transport,
+    parse_hostport,
+)
+from .endpoint import EndpointAgent, RemoteEndpointRunner, WireFunctionClient
 from .errors import (
     AuthError,
     EndpointUnavailable,
@@ -37,8 +46,12 @@ from .forwarder_pool import EndpointLine, ForwarderPool
 from .manager import Manager
 from .protocol import (
     Ack,
+    FnRequest,
+    FnResponse,
     Heartbeat,
     ProtocolError,
+    Register,
+    RegisterAck,
     ResultMsg,
     TaskBatch,
     TaskSpec,
@@ -82,17 +95,21 @@ __all__ = [
     "ALL_SCOPES", "Ack", "AuthError", "AuthService", "Channel", "ChannelHub",
     "Container", "ContainerRegistry", "ContainerSpec", "CostAwareRouter",
     "DynamicBatcher", "ElasticStrategy", "EndpointAgent", "EndpointInfo",
-    "EndpointLine", "EndpointRouter", "EndpointUnavailable", "ForwarderPool",
-    "FuncXClient", "FuncXError", "FuncXService", "Heartbeat",
-    "LeastLoadedEndpointRouter", "LocalProvider", "LocalityAwareRouter",
-    "Manager", "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge",
-    "ProtocolError", "Provider", "RandomEndpointRouter", "RandomRouter",
-    "RegisteredFunction", "RegistrationError", "ResultMsg", "Router",
-    "SCOPE_ENDPOINT", "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN",
-    "SCOPE_TRANSFER", "SimCloudProvider", "SimSlurmProvider", "Task",
-    "TaskBatch", "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus",
-    "TaskStore", "Token", "WarmCache", "WarmingAwareEndpointRouter",
-    "WarmingAwareRouter", "WorkItem", "WorkResult", "Worker", "from_wire",
-    "make_endpoint_router", "make_router", "proportional_allocation",
+    "EndpointLine", "EndpointRouter", "EndpointUnavailable", "FnRequest",
+    "FnResponse", "ForwarderPool", "FuncXClient", "FuncXError",
+    "FuncXService", "Heartbeat", "LeastLoadedEndpointRouter",
+    "LocalProvider", "LocalTransport", "LocalityAwareRouter", "Manager",
+    "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge", "ProtocolError",
+    "Provider", "RandomEndpointRouter", "RandomRouter", "Register",
+    "RegisterAck", "RegisteredFunction", "RegistrationError",
+    "RemoteEndpointRunner", "ResultMsg", "Router", "SCOPE_ENDPOINT",
+    "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN", "SCOPE_TRANSFER",
+    "SimCloudProvider", "SimSlurmProvider", "SocketReactor", "Task",
+    "TaskBatch",
+    "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus", "TaskStore",
+    "TcpListener", "TcpTransport", "Token", "Transport", "WarmCache",
+    "WarmingAwareEndpointRouter", "WarmingAwareRouter", "WireFunctionClient",
+    "WorkItem", "WorkResult", "Worker", "from_wire", "make_endpoint_router",
+    "make_router", "parse_hostport", "proportional_allocation",
     "split_arrays", "stack_arrays", "to_wire",
 ]

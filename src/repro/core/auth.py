@@ -14,8 +14,8 @@ import os
 import threading
 import time
 import uuid
-from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Iterable, Optional, Set
+from dataclasses import dataclass
+from typing import FrozenSet, Iterable, Optional, Set
 
 from .errors import AuthError
 
@@ -42,6 +42,21 @@ class Token:
             "token_id": self.token_id, "identity": self.identity,
             "scopes": sorted(self.scopes), "issued_by": self.issued_by,
             "expires": self.expires, "signature": self.signature})
+
+    @classmethod
+    def decode(cls, s: str) -> "Token":
+        """Inverse of :meth:`encode` — how a bearer token crosses a
+        process boundary (e.g. the ``--token`` argument of a remote
+        endpoint agent). The signature still has to validate against the
+        issuing service's secret; decoding grants nothing by itself."""
+        try:
+            d = json.loads(s)
+            return cls(token_id=d["token_id"], identity=d["identity"],
+                       scopes=frozenset(d["scopes"]),
+                       issued_by=d["issued_by"], expires=float(d["expires"]),
+                       signature=d["signature"])
+        except (ValueError, KeyError, TypeError) as e:
+            raise AuthError(f"malformed token: {e}") from e
 
 
 class AuthService:

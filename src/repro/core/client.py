@@ -7,7 +7,7 @@
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 from ..serialization import PackedBuffer, pack_buffer
 from .auth import Token
@@ -30,6 +30,15 @@ class FuncXClient:
         every endpoint without re-serializing (the fan-out analogue of
         ProxyStore's move-the-reference pattern)."""
         return pack_buffer(data, tag="task")
+
+    # -- federated deployment --------------------------------------------------
+    def endpoint_credentials(self) -> str:
+        """Encoded bearer token for a remote endpoint agent — the value of
+        ``python -m repro.core.endpoint --token`` (pass ``@file`` to keep
+        it off the command line). The remote process presents it in the
+        ``Register`` handshake; the service validates it against the same
+        AuthService that issued it."""
+        return self.token.encode()
 
     # -- registration ---------------------------------------------------------
     def register_function(self, fn: Callable, *, name: Optional[str] = None,

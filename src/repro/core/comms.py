@@ -1,14 +1,28 @@
-"""Forwarder↔endpoint channel (the ZeroMQ tier in funcX).
+"""Forwarder↔endpoint transport tier (the ZeroMQ tier in funcX).
 
-Duplex pair of queues carrying *packed* buffers (serialization facade with
-routing tags, §4.5). Supports fault injection: ``disconnect()`` /
-``reconnect()`` emulate network partitions; ``drop_rate`` emulates lossy
-links — both used by the fault-tolerance tests to exercise the paper's
-requeue-on-disconnect and heartbeat-loss behaviours.
+``Channel`` is the duplex message pipe carrying *packed* buffers
+(serialization facade with routing tags, §4.5). What moves the bytes is a
+pluggable :class:`Transport`:
+
+  - :class:`LocalTransport` (default): the in-memory queue pair — the
+    same-process deployment used by most tests and benchmarks, with fault
+    injection (``disconnect()`` / ``reconnect()`` emulate partitions,
+    ``drop_rate`` emulates lossy links);
+  - :class:`TcpTransport`: length-prefixed frames over a real TCP socket —
+    one side per OS process, nonblocking connect with reconnect + backoff
+    on the dialing (endpoint) side. The frame body is the PackedBuffer's
+    bytes verbatim, so the pack-once plane (DESIGN.md §5) extends across
+    process boundaries: the bytes written to the socket are the bytes the
+    facade produced at submit.
 
 ``ChannelHub`` is the select()-style multiplexer on top: one thread polls
 the service side of many channels at once (the transport substrate for the
-ForwarderPool — O(1) service threads for N endpoints).
+ForwarderPool — O(1) service threads for N endpoints). Channels push a
+readiness token when a frame arrives on their service side — synchronously
+from ``send_to_service`` for LocalTransport, from the shared
+:class:`SocketReactor` selector thread for accepted TcpTransports — so
+socket-backed and in-memory channels share one readiness path and the
+service never grows per-endpoint threads.
 
 Pack-once data plane (DESIGN.md §5): envelopes are protocol dicts whose
 user data is already an opaque byte frame, so ``send_*`` packs them with a
@@ -22,9 +36,12 @@ from __future__ import annotations
 
 import queue
 import random
+import selectors
+import socket
+import struct
 import threading
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from time import monotonic as _monotonic
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..serialization import (
     PackedBuffer,
@@ -33,15 +50,563 @@ from ..serialization import (
     unpack,
 )
 
+# Logical lanes of a duplex channel. A LocalTransport carries both in one
+# object (same-process deployment); a TcpTransport is one *side* of the
+# channel, so both lanes collapse onto its single socket.
+TO_ENDPOINT = 0
+TO_SERVICE = 1
+
+_LEN_PREFIX = struct.Struct(">I")          # frame = u32 length + buffer bytes
+MAX_FRAME = 64 * 1024 * 1024               # sanity bound; > payload limit
+
 
 class ChannelClosed(Exception):
     pass
 
 
+class Transport:
+    """Byte mover beneath a :class:`Channel`: duplex lanes of opaque frames.
+
+    Implementations deliver each sent frame at-most-once and in order per
+    lane; a ``send`` returning ``False`` means the frame was *not*
+    delivered (link down) — callers treat it like a dropped packet and the
+    requeue machinery above recovers. ``on_receive`` fires whenever a
+    frame lands on the receiving side (the hub-token hook).
+    """
+
+    on_receive: Optional[Callable[[], None]] = None
+
+    def send(self, lane: int, buf: bytes) -> bool:
+        raise NotImplementedError
+
+    def recv(self, lane: int, timeout: float) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def recv_nowait(self, lane: int) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def pending(self, lane: int) -> int:
+        raise NotImplementedError
+
+    def queue(self, lane: int) -> "queue.Queue[bytes]":
+        """The inbound byte queue for a lane (test/fault-injection hook)."""
+        raise NotImplementedError
+
+    @property
+    def connected(self) -> bool:
+        return True
+
+    def disconnect(self) -> None:          # fault injection; default no-op
+        pass
+
+    def reconnect(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class LocalTransport(Transport):
+    """The in-memory queue pair — byte-identical to the pre-Transport
+    Channel internals. Both lanes live in one object, so a single instance
+    serves both the service and endpoint sides of a same-process channel."""
+
+    def __init__(self):
+        self._queues: Tuple["queue.Queue[bytes]", "queue.Queue[bytes]"] = (
+            queue.Queue(), queue.Queue())
+        self.on_receive = None
+
+    def send(self, lane: int, buf: bytes) -> bool:
+        self._queues[lane].put(buf)
+        if lane == TO_SERVICE:
+            cb = self.on_receive
+            if cb is not None:
+                cb()
+        return True
+
+    def recv(self, lane: int, timeout: float) -> Optional[bytes]:
+        try:
+            return self._queues[lane].get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def recv_nowait(self, lane: int) -> Optional[bytes]:
+        try:
+            return self._queues[lane].get_nowait()
+        except queue.Empty:
+            return None
+
+    def pending(self, lane: int) -> int:
+        return self._queues[lane].qsize()
+
+    def queue(self, lane: int) -> "queue.Queue[bytes]":
+        return self._queues[lane]
+
+
+def _configure_socket(sock: socket.socket, timeout: float = 1.0) -> None:
+    sock.settimeout(timeout)
+    try:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    except OSError:
+        pass
+
+
+class SocketReactor:
+    """One selector thread for every accepted socket (and the listening
+    socket itself): accepts connections and drains frames for all of them
+    — the service side stays O(1) threads no matter how many endpoints
+    dial in (per-connection threads exist only transiently, for the
+    registration handshake).
+
+    Members implement ``reactor_sock()`` / ``_on_readable() -> bool`` /
+    ``_reactor_closed(sock)``. All selector mutation happens on the
+    reactor thread (adds/removes arrive over a wakeup socketpair), so a
+    socket is closed only after the selector has forgotten it — no stale
+    fd can collide with a reused descriptor number.
+    """
+
+    def __init__(self):
+        self._selector = selectors.DefaultSelector()
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._wake_w.setblocking(False)
+        self._selector.register(self._wake_r, selectors.EVENT_READ, None)
+        self._pending: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="socket-reactor")
+        self._thread.start()
+
+    def add(self, member) -> None:
+        self._pending.put(("add", member))
+        self._wakeup()
+
+    def remove(self, member) -> None:
+        """Unregister + close a member's socket (on the reactor thread)."""
+        self._pending.put(("remove", member))
+        self._wakeup()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._wakeup()
+        self._thread.join(timeout=2.0)
+
+    def _wakeup(self) -> None:
+        try:
+            self._wake_w.send(b"\0")
+        except OSError:
+            pass
+
+    def _process_pending(self) -> None:
+        while True:
+            try:
+                op, member = self._pending.get_nowait()
+            except queue.Empty:
+                return
+            sock = member.reactor_sock()
+            if op == "add":
+                if sock is None:
+                    member._reactor_closed(sock)
+                    continue
+                try:
+                    self._selector.register(sock, selectors.EVENT_READ,
+                                            member)
+                except (KeyError, ValueError, OSError):
+                    member._reactor_closed(sock)
+            else:
+                if sock is not None:
+                    try:
+                        self._selector.unregister(sock)
+                    except (KeyError, ValueError):
+                        pass
+                member._reactor_closed(sock)
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                events = self._selector.select(timeout=0.25)
+            except OSError:
+                continue
+            self._process_pending()
+            for key, _ in events:
+                if key.data is None:           # wakeup pipe
+                    try:
+                        while self._wake_r.recv(4096):
+                            pass
+                    except OSError:
+                        pass
+                    continue
+                if not key.data._on_readable():
+                    try:
+                        self._selector.unregister(key.fileobj)
+                    except (KeyError, ValueError):
+                        pass
+                    key.data._reactor_closed(key.fileobj)
+        # shutdown: release every member still registered
+        for key in list(self._selector.get_map().values()):
+            if key.data is None:
+                continue
+            try:
+                self._selector.unregister(key.fileobj)
+            except (KeyError, ValueError):
+                pass
+            key.data._reactor_closed(key.fileobj)
+        self._selector.close()
+        for s in (self._wake_r, self._wake_w):
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+class TcpTransport(Transport):
+    """One side of a channel over a real TCP socket.
+
+    Frames are ``u32 big-endian length || PackedBuffer bytes`` — the body
+    is exactly what :meth:`Channel._pack_envelope` produced, so pre-packed
+    payload frames cross the wire byte-identical (pack-once, DESIGN.md §5).
+
+    Two roles:
+
+    - **accepted** (service side): built around an already-connected
+      socket from :class:`TcpListener`. When the connection dies, the
+      transport is dead for good — the peer re-dials and the service
+      reattaches a *new* transport to the endpoint's line.
+    - **dialing** (endpoint side): built with ``connect=(host, port)``.
+      A background reader dials with exponential backoff, reads frames,
+      and on connection loss closes + re-dials forever (until ``close``),
+      firing ``on_connect`` after every successful dial so the endpoint
+      agent can re-register.
+
+    A frame cut short by a disconnect — mid-body or even mid-length-prefix
+    — is dropped, never delivered truncated; the sender's requeue path
+    (heartbeat loss → requeue in-flight) re-covers the loss.
+    """
+
+    def __init__(self, sock: Optional[socket.socket] = None, *,
+                 connect: Optional[Tuple[str, int]] = None,
+                 reactor: Optional[SocketReactor] = None,
+                 backoff: float = 0.05, backoff_max: float = 2.0,
+                 max_frame: int = MAX_FRAME,
+                 on_connect: Optional[Callable[[], None]] = None):
+        if (sock is None) == (connect is None):
+            raise ValueError("exactly one of sock/connect is required")
+        if reactor is not None and sock is None:
+            raise ValueError("reactor mode requires an accepted socket")
+        self._sock = sock
+        self._connect_addr = connect
+        self._reactor = reactor
+        self._backoff = backoff
+        self._backoff_max = backoff_max
+        self._max_frame = max_frame
+        self.on_connect = on_connect
+        self.on_receive = None
+
+        self._inbox: "queue.Queue[bytes]" = queue.Queue()
+        self._rbuf = bytearray()               # incremental frame parser
+        self._send_lock = threading.Lock()
+        self._connected = threading.Event()
+        self._suspended = threading.Event()    # disconnect(): no redial
+        self._stop = threading.Event()
+        self.dials = 0                          # successful (re)connects
+        self.frames_in = 0
+        self.frames_out = 0
+        if sock is not None:
+            _configure_socket(sock)
+            self._connected.set()
+        if reactor is not None:                # fed by the shared selector
+            reactor.add(self)
+        else:                                  # dedicated reader thread
+            self._reader = threading.Thread(target=self._reader_loop,
+                                            daemon=True, name="tcp-reader")
+            self._reader.start()
+
+    # -- state ----------------------------------------------------------------
+    @property
+    def connected(self) -> bool:
+        return self._connected.is_set() and not self._stop.is_set()
+
+    def disconnect(self) -> None:
+        """Fault injection: kill the live connection and (for a dialing
+        transport) hold off re-dialing until :meth:`reconnect`."""
+        self._suspended.set()
+        self._drop_connection()
+
+    def reconnect(self) -> None:
+        self._suspended.clear()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._drop_connection()
+
+    def _drop_connection(self) -> None:
+        self._connected.clear()
+        if self._reactor is not None:
+            # reactor mode: shutdown only — the fd stays open until the
+            # reactor sees EOF and forgets it, so the selector never holds
+            # a closed (reusable) descriptor
+            sock = self._sock
+            if sock is not None:
+                try:
+                    sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+            return
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # How long a send may go without the peer accepting a single byte
+    # before the link is declared dead. Progress resets the clock, so a
+    # large frame on a slow link is fine — only a truly stalled peer
+    # (full receive buffer, hung process) trips it.
+    SEND_STALL_TIMEOUT = 10.0
+
+    # -- data plane -----------------------------------------------------------
+    def send(self, lane: int, buf: bytes) -> bool:
+        sock = self._sock
+        if sock is None or not self.connected:
+            return False
+        data = memoryview(_LEN_PREFIX.pack(len(buf)) + buf)
+        try:
+            with self._send_lock:
+                stall_deadline = None
+                while data:
+                    try:
+                        n = sock.send(data)
+                    except socket.timeout:
+                        # no bytes accepted within the socket timeout —
+                        # keep pushing while the link is alive and the
+                        # stall budget lasts (sendall would treat its
+                        # timeout as a *total* deadline and kill big
+                        # frames on slow links)
+                        if self._stop.is_set() \
+                                or not self._connected.is_set():
+                            raise OSError("link down mid-send")
+                        now = _monotonic()
+                        if stall_deadline is None:
+                            stall_deadline = now + self.SEND_STALL_TIMEOUT
+                        elif now >= stall_deadline:
+                            raise OSError("peer stalled")
+                        continue
+                    data = data[n:]
+                    stall_deadline = None
+            self.frames_out += 1
+            return True
+        except (OSError, ValueError):
+            # a partially written frame poisons the stream — drop the
+            # connection so the peer discards the fragment at EOF
+            self._drop_connection()
+            return False
+
+    def recv(self, lane: int, timeout: float) -> Optional[bytes]:
+        try:
+            return self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def recv_nowait(self, lane: int) -> Optional[bytes]:
+        try:
+            return self._inbox.get_nowait()
+        except queue.Empty:
+            return None
+
+    def pending(self, lane: int) -> int:
+        return self._inbox.qsize()
+
+    def queue(self, lane: int) -> "queue.Queue[bytes]":
+        return self._inbox
+
+    # -- frame parsing (shared by both reader styles) -------------------------
+    def _feed(self, chunk: bytes) -> bool:
+        """Accumulate raw bytes; deliver every complete frame. Returns
+        False when the stream is poisoned (oversized frame) — cut the
+        link; a trailing partial frame just waits for more bytes and is
+        discarded if the connection dies first."""
+        self._rbuf += chunk
+        while len(self._rbuf) >= _LEN_PREFIX.size:
+            (n,) = _LEN_PREFIX.unpack_from(self._rbuf)
+            if n > self._max_frame:
+                return False
+            if len(self._rbuf) < _LEN_PREFIX.size + n:
+                break
+            frame = bytes(self._rbuf[_LEN_PREFIX.size:_LEN_PREFIX.size + n])
+            del self._rbuf[:_LEN_PREFIX.size + n]
+            self._inbox.put(frame)
+            self.frames_in += 1
+            cb = self.on_receive
+            if cb is not None:
+                cb()
+        return True
+
+    # -- reactor protocol (accepted side, shared selector thread) -------------
+    def reactor_sock(self) -> Optional[socket.socket]:
+        return self._sock
+
+    def _on_readable(self) -> bool:
+        """One recv per readiness event (the level-triggered selector
+        re-signals leftovers). False ends the membership."""
+        sock = self._sock
+        if sock is None or self._stop.is_set():
+            return False
+        try:
+            chunk = sock.recv(65536)
+        except (BlockingIOError, InterruptedError, socket.timeout):
+            return True
+        except OSError:
+            self._connected.clear()
+            return False
+        if not chunk:                          # EOF (incl. our shutdown)
+            self._connected.clear()
+            return False
+        return self._feed(chunk)
+
+    def _reactor_closed(self, sock) -> None:
+        self._connected.clear()
+        s, self._sock = self._sock, None
+        if s is not None:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    # -- reader (dialing side: dedicated thread, redial with backoff) ---------
+    def _dial(self) -> Optional[socket.socket]:
+        backoff = self._backoff
+        while not self._stop.is_set() and not self._suspended.is_set():
+            try:
+                sock = socket.create_connection(self._connect_addr,
+                                                timeout=1.0)
+                _configure_socket(sock)
+                return sock
+            except OSError:
+                self._stop.wait(backoff)
+                backoff = min(backoff * 2, self._backoff_max)
+        return None
+
+    def _reader_loop(self) -> None:
+        while not self._stop.is_set():
+            sock = self._sock
+            if sock is None:
+                if self._connect_addr is None:
+                    return               # accepted side: gone for good
+                if self._suspended.is_set():
+                    self._stop.wait(0.05)
+                    continue
+                sock = self._dial()
+                if sock is None:
+                    continue
+                self._sock = sock
+                self._connected.set()
+                self.dials += 1
+                cb = self.on_connect
+                if cb is not None:
+                    try:
+                        cb()
+                    except Exception:
+                        pass
+            self._read_frames(sock)
+            # connection over: any partial frame in the buffer is dropped
+            if self._sock is sock:
+                self._drop_connection()
+
+    def _read_frames(self, sock: socket.socket) -> None:
+        """Drain one connection. Only complete frames are delivered; a
+        short read at EOF (mid-frame or mid-prefix) is discarded with the
+        connection."""
+        self._rbuf.clear()
+        while not self._stop.is_set() and self._sock is sock:
+            try:
+                chunk = sock.recv(65536)
+            except socket.timeout:
+                continue
+            except (OSError, ValueError):
+                return
+            if not chunk:
+                return                   # EOF
+            if not self._feed(chunk):
+                return                   # garbage stream: cut the link
+
+
+class TcpListener:
+    """Nonblocking accept on the shared :class:`SocketReactor`: every
+    accepted connection becomes a reactor-fed :class:`TcpTransport`, and
+    ``on_transport`` runs on a short-lived handshake thread so a slow
+    dialer never blocks accepts (or the reactor). With no reactor given
+    the listener makes its own — a service passes one in so listener
+    restarts don't tear down live connections."""
+
+    def __init__(self, host: str, port: int,
+                 on_transport: Callable[[TcpTransport, Tuple[str, int]],
+                                        None],
+                 backlog: int = 128,
+                 reactor: Optional[SocketReactor] = None):
+        self._on_transport = on_transport
+        self._own_reactor = reactor is None
+        self.reactor = reactor if reactor is not None else SocketReactor()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(backlog)
+        self._sock.setblocking(False)
+        self.address: Tuple[str, int] = self._sock.getsockname()[:2]
+        self._closed = threading.Event()
+        self.reactor.add(self)
+
+    # -- reactor protocol ------------------------------------------------------
+    def reactor_sock(self) -> Optional[socket.socket]:
+        return self._sock
+
+    def _on_readable(self) -> bool:
+        if self._closed.is_set():
+            return False
+        while True:
+            try:
+                conn, peer = self._sock.accept()
+            except (BlockingIOError, InterruptedError):
+                return True
+            except OSError:
+                return not self._closed.is_set()
+            transport = TcpTransport(sock=conn, reactor=self.reactor)
+            threading.Thread(target=self._on_transport,
+                             args=(transport, peer), daemon=True,
+                             name="tcp-handshake").start()
+
+    def _reactor_closed(self, sock) -> None:
+        s, self._sock = self._sock, None
+        if s is not None:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        """Stop accepting. Live connections stay up unless this listener
+        owns its reactor (standalone use), in which case everything the
+        reactor serves goes down with it."""
+        self._closed.set()
+        if self._own_reactor:
+            self.reactor.close()
+        else:
+            self.reactor.remove(self)
+
+
 class Channel:
-    def __init__(self, drop_rate: float = 0.0, seed: int = 0):
-        self._to_endpoint: "queue.Queue[bytes]" = queue.Queue()
-        self._to_service: "queue.Queue[bytes]" = queue.Queue()
+    """Duplex message pipe over a :class:`Transport` (default: in-memory).
+
+    With a :class:`TcpTransport` the instance represents one *side* of the
+    channel — call only that side's ``send_to_*`` / ``recv_at_*`` pair; the
+    peer process holds the mirror instance around its own transport.
+    """
+
+    def __init__(self, drop_rate: float = 0.0, seed: int = 0,
+                 transport: Optional[Transport] = None):
+        self.transport = transport if transport is not None \
+            else LocalTransport()
+        self.transport.on_receive = self._frame_arrived
         self._connected = threading.Event()
         self._connected.set()
         self._closed = False
@@ -55,21 +620,42 @@ class Channel:
     # -- state ----------------------------------------------------------------
     @property
     def connected(self) -> bool:
-        return self._connected.is_set() and not self._closed
+        return (self._connected.is_set() and not self._closed
+                and self.transport.connected)
 
     def disconnect(self) -> None:
         self._connected.clear()
+        self.transport.disconnect()
 
     def reconnect(self) -> None:
         if not self._closed:
             self._connected.set()
+            self.transport.reconnect()
 
     def close(self) -> None:
         self._closed = True
         self._connected.clear()
+        self.transport.close()
 
     def _maybe_drop(self) -> bool:
         return self.drop_rate > 0 and self._rng.random() < self.drop_rate
+
+    def _frame_arrived(self) -> None:
+        """Transport callback: a frame landed on the service side — push
+        the hub readiness token (same path for local and socket frames)."""
+        hub = self._hub
+        if hub is not None:
+            hub[0]._notify(hub[1])
+
+    # Direct queue access, kept for fault-injection in tests (raw poison
+    # bytes). For TCP transports both names alias the single inbox.
+    @property
+    def _to_endpoint(self) -> "queue.Queue[bytes]":
+        return self.transport.queue(TO_ENDPOINT)
+
+    @property
+    def _to_service(self) -> "queue.Queue[bytes]":
+        return self.transport.queue(TO_SERVICE)
 
     @staticmethod
     def _pack_envelope(obj: Any, tag: str) -> bytes:
@@ -86,14 +672,14 @@ class Channel:
         if not self.connected or self._maybe_drop():
             return False
         buf = self._pack_envelope(obj, tag)
+        if not self.transport.send(TO_ENDPOINT, buf):
+            return False
         self.bytes_to_endpoint += len(buf)
-        self._to_endpoint.put(buf)
         return True
 
     def recv_at_endpoint(self, timeout: float = 0.1) -> Optional[tuple]:
-        try:
-            buf = self._to_endpoint.get(timeout=timeout)
-        except queue.Empty:
+        buf = self.transport.recv(TO_ENDPOINT, timeout)
+        if buf is None:
             return None
         try:
             return unpack(buf)
@@ -105,17 +691,14 @@ class Channel:
         if not self.connected or self._maybe_drop():
             return False
         buf = self._pack_envelope(obj, tag)
+        if not self.transport.send(TO_SERVICE, buf):
+            return False
         self.bytes_to_service += len(buf)
-        self._to_service.put(buf)
-        hub = self._hub
-        if hub is not None:
-            hub[0]._notify(hub[1])
         return True
 
     def recv_at_service(self, timeout: float = 0.1) -> Optional[tuple]:
-        try:
-            buf = self._to_service.get(timeout=timeout)
-        except queue.Empty:
+        buf = self.transport.recv(TO_SERVICE, timeout)
+        if buf is None:
             return None
         try:
             return unpack(buf)
@@ -123,17 +706,19 @@ class Channel:
             return None                        # poison frame: drop
 
     def pending_to_service(self) -> int:
-        return self._to_service.qsize()
+        return self.transport.pending(TO_SERVICE)
 
 
 class ChannelHub:
     """select()-style readiness multiplexer over many channels' service side.
 
-    Channels registered with the hub push a readiness token whenever the
-    endpoint sends a message, so one poller thread can sleep on a single
-    queue instead of spinning over N channels. ``poll`` wakes on the first
-    ready channel and then drains every token already available — one
-    syscall-shaped wait per quiet period, not per channel.
+    Channels registered with the hub push a readiness token whenever a
+    frame lands on their service side — synchronously for in-memory
+    channels, from the reactor/reader thread for TCP-backed ones — so one
+    poller thread can sleep on a single queue instead of spinning over N
+    channels. ``poll`` wakes on the first ready channel and then drains
+    every token already available — one syscall-shaped wait per quiet
+    period, not per channel.
 
     Tokens are advisory: ``poll`` re-checks the channel queue non-blockingly
     (a duplicate token — possible in the registration race window — yields
@@ -194,9 +779,8 @@ class ChannelHub:
             ch = channels.get(key)
             if ch is None:
                 continue
-            try:
-                buf = ch._to_service.get_nowait()
-            except queue.Empty:
+            buf = ch.transport.recv_nowait(TO_SERVICE)
+            if buf is None:
                 continue                       # duplicate/stale token
             try:
                 out.append((key, PackedBuffer.from_bytes(buf)))
@@ -204,3 +788,11 @@ class ChannelHub:
                 continue                       # poison frame: drop, don't
                 #                                kill the shared poller
         return out
+
+
+def parse_hostport(s: str, default_host: str = "127.0.0.1") -> Tuple[str, int]:
+    """``host:port`` / ``:port`` / ``port`` → ``(host, port)``."""
+    host, sep, port = s.rpartition(":")
+    if not sep:
+        host, port = default_host, s
+    return (host or default_host, int(port))

@@ -15,11 +15,26 @@ mirroring the paper:
   their in-flight tasks (§4.3 fault tolerance);
 - optional speculative re-execution of stragglers (beyond paper);
 - optional elastic provisioning strategy (§6.3).
+
+Deployment modes (DESIGN.md §2): the agent is transport-agnostic. In the
+same-process mode it shares a ``Channel`` (LocalTransport) with the
+service; in the federated mode this module doubles as the **endpoint-agent
+entrypoint** —
+
+    python -m repro.core.endpoint --connect HOST:PORT --token @token.json
+
+— dialing the service's TCP listener, registering over the wire
+(``Register``/``RegisterAck`` handshake), fetching function bodies on
+demand (``FnRequest``/``FnResponse``), and surviving service restarts by
+re-dialing + re-registering under the same endpoint id (the service then
+requeues whatever was in flight).
 """
 from __future__ import annotations
 
+import argparse
 import collections
 import itertools
+import pickle
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
@@ -32,12 +47,17 @@ from ..data import (
     stage_outputs,
 )
 from ..serialization import PackedBuffer, SerializationError, pack_buffer
-from .comms import Channel
+from .comms import Channel, TcpTransport, parse_hostport
+from .errors import RegistrationError
 from .manager import Manager
 from .protocol import (
     Ack,
+    FnRequest,
+    FnResponse,
     Heartbeat,
     ProtocolError,
+    Register,
+    RegisterAck,
     ResultMsg,
     TaskBatch,
     TaskSpec,
@@ -68,6 +88,7 @@ class EndpointAgent:
         speculation_factor: float = 4.0,
         speculation_min: float = 0.25,
         stage_results: bool = True,
+        extra_handler: Optional[Callable[[Any], None]] = None,
     ):
         self.endpoint_id = endpoint_id
         self.channel = channel
@@ -84,6 +105,9 @@ class EndpointAgent:
         self.speculation_factor = speculation_factor
         self.speculation_min = speculation_min
         self.stage_results = stage_results
+        # Non-task wire messages (FnResponse, RegisterAck on a re-dial)
+        # are routed here — the remote runner's hook into the recv loop.
+        self.extra_handler = extra_handler
 
         self.managers: Dict[str, Manager] = {}
         self._managers_lock = threading.RLock()
@@ -96,6 +120,12 @@ class EndpointAgent:
         self._fn_cache: Dict[str, Tuple[Callable, bool]] = {}
         self._retries: Dict[str, int] = {}
         self._completed: Set[str] = set()
+        # Result envelopes the channel refused (link down): retransmitted
+        # by the heartbeat loop once the link is back. Without this, a
+        # result produced during an outage would be lost forever — the
+        # task is already in _completed, so re-execution after the
+        # requeue-on-disconnect would be dropped as a duplicate.
+        self._unsent_results: "collections.deque" = collections.deque()
         self._dispatched_at: Dict[str, Tuple[float, TaskSpec, str]] = {}
         self._durations: collections.deque = collections.deque(maxlen=256)
 
@@ -190,6 +220,11 @@ class EndpointAgent:
                 self.channel.send_to_service(
                     to_wire(Ack(task_ids=[s.task_id for s in msg.tasks],
                                 t_endpoint_recv=t_recv)), tag="ack")
+            elif self.extra_handler is not None:
+                try:
+                    self.extra_handler(msg)
+                except Exception:
+                    pass               # a bad handler never kills recv
 
     def _enqueue(self, spec: TaskSpec, front: bool = False) -> None:
         self.tasks_received += 1
@@ -290,7 +325,7 @@ class EndpointAgent:
 
     def _on_result(self, manager_id: str, res: WorkResult) -> None:
         if res.task_id in self._completed:
-            return                      # duplicate from speculation — drop
+            return                 # duplicate (speculation / requeue) — drop
         self._completed.add(res.task_id)
         disp = self._dispatched_at.pop(res.task_id, None)
         if disp is not None:
@@ -322,13 +357,13 @@ class EndpointAgent:
                         res.task_id,
                         f"result serialization: {type(e).__name__}: {e}")
                     return
-                self.channel.send_to_service(to_wire(ResultMsg(
+                self._send_result(to_wire(ResultMsg(
                     task_id=res.task_id, status=res.status,
                     result=pack_buffer(staged, tag="ret"),
                     error=res.error, remote_traceback=res.remote_traceback,
                     stamps=res.stamps, cold_start=res.cold_start,
                     build_time=res.build_time, worker_id=res.worker_id,
-                    manager_id=manager_id)), tag="result")
+                    manager_id=manager_id)))
                 return
             if (self.stage_results and self.store is not None
                     and len(packed) > SERVICE_PAYLOAD_LIMIT):
@@ -337,21 +372,38 @@ class EndpointAgent:
                                        packed=packed)
                 packed = pack_buffer(staged, tag="ret")   # tiny DataRef
             result = packed
-        self.channel.send_to_service(to_wire(ResultMsg(
+        self._send_result(to_wire(ResultMsg(
             task_id=res.task_id, status=res.status, result=result,
             error=res.error, remote_traceback=res.remote_traceback,
             stamps=res.stamps, cold_start=res.cold_start,
             build_time=res.build_time, worker_id=res.worker_id,
-            manager_id=manager_id)), tag="result")
+            manager_id=manager_id)))
 
     def _send_failure(self, task_id: str, error: str,
                       status: str = "FAILED") -> None:
         self._completed.add(task_id)
-        self.channel.send_to_service(to_wire(ResultMsg(
-            task_id=task_id, status=status, error=error)), tag="result")
+        self._send_result(to_wire(ResultMsg(
+            task_id=task_id, status=status, error=error)))
+
+    def _send_result(self, env: dict) -> None:
+        """Ship one result envelope; park it for retransmission if the
+        link refuses (the service drops duplicates by task id, so a
+        retransmit racing a requeued re-execution stays exactly-once)."""
+        if not self.channel.send_to_service(env, tag="result"):
+            self._unsent_results.append(env)
+
+    def _flush_unsent_results(self) -> None:
+        """Single consumer (heartbeat loop): retransmit parked results in
+        completion order until the link refuses again."""
+        while self._unsent_results:
+            env = self._unsent_results[0]
+            if not self.channel.send_to_service(env, tag="result"):
+                return
+            self._unsent_results.popleft()
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():
+            self._flush_unsent_results()
             self.channel.send_to_service(to_wire(self._heartbeat()), tag="hb")
             time.sleep(self.heartbeat_interval)
 
@@ -439,3 +491,292 @@ class EndpointAgent:
                 self.speculative_dispatches += 1
                 # push threshold forward so we don't spam duplicates
                 self._dispatched_at[task_id] = (now_s, spec, mid)
+
+
+# ---------------------------------------------------------------------------
+# Federated deployment: the endpoint-agent entrypoint (TcpTransport side).
+# ---------------------------------------------------------------------------
+
+def demo_noop(data):
+    """Module-level demo function: resolvable by reference from any
+    process with ``repro`` on its path (plain pickle ships module-level
+    functions by name — the cross-process analogue of funcX's serialized
+    function bodies)."""
+    return None
+
+
+def demo_square(data):
+    x = data["x"] if isinstance(data, dict) else data
+    return x * x
+
+
+def demo_sleep(data):
+    time.sleep(float(data.get("s", 0.0)) if isinstance(data, dict) else 0.0)
+    return None
+
+
+def spawn_endpoint_process(address, token: str, *,
+                           name: str = "remote-endpoint",
+                           n_managers: int = 1, workers: int = 4,
+                           stderr=None):
+    """Spawn ``python -m repro.core.endpoint`` as a child process and block
+    until it prints its readiness line. Returns ``(proc, endpoint_id)``.
+
+    The one place the spawn recipe lives (benchmarks, tests, and examples
+    all call it): PYTHONPATH gains this package's ``src`` root so the
+    child resolves ``repro`` no matter the caller's cwd, and ``token`` may
+    be the raw credential string or an ``@file`` reference.
+    """
+    import os
+    import subprocess
+    import sys
+    import tempfile
+    if not isinstance(address, str):
+        address = f"{address[0]}:{address[1]}"
+    src_dir = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    # stderr goes to an unbounded temp file, not a pipe: a chatty child
+    # can never fill a pipe buffer and wedge, and the capture is still
+    # readable when the readiness line never appears
+    capture = tempfile.TemporaryFile("w+") if stderr is None else None
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.endpoint",
+         "--connect", address, "--token", token, "--name", name,
+         "--managers", str(n_managers), "--workers", str(workers)],
+        env=env, stdout=subprocess.PIPE,
+        stderr=capture if capture is not None else stderr, text=True)
+    line = (proc.stdout.readline() or "").strip()
+    if not line.startswith("ENDPOINT_READY"):
+        proc.terminate()
+        err = ""
+        if capture is not None:
+            proc.wait(timeout=5)
+            capture.seek(0)
+            err = capture.read()
+        raise RuntimeError(
+            f"endpoint subprocess failed (got {line!r}): {err[-2000:]}")
+    if capture is not None:
+        capture.close()                # child keeps its own fd
+    return proc, line.split()[-1]
+
+
+class WireFunctionClient:
+    """Endpoint-side function fetch over the channel.
+
+    ``fetch`` is the agent's ``fetch_function`` hook: it sends an
+    ``FnRequest`` and blocks until the matching ``FnResponse`` arrives via
+    :meth:`handle_response` (wired into the agent recv loop through
+    ``extra_handler``). Requests are re-sent about once a second until
+    answered, so a request lost to a link drop is recovered after the
+    re-dial instead of hanging the fetch.
+    """
+
+    def __init__(self, channel: Channel, timeout: float = 15.0):
+        self.channel = channel
+        self.timeout = timeout
+        self._lock = threading.Lock()
+        self._pending: Dict[str, dict] = {}
+
+    def fetch(self, function_id: str) -> Tuple[Callable, bool]:
+        with self._lock:
+            box = self._pending.get(function_id)
+            if box is None:
+                box = {"event": threading.Event(), "resp": None}
+                self._pending[function_id] = box
+        deadline = time.time() + self.timeout
+        next_send = 0.0
+        try:
+            while not box["event"].is_set():
+                now_t = time.time()
+                if now_t >= deadline:
+                    raise RegistrationError(
+                        f"function fetch timed out: {function_id}")
+                if now_t >= next_send:
+                    ok = self.channel.send_to_service(
+                        to_wire(FnRequest(function_id=function_id)),
+                        tag="fn")
+                    next_send = now_t + (1.0 if ok else 0.1)
+                box["event"].wait(0.1)
+        finally:
+            with self._lock:
+                self._pending.pop(function_id, None)
+        resp: FnResponse = box["resp"]
+        if resp.error:
+            raise RegistrationError(
+                f"service refused function {function_id}: {resp.error}")
+        fn = pickle.loads(resp.payload)
+        return fn, resp.wants_env
+
+    def handle_response(self, resp: FnResponse) -> None:
+        with self._lock:
+            box = self._pending.get(resp.function_id)
+        if box is not None:
+            box["resp"] = resp
+            box["event"].set()
+
+
+class RemoteEndpointRunner:
+    """Owns one federated endpoint: dial → register → run the agent.
+
+    The TcpTransport re-dials on its own after any connection loss; this
+    runner's ``on_connect`` hook re-sends ``Register`` with the already
+    assigned endpoint id, and the service answers by swapping the new
+    channel under the endpoint's line and requeueing its in-flight tasks —
+    so a service listener restart costs retransmission, never task loss.
+    """
+
+    def __init__(self, address: "str | Tuple[str, int]", token: str, *,
+                 name: str = "remote-endpoint", n_managers: int = 1,
+                 workers_per_manager: int = 4, router: str = "warming_aware",
+                 heartbeat_interval: float = 0.05,
+                 register_timeout: float = 30.0,
+                 manager_kw: Optional[dict] = None, **agent_kw):
+        self.address = (parse_hostport(address)
+                        if isinstance(address, str) else address)
+        self._token = token
+        self.name = name
+        self.n_managers = n_managers
+        self.workers_per_manager = workers_per_manager
+        self.router = router
+        self.heartbeat_interval = heartbeat_interval
+        self.register_timeout = register_timeout
+        self.manager_kw = manager_kw or {}
+        self.agent_kw = agent_kw
+        self.endpoint_id: Optional[str] = None
+        self.channel: Optional[Channel] = None
+        self.transport: Optional[TcpTransport] = None
+        self.agent: Optional[EndpointAgent] = None
+        self.fns: Optional[WireFunctionClient] = None
+        self.re_registrations = 0
+        self.rejected = False          # re-registration refused by service
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> str:
+        """Dial, register, start managers/workers. Returns the endpoint id
+        the service assigned (blocks up to ``register_timeout``).
+
+        ``on_connect`` is installed *before* the first dial: until the
+        handshake assigns an endpoint id it is a guarded no-op, and from
+        then on every re-dial — even one racing agent/manager startup —
+        re-registers under that id. Installing it after start-up would
+        leave a window where a drop re-dials without re-registering and
+        the endpoint wedges (the service would just keep discarding the
+        unregistered connection's heartbeats)."""
+        self.transport = TcpTransport(connect=self.address,
+                                      on_connect=self._re_register)
+        self.channel = Channel(transport=self.transport)
+        self.endpoint_id = self._handshake()
+        self.fns = WireFunctionClient(self.channel)
+        self.agent = EndpointAgent(
+            self.endpoint_id, self.channel, self.fns.fetch,
+            router=self.router, heartbeat_interval=self.heartbeat_interval,
+            extra_handler=self._handle_extra, **self.agent_kw)
+        for _ in range(self.n_managers):
+            self.agent.add_manager(n_workers=self.workers_per_manager,
+                                   **self.manager_kw)
+        self.agent.start()
+        return self.endpoint_id
+
+    def stop(self) -> None:
+        if self.agent is not None:
+            self.agent.stop()
+        if self.channel is not None:
+            self.channel.close()
+
+    # -- handshake ------------------------------------------------------------
+    def _register_msg(self, endpoint_id: str = "") -> dict:
+        return to_wire(Register(name=self.name, token=self._token,
+                                endpoint_id=endpoint_id))
+
+    def _handshake(self) -> str:
+        """First registration: the agent recv loop is not running yet, so
+        the ack is read straight off the channel."""
+        deadline = time.time() + self.register_timeout
+        while time.time() < deadline:
+            if not self.channel.send_to_service(self._register_msg(),
+                                                tag="register"):
+                time.sleep(0.05)       # still dialing (backoff in transport)
+                continue
+            wire = self.channel.recv_at_endpoint(timeout=2.0)
+            if wire is None:
+                continue               # resend; duplicates are ignored
+            env, _tag = wire
+            try:
+                msg = from_wire(env)
+            except (ProtocolError, SerializationError):
+                continue
+            if isinstance(msg, RegisterAck):
+                if not msg.ok:
+                    raise RegistrationError(
+                        f"registration refused: {msg.error}")
+                return msg.endpoint_id
+        raise RegistrationError(
+            f"no RegisterAck from {self.address} "
+            f"within {self.register_timeout}s")
+
+    def _re_register(self) -> None:
+        """TcpTransport.on_connect: runs on the reader thread right after
+        a successful re-dial."""
+        if self.channel is None or self.endpoint_id is None:
+            return
+        self.re_registrations += 1
+        self.channel.reconnect()
+        self.channel.send_to_service(self._register_msg(self.endpoint_id),
+                                     tag="register")
+
+    def _handle_extra(self, msg: Any) -> None:
+        if isinstance(msg, FnResponse) and self.fns is not None:
+            self.fns.handle_response(msg)
+        elif isinstance(msg, RegisterAck) and not msg.ok:
+            # Re-registration refused (e.g. a fully restarted service no
+            # longer knows this endpoint id). Tasks already queued keep
+            # executing; the flag tells operators a fresh `start` (new
+            # registration, new id) is needed.
+            self.rejected = True
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.core.endpoint",
+        description="Federated endpoint agent: connect to a FuncXService "
+                    "TCP listener, register, and serve tasks with local "
+                    "managers/workers (paper §4.3 deployed for real).")
+    p.add_argument("--connect", required=True, metavar="HOST:PORT",
+                   help="address of the service listener "
+                        "(FuncXService.listen())")
+    p.add_argument("--token", default="",
+                   help="bearer token: Token.encode() JSON, or @FILE to "
+                        "read it from a file")
+    p.add_argument("--name", default="remote-endpoint")
+    p.add_argument("--managers", type=int, default=1)
+    p.add_argument("--workers", type=int, default=4,
+                   help="workers per manager")
+    p.add_argument("--router", default="warming_aware")
+    p.add_argument("--heartbeat", type=float, default=0.05,
+                   help="heartbeat interval, seconds")
+    args = p.parse_args(argv)
+    token = args.token
+    if token.startswith("@"):
+        with open(token[1:]) as f:
+            token = f.read().strip()
+    runner = RemoteEndpointRunner(
+        args.connect, token, name=args.name, n_managers=args.managers,
+        workers_per_manager=args.workers, router=args.router,
+        heartbeat_interval=args.heartbeat)
+    eid = runner.start()
+    # parseable readiness line — parents wait on this before submitting
+    print(f"ENDPOINT_READY {eid}", flush=True)
+    try:
+        while True:
+            time.sleep(0.5)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        runner.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,12 +17,14 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from ..serialization import SerializationError
 from .comms import Channel, ChannelHub
 from .protocol import (
     Ack,
+    FnRequest,
+    FnResponse,
     Heartbeat,
     ProtocolError,
     ResultMsg,
@@ -95,10 +97,15 @@ class ForwarderPool:
         *,
         batch_size: int = 32,
         heartbeat_timeout: float = 0.5,
+        fn_resolver: Optional[Callable[[str], Tuple[bytes, bool]]] = None,
     ):
         self.task_store = task_store
         self.batch_size = batch_size
         self.heartbeat_timeout = heartbeat_timeout
+        # (function_id) -> (serialized body, wants_env); serves FnRequest
+        # from remote endpoints (same-process agents call the service's
+        # export hook directly and never send one).
+        self.fn_resolver = fn_resolver
 
         self.hub = ChannelHub()
         self._lines: Dict[str, EndpointLine] = {}
@@ -142,6 +149,26 @@ class ForwarderPool:
         self.hub.unregister(endpoint_id)
         with self._cond:
             return self._lines.pop(endpoint_id, None)
+
+    def reattach(self, endpoint_id: str, channel: Channel) -> EndpointLine:
+        """Swap the channel under an existing line — an endpoint that lost
+        its socket dialed back in. The line keeps its queue and metrics;
+        everything that was in flight on the dead channel is requeued
+        (requeue-on-disconnect semantics, paper §4.3), so tasks dispatched
+        into the void complete after the reconnect."""
+        with self._cond:
+            line = self._lines[endpoint_id]
+            old = line.channel
+            line.channel = channel
+            line.endpoint_connected = True
+            line.last_heartbeat = time.time()
+            self._cond.notify()
+        self.hub.unregister(endpoint_id)
+        self.hub.register(endpoint_id, channel)
+        if old is not channel:
+            old.close()
+        self.requeue_in_flight(line)
+        return line
 
     def line(self, endpoint_id: str) -> EndpointLine:
         with self._lock:
@@ -266,6 +293,8 @@ class ForwarderPool:
                     self._handle_ack(msg)
                 elif isinstance(msg, ResultMsg):
                     self._handle_result(line, msg)
+                elif isinstance(msg, FnRequest):
+                    self._handle_fn_request(line, msg)
 
     def _handle_heartbeat(self, line: EndpointLine, hb: Heartbeat) -> None:
         line.last_heartbeat = time.time()
@@ -311,6 +340,23 @@ class ForwarderPool:
         line.results_received += 1
         self.results_received += 1
         self.task_store.mark_done(res.task_id)
+
+    def _handle_fn_request(self, line: EndpointLine, req: FnRequest) -> None:
+        """Remote endpoint pulling a function body. Errors travel back in
+        the response — the requesting fetch fails that one task's staging,
+        never this shared recv loop."""
+        if self.fn_resolver is None:
+            resp = FnResponse(function_id=req.function_id,
+                              error="service has no function resolver")
+        else:
+            try:
+                blob, wants_env = self.fn_resolver(req.function_id)
+                resp = FnResponse(function_id=req.function_id,
+                                  payload=blob, wants_env=wants_env)
+            except Exception as e:
+                resp = FnResponse(function_id=req.function_id,
+                                  error=f"{type(e).__name__}: {e}")
+        line.channel.send_to_endpoint(to_wire(resp), tag="fn")
 
     def _monitor_loop(self) -> None:
         """Heartbeat-based endpoint liveness (paper: 30 s default; scaled

@@ -9,11 +9,18 @@ in exactly one place.
 
 Wire kinds:
 
-  ``task_batch``  service → endpoint   batch of TaskSpec (internal batching §4.6)
-  ``ack``         endpoint → service   receipt of a batch (hierarchical queuing)
-  ``heartbeat``   endpoint → service   liveness + load/warm-container
-                                       advertisement (feeds federation routing)
-  ``result``      endpoint → service   one task outcome
+  ``task_batch``    service → endpoint   batch of TaskSpec (internal batching §4.6)
+  ``ack``           endpoint → service   receipt of a batch (hierarchical queuing)
+  ``heartbeat``     endpoint → service   liveness + load/warm-container
+                                         advertisement (feeds federation routing)
+  ``result``        endpoint → service   one task outcome
+  ``register``      endpoint → service   transport handshake: authenticate and
+                                         attach (or re-attach) an endpoint that
+                                         dialed in over a socket transport
+  ``register_ack``  service → endpoint   handshake outcome + assigned endpoint id
+  ``fn_request``    endpoint → service   fetch a registered function's body
+  ``fn_response``   service → endpoint   serialized function bytes (funcX ships
+                                         serialized function bodies to agents)
 
 Pack-once data plane (DESIGN.md §5): task payloads and result values that
 are already :class:`~repro.serialization.PackedBuffer`\\ s travel inside the
@@ -110,8 +117,49 @@ class ResultMsg:
     manager_id: str = ""
 
 
+@dataclass
+class Register:
+    """Socket-transport handshake, endpoint → service: the first frame on
+    a freshly dialed connection. ``token`` is a :meth:`Token.encode` string
+    (validated against the service's AuthService); a non-empty
+    ``endpoint_id`` asks to re-attach to an existing registration after a
+    connection loss — the service swaps the line's channel and requeues
+    whatever was in flight (requeue-on-disconnect semantics)."""
+    kind: ClassVar[str] = "register"
+    name: str = ""
+    token: str = ""
+    endpoint_id: str = ""
+
+
+@dataclass
+class RegisterAck:
+    kind: ClassVar[str] = "register_ack"
+    ok: bool = True
+    endpoint_id: str = ""
+    error: str = ""
+
+
+@dataclass
+class FnRequest:
+    """Endpoint-side function fetch over the wire (funcX endpoints pull
+    serialized function bodies from the service on first use)."""
+    kind: ClassVar[str] = "fn_request"
+    function_id: str = ""
+
+
+@dataclass
+class FnResponse:
+    kind: ClassVar[str] = "fn_response"
+    function_id: str = ""
+    payload: bytes = b""               # pickled function body
+    wants_env: bool = False
+    error: str = ""
+
+
 Message = object                      # union of the classes below
-WIRE_TYPES = {cls.kind: cls for cls in (TaskBatch, Ack, Heartbeat, ResultMsg)}
+WIRE_TYPES = {cls.kind: cls for cls in (
+    TaskBatch, Ack, Heartbeat, ResultMsg,
+    Register, RegisterAck, FnRequest, FnResponse)}
 
 
 def to_wire(msg) -> dict:

@@ -14,7 +14,7 @@ from __future__ import annotations
 import random
 import threading
 import time
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 
 class Provider:

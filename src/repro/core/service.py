@@ -24,7 +24,7 @@ from ..data import (
     KVStore,
     TransferService,
 )
-from ..serialization import PackedBuffer, pack_buffer
+from ..serialization import PackedBuffer, SerializationError, pack_buffer
 from .auth import (
     ALL_SCOPES,
     AuthService,
@@ -33,7 +33,7 @@ from .auth import (
     SCOPE_RUN,
     Token,
 )
-from .comms import Channel
+from .comms import Channel, SocketReactor, TcpListener, TcpTransport
 from .endpoint import EndpointAgent
 from .errors import (
     AuthError,
@@ -44,11 +44,26 @@ from .errors import (
     TaskLost,
 )
 from .forwarder_pool import EndpointLine, ForwarderPool
+from .protocol import (
+    ProtocolError,
+    Register,
+    RegisterAck,
+    from_wire,
+    to_wire,
+)
 from .routing import EndpointInfo, EndpointRouter, make_endpoint_router
 from .tasks import Task, TaskStatus, TaskStore
 from .warming import ContainerRegistry, ContainerSpec
 
 PAYLOAD_LIMIT = 10 * 1024 * 1024          # paper §5.1
+
+# funcX ships serialized function bodies to endpoints; cloudpickle (when
+# present) extends the reach to lambdas/closures, plain pickle covers
+# module-level functions by reference. Both decode with pickle.loads.
+try:
+    import cloudpickle as _fn_pickle
+except ImportError:                        # pragma: no cover
+    _fn_pickle = pickle
 
 
 @dataclass
@@ -112,8 +127,12 @@ class FuncXService:
             endpoint_router if isinstance(endpoint_router, EndpointRouter)
             else make_endpoint_router(endpoint_router))
         self.pool = ForwarderPool(self.tasks, batch_size=forwarder_batch,
-                                  heartbeat_timeout=heartbeat_timeout)
+                                  heartbeat_timeout=heartbeat_timeout,
+                                  fn_resolver=self._export_function_wire)
         self.pool.start()
+        self._listener: Optional[TcpListener] = None
+        self._reactor: Optional[SocketReactor] = None
+        self.handshake_timeout = 5.0
         self._stop = threading.Event()
         self._health = threading.Thread(target=self._health_loop,
                                         daemon=True, name="svc-health")
@@ -125,10 +144,14 @@ class FuncXService:
 
     def shutdown(self) -> None:
         self._stop.set()
+        self.stop_listening()
         self.pool.stop()
         with self._lock:
             for rec in self.endpoints.values():
                 rec.channel.close()
+        if self._reactor is not None:
+            self._reactor.close()
+            self._reactor = None
 
     # ------------------------------------------------------------------- users
     def register_user(self, name: str,
@@ -178,6 +201,15 @@ class FuncXService:
             fn = rf.fn
         return fn, rf.wants_env
 
+    def _export_function_wire(self, function_id: str) -> Tuple[bytes, bool]:
+        """FnRequest resolver for remote endpoints: the serialized function
+        body that crosses the socket (cloudpickle when available — lambdas
+        and closures ship by value; else pickle — module-level functions
+        ship by reference)."""
+        with self._lock:
+            rf = self.functions[function_id]
+        return _fn_pickle.dumps(rf.fn), rf.wants_env
+
     # --------------------------------------------------------------- containers
     def register_container(self, spec: ContainerSpec) -> None:
         self.containers.register(spec)
@@ -216,6 +248,83 @@ class FuncXService:
                               **(manager_kw or {}))
         agent.start()
         return eid, agent
+
+    # ----------------------------------------------------- federated transport
+    def listen(self, host: str = "127.0.0.1", port: int = 0
+               ) -> Tuple[str, int]:
+        """Open the TCP listener remote endpoints dial into
+        (``python -m repro.core.endpoint --connect host:port``). Returns
+        the bound ``(host, port)`` — ``port=0`` picks a free one."""
+        if self._listener is not None:
+            return self._listener.address
+        if self._reactor is None:
+            # one selector thread serves the listener and every accepted
+            # connection — and outlives listener restarts, so closing the
+            # listener never tears down live endpoints
+            self._reactor = SocketReactor()
+        self._listener = TcpListener(host, port, self._handle_tcp_connection,
+                                     reactor=self._reactor)
+        return self._listener.address
+
+    def stop_listening(self) -> None:
+        """Close the listener (existing connections stay up; used by the
+        restart tests to simulate a service network-tier outage)."""
+        listener, self._listener = self._listener, None
+        if listener is not None:
+            listener.close()
+
+    def _handle_tcp_connection(self, transport: TcpTransport,
+                               peer: Tuple[str, int]) -> None:
+        """Per-connection handshake (own thread, spawned by the listener):
+        the first frame must be a ``Register``; on success the channel is
+        attached to the ForwarderPool — either as a brand-new endpoint or
+        reattached under the dialer's previous endpoint id (connection
+        loss / listener restart), requeueing whatever was in flight."""
+        channel = Channel(transport=transport)
+        msg = None
+        deadline = time.time() + self.handshake_timeout
+        while time.time() < deadline and not self._stop.is_set():
+            wire = channel.recv_at_service(timeout=0.25)
+            if wire is None:
+                continue
+            env, _tag = wire
+            try:
+                m = from_wire(env)
+            except (ProtocolError, SerializationError):
+                continue               # poison/foreign frame: keep waiting
+            if isinstance(m, Register):
+                msg = m
+                break
+        if msg is None:                # silent or garbage dialer
+            channel.close()
+            return
+        try:
+            token = Token.decode(msg.token)
+            owner = self.auth.validate(token, SCOPE_ENDPOINT)
+        except AuthError as e:
+            channel.send_to_endpoint(
+                to_wire(RegisterAck(ok=False, error=str(e))), tag="register")
+            channel.close()
+            return
+        if msg.endpoint_id:            # reattach after a connection loss
+            with self._lock:
+                rec = self.endpoints.get(msg.endpoint_id)
+            if rec is None or rec.owner != owner:
+                channel.send_to_endpoint(to_wire(RegisterAck(
+                    ok=False, error=f"unknown endpoint {msg.endpoint_id}")),
+                    tag="register")
+                channel.close()
+                return
+            line = self.pool.reattach(msg.endpoint_id, channel)
+            with self._lock:
+                rec.channel = channel
+                rec.line = line
+            eid = msg.endpoint_id
+        else:
+            eid, _ = self.register_endpoint(token, msg.name or "remote",
+                                            channel=channel)
+        channel.send_to_endpoint(
+            to_wire(RegisterAck(ok=True, endpoint_id=eid)), tag="register")
 
     # -------------------------------------------------------------- discovery
     # (the paper's §10 future work: "APIs that allow users to manage and
@@ -402,7 +511,8 @@ class FuncXService:
         old = self.pool
         old.stop()
         pool = ForwarderPool(self.tasks, batch_size=self.forwarder_batch,
-                             heartbeat_timeout=self.heartbeat_timeout)
+                             heartbeat_timeout=self.heartbeat_timeout,
+                             fn_resolver=self._export_function_wire)
         with self._lock:
             for old_line in old.lines():
                 line = pool.register(old_line.endpoint_id, old_line.channel)

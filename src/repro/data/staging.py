@@ -5,7 +5,7 @@ TransferService pull), and outputs larger than the service payload limit
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 from ..serialization import PackedBuffer, pack_buffer
 from .store import KVStore

@@ -26,19 +26,12 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs import (
-    ARCH_IDS,
-    SHAPES,
-    TrainConfig,
-    cells,
-    get_config,
-    get_shape,
-)
+from ..configs import ARCH_IDS, SHAPES, TrainConfig, cells
 from ..configs.registry import Cell
 from ..models import (
     decode_cache_kwargs,

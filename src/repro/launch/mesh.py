@@ -6,7 +6,6 @@ count via XLA_FLAGS before first jax init, while tests/benches see 1 device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -11,7 +11,6 @@ full configs are for real meshes.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -21,11 +20,10 @@ import numpy as np
 from ..configs import ARCH_IDS, TrainConfig, get_config, get_reduced_config
 from ..models import get_model
 from ..models.knobs import RunKnobs
-from ..sharding.rules import ShardCtx, default_rules
+from ..sharding.rules import ShardCtx
 from ..train import checkpoint as ckpt
 from ..train import init_train_state, make_train_step, abstract_train_state
 from ..train.data import make_dataset
-from .mesh import make_local_mesh
 
 
 def main() -> int:

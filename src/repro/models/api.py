@@ -11,11 +11,10 @@ model input — weak-type-correct, shardable, no device allocation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ModelConfig, ShapeConfig
 from ..sharding.rules import ShardCtx

@@ -9,7 +9,6 @@ implementations of the same contract and are validated against
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

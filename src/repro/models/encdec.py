@@ -11,11 +11,9 @@ S_src = S_tgt = seq_len // 2 (recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..configs import ModelConfig
 from ..sharding.rules import ShardCtx
@@ -30,7 +28,7 @@ from .common import (
     rms_norm,
     swiglu,
 )
-from .knobs import DEFAULT_KNOBS, RunKnobs
+from .knobs import DEFAULT_KNOBS
 from .params import ParamSpec, scan_or_loop, stack
 from .transformer import _remat, ffn_spec
 

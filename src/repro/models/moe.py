@@ -15,13 +15,12 @@ Returns the layer output plus the Switch-style load-balancing auxiliary loss.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 try:                                     # jax >= 0.6 public API
     from jax import shard_map
 except ImportError:                      # older jax: experimental module,

@@ -11,7 +11,7 @@ target. Decode is the O(1) recurrence plus a rolling window KV cache.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from .common import (
     lm_logits,
     rms_norm,
 )
-from .knobs import DEFAULT_KNOBS, RunKnobs
+from .knobs import DEFAULT_KNOBS
 from .params import ParamSpec, scan_or_loop, stack
 from .ssm import causal_conv, conv_step
 

@@ -9,7 +9,7 @@ Decode is the O(1) state recurrence: ``h = exp(dt·A)·h + dt·B⊗x``.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..configs import ModelConfig
 from ..sharding.rules import ShardCtx

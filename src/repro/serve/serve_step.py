@@ -4,13 +4,12 @@ registers and the decode/long dry-run cells lower.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..configs import ModelConfig, ShapeConfig
-from ..models import Model, decode_cache_kwargs
+from ..models import Model
 from ..models.knobs import DEFAULT_KNOBS, RunKnobs
 from ..sharding.rules import ShardCtx
 from .sampler import sample

@@ -14,7 +14,6 @@ rank for multi-host deployments.
 """
 from __future__ import annotations
 
-import os
 from typing import Dict, Iterator, Optional
 
 import numpy as np

@@ -18,7 +18,7 @@ deltas come back as payloads/DataRefs, the coordinator aggregates.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,13 +5,13 @@ mesh shardings by the launch layer — and registered as a funcX *function*.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..configs import ModelConfig, TrainConfig
+from ..configs import TrainConfig
 from ..models import Model
 from ..models.knobs import DEFAULT_KNOBS, RunKnobs
 from ..sharding.rules import ShardCtx

@@ -1,4 +1,3 @@
-import threading
 import time
 
 import pytest
@@ -32,3 +31,30 @@ def wait_until(pred, timeout=5.0, interval=0.01):
             return True
         time.sleep(interval)
     return False
+
+
+@pytest.fixture
+def tcp_service():
+    """A FuncXService with its TCP listener open: (service, client,
+    (host, port)). Remote endpoints dial the address and register over
+    the wire."""
+    from repro.core import FuncXClient, FuncXService
+    svc = FuncXService(heartbeat_timeout=0.3)
+    token = svc.register_user("tester")
+    address = svc.listen()
+    yield svc, FuncXClient(svc, token), address
+    svc.shutdown()
+    time.sleep(0.05)
+
+
+def start_tcp_endpoint(client, address, **kw):
+    """An in-thread endpoint agent on the dialing side of a real TCP
+    socket — the federated deployment without the subprocess cost."""
+    from repro.core import RemoteEndpointRunner
+    kw.setdefault("n_managers", 1)
+    kw.setdefault("workers_per_manager", 2)
+    kw.setdefault("heartbeat_interval", 0.05)
+    runner = RemoteEndpointRunner(
+        address, client.endpoint_credentials(), **kw)
+    runner.start()
+    return runner

@@ -1,6 +1,5 @@
 """Checkpoint/restart substrate (fault-tolerance deliverable)."""
 import os
-import threading
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Config registry: the assigned 40-cell grid, published dimensions, skip
 logic, and input-spec construction (no allocation)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import (

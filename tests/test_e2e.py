@@ -5,7 +5,6 @@ import subprocess
 import sys
 import tempfile
 
-import pytest
 
 ENV = {**os.environ, "PYTHONPATH": "src"}
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

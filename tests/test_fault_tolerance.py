@@ -1,20 +1,17 @@
 """Fault tolerance (paper §4.1/§4.3): manager loss → re-execution;
 endpoint disconnect → forwarder requeue; retry budget → LOST; straggler
-speculation; elastic provisioning."""
+speculation; elastic provisioning; socket-transport faults (mid-frame
+disconnect, partial length prefix, reconnect after a service restart)."""
+import socket
+import struct
 import time
 
 import pytest
 
-from repro.core import (
-    ElasticStrategy,
-    FuncXClient,
-    FuncXService,
-    LocalProvider,
-    SimCloudProvider,
-    SimSlurmProvider,
-    TaskLost,
-)
-from conftest import wait_until
+from repro.core import ElasticStrategy, LocalProvider, SimCloudProvider, SimSlurmProvider, TaskLost, TcpListener
+from repro.core.comms import TO_SERVICE
+from repro.core.endpoint import demo_sleep, demo_square
+from conftest import start_tcp_endpoint, wait_until
 
 
 def test_manager_kill_reexecutes(service, client):
@@ -123,6 +120,127 @@ def test_provider_delays():
     cloud = SimCloudProvider(boot_delay=0.03)
     assert slurm.acquisition_delay() >= 0.05
     assert cloud.acquisition_delay() == 0.03
+
+
+# -- socket transport faults -------------------------------------------------
+
+class _Grab:
+    def __init__(self):
+        self.transport = None
+
+    def __call__(self, transport, peer):
+        self.transport = transport
+
+
+def test_tcp_partial_length_prefix_is_dropped():
+    """A connection that dies inside the 4-byte length prefix delivers
+    nothing — no truncated frame, no reader crash."""
+    grab = _Grab()
+    listener = TcpListener("127.0.0.1", 0, grab)
+    try:
+        s = socket.create_connection(listener.address)
+        assert wait_until(lambda: grab.transport is not None, timeout=5)
+        s.sendall(b"\x00\x00")                       # 2 of 4 length bytes
+        s.close()
+        assert wait_until(lambda: not grab.transport.connected, timeout=5)
+        assert grab.transport.frames_in == 0
+        assert grab.transport.recv(TO_SERVICE, timeout=0.1) is None
+    finally:
+        listener.close()
+
+
+def test_tcp_midframe_disconnect_is_dropped():
+    """A frame cut short mid-body is discarded with the connection; the
+    frames before the cut still arrive intact."""
+    grab = _Grab()
+    listener = TcpListener("127.0.0.1", 0, grab)
+    try:
+        s = socket.create_connection(listener.address)
+        assert wait_until(lambda: grab.transport is not None, timeout=5)
+        whole = b"intact-frame"
+        s.sendall(struct.pack(">I", len(whole)) + whole)
+        s.sendall(struct.pack(">I", 100) + b"only ten b")   # then die
+        s.close()
+        assert wait_until(lambda: grab.transport.frames_in == 1, timeout=5)
+        assert grab.transport.recv(TO_SERVICE, timeout=1.0) == whole
+        assert wait_until(lambda: not grab.transport.connected, timeout=5)
+        assert grab.transport.recv(TO_SERVICE, timeout=0.1) is None
+    finally:
+        listener.close()
+
+
+def test_tcp_connection_kill_midload_completes_exactly_once(tcp_service):
+    """Kill the socket while a batch is in flight: requeue-on-disconnect +
+    re-dial + re-register deliver every submitted task exactly one
+    completion (duplicate executions are deduped at the result store)."""
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address)
+    try:
+        fid = client.register_function(demo_square)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"x": i})
+                                for i in range(30)])
+        runner.transport.disconnect()                # mid-stream cut
+        runner.transport.reconnect()                 # allow the re-dial
+        res = client.get_batch_results(ids, timeout=60)
+        assert res == [i * i for i in range(30)]
+        assert runner.re_registrations >= 1
+        # exactly once: every id was retrieved once and then purged
+        for tid in ids:
+            with pytest.raises(KeyError):
+                svc.get_task(tid)
+    finally:
+        runner.stop()
+
+
+def test_results_finished_during_outage_are_retransmitted(tcp_service):
+    """A result produced while the link is down must be parked and
+    retransmitted after the re-dial — not swallowed by the duplicate
+    filter when the requeued task re-executes (regression: these tasks
+    used to hang forever)."""
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address, workers_per_manager=4)
+    try:
+        fid = client.register_function(demo_sleep)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"s": 0.3})
+                                for _ in range(4)])
+        # cut the link while all four are mid-execution
+        assert wait_until(lambda: runner.agent.tasks_received >= 4,
+                          timeout=5)
+        runner.transport.disconnect()
+        time.sleep(1.0)          # tasks finish into a dead link
+        runner.transport.reconnect()
+        res = client.get_batch_results(ids, timeout=30)
+        assert res == [None] * 4
+    finally:
+        runner.stop()
+
+
+def test_tcp_reconnect_after_service_restart_completes_all(tcp_service):
+    """Service network tier goes down (listener closed, channel dead) and
+    comes back on the same port: the endpoint re-dials, re-registers under
+    its old id, in-flight work is requeued, and everything submitted —
+    before and during the outage — completes exactly once."""
+    svc, client, address = tcp_service
+    host, port = address
+    runner = start_tcp_endpoint(client, address)
+    try:
+        fid = client.register_function(demo_square)
+        before = client.batch_run([(fid, runner.endpoint_id, {"x": i})
+                                   for i in range(10)])
+        rec = svc.endpoints[runner.endpoint_id]
+        svc.stop_listening()
+        rec.channel.close()                          # "service restart"
+        during = client.batch_run([(fid, runner.endpoint_id, {"x": i})
+                                   for i in range(10, 20)])
+        time.sleep(0.3)                              # endpoint is re-dialing
+        svc.listen(host, port)                       # service back up
+        res = client.get_batch_results(before + during, timeout=60)
+        assert res == [i * i for i in range(20)]
+        assert runner.re_registrations >= 1
+        assert svc.endpoints[runner.endpoint_id].channel is not rec.channel \
+            or rec.channel.connected
+    finally:
+        runner.stop()
 
 
 def test_forwarder_pool_restart_by_health_check(service, client):

@@ -3,7 +3,6 @@ compressed delta exchange + error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train.fedavg import (
     FedAvgCoordinator,
@@ -59,7 +58,7 @@ def test_fedavg_through_faas(service, client):
     deltas travel compressed."""
     from repro.configs import TrainConfig, get_reduced_config
     from repro.models import get_model
-    from repro.train import init_train_state, make_train_step
+    from repro.train import make_train_step
     from repro.train.data import SyntheticLM
 
     cfg = get_reduced_config("qwen1.5-0.5b")

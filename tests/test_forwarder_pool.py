@@ -2,11 +2,9 @@
 multiplexed dispatch, requeue ordering on disconnect, and pool restart
 carrying in-flight tasks."""
 import threading
-import time
 
-import pytest
 
-from repro.core import EndpointAgent, FuncXClient, FuncXService, TaskStatus
+from repro.core import EndpointAgent, TaskStatus
 from conftest import wait_until
 
 

@@ -1,6 +1,5 @@
 """Function routing (paper §6.2): warming-aware beats random; tie-breaks;
 beyond-paper cost/locality routers."""
-import pytest
 
 from repro.core import (
     CostAwareRouter,

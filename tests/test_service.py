@@ -3,14 +3,7 @@ enforcement, payload limits, result purge, user-facing batching."""
 import numpy as np
 import pytest
 
-from repro.core import (
-    ContainerSpec,
-    FuncXClient,
-    FuncXService,
-    PayloadTooLarge,
-    TaskFailure,
-    TaskStatus,
-)
+from repro.core import ContainerSpec, FuncXClient, FuncXService, PayloadTooLarge, TaskFailure
 from repro.core.errors import AuthError
 
 

@@ -7,9 +7,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import ContainerSpec, FuncXClient, FuncXService
+from repro.core import ContainerSpec
 from repro.data import DataRef
 
 

@@ -1,0 +1,230 @@
+"""Pluggable socket transport (DESIGN.md §2): LocalTransport default,
+TcpTransport framing + reconnect, registration handshake, hub integration,
+and the multi-process federated deployment."""
+import socket
+import subprocess
+import time
+
+import pytest
+
+from repro.core import (
+    Channel,
+    ChannelHub,
+    LocalTransport,
+    RegistrationError,
+    TcpListener,
+    TcpTransport,
+    parse_hostport,
+)
+from repro.core.comms import TO_SERVICE
+from repro.core.endpoint import demo_noop, demo_square
+from repro.serialization import pack_buffer
+from conftest import start_tcp_endpoint, wait_until
+
+
+def test_parse_hostport():
+    assert parse_hostport("127.0.0.1:9000") == ("127.0.0.1", 9000)
+    assert parse_hostport(":9000") == ("127.0.0.1", 9000)
+    assert parse_hostport("9000") == ("127.0.0.1", 9000)
+    assert parse_hostport("example.org:80") == ("example.org", 80)
+
+
+def test_local_transport_is_default_and_byte_identical():
+    """Channel() keeps the in-memory queue pair, and a pre-packed buffer
+    crosses it byte-identical (pack-once, DESIGN.md §5)."""
+    ch = Channel()
+    assert isinstance(ch.transport, LocalTransport)
+    buf = pack_buffer({"x": 1}, tag="task")
+    assert ch.send_to_service(buf)
+    raw = ch.transport.recv_nowait(TO_SERVICE)
+    assert raw == buf.data
+
+
+class _Accepted:
+    """Capture the transport the listener accepts."""
+
+    def __init__(self):
+        self.transport = None
+
+    def __call__(self, transport, peer):
+        self.transport = transport
+
+
+def _tcp_pair():
+    acc = _Accepted()
+    listener = TcpListener("127.0.0.1", 0, acc)
+    client = TcpTransport(connect=listener.address)
+    assert wait_until(lambda: acc.transport is not None and client.connected,
+                      timeout=5)
+    return listener, acc.transport, client
+
+
+def test_tcp_frames_byte_identical():
+    """The bytes on the wire ARE the PackedBuffer bytes the facade
+    produced — the pack-once invariant extends across the socket."""
+    listener, server, client = _tcp_pair()
+    try:
+        ch_client = Channel(transport=client)
+        buf = pack_buffer({"payload": b"\x00" * 1024}, tag="task")
+        assert ch_client.send_to_service(buf)
+        raw = None
+        deadline = time.time() + 5
+        while raw is None and time.time() < deadline:
+            raw = server.recv(TO_SERVICE, timeout=0.2)
+        assert raw == buf.data
+    finally:
+        client.close()
+        server.close()
+        listener.close()
+
+
+def test_tcp_dial_backoff_until_listener_appears():
+    """Nonblocking connect: the dialing side retries with backoff and
+    attaches as soon as a listener shows up."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()                         # port free again; nothing listens
+    client = TcpTransport(connect=("127.0.0.1", port), backoff=0.02)
+    try:
+        time.sleep(0.15)
+        assert not client.connected       # still dialing into the void
+        acc = _Accepted()
+        listener = TcpListener("127.0.0.1", port, acc)
+        assert wait_until(lambda: client.connected, timeout=5)
+        assert client.dials >= 1
+        listener.close()
+    finally:
+        client.close()
+
+
+def test_hub_polls_socket_channel_through_token_path():
+    """A socket-backed channel registers with the same ChannelHub and its
+    frames surface through the same readiness-token poll — the pool adds
+    no threads for TCP endpoints."""
+    listener, server, client = _tcp_pair()
+    try:
+        hub = ChannelHub()
+        ch_server = Channel(transport=server)
+        hub.register("remote", ch_server)
+        ch_client = Channel(transport=client)
+        buf = pack_buffer({"hello": 1}, tag="hb")
+        assert ch_client.send_to_service(buf)
+        out = []
+        deadline = time.time() + 5
+        while not out and time.time() < deadline:
+            out = hub.poll(timeout=0.2)
+        assert len(out) == 1
+        key, packed = out[0]
+        assert key == "remote" and packed.tag == "hb"
+        assert packed.data == buf.data    # still the producer's bytes
+    finally:
+        client.close()
+        server.close()
+        listener.close()
+
+
+def test_register_handshake_rejects_bad_token(tcp_service):
+    svc, client, address = tcp_service
+    from repro.core import RemoteEndpointRunner
+    runner = RemoteEndpointRunner(address, '{"not": "a token"}',
+                                  register_timeout=5.0)
+    with pytest.raises(RegistrationError):
+        runner.start()
+    runner.stop()
+
+
+def test_tcp_endpoint_thread_roundtrip(tcp_service):
+    """Full stack over a real socket, agent in a thread: submit → TCP →
+    managers/workers → TCP → result."""
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address)
+    try:
+        fid = client.register_function(demo_square)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"x": i})
+                                for i in range(40)])
+        res = client.get_batch_results(ids, timeout=30)
+        assert res == [i * i for i in range(40)]
+        rec = svc.endpoints[runner.endpoint_id]
+        assert isinstance(rec.channel.transport, TcpTransport)
+    finally:
+        runner.stop()
+
+
+def test_lambda_ships_over_wire_via_cloudpickle(tcp_service):
+    pytest.importorskip("cloudpickle")
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address)
+    try:
+        fid = client.register_function(lambda d: d["x"] + 1, name="inc")
+        tid = client.run(fid, runner.endpoint_id, data={"x": 41})
+        assert client.get_result(tid, timeout=15) == 42
+    finally:
+        runner.stop()
+
+
+def test_unserializable_function_fails_task_not_agent(tcp_service):
+    """A function body the service cannot serialize fails that one task
+    with the wire error — the agent and its shared recv loop keep
+    serving."""
+    import threading
+    from repro.core import TaskFailure
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address)
+    try:
+        ghost = client.register_function(demo_square, name="ghost")
+        svc.functions[ghost].fn = threading.Lock()   # unpicklable body
+        bad = client.run(ghost, runner.endpoint_id, data={"x": 1})
+        with pytest.raises(TaskFailure):
+            client.get_result(bad, timeout=15)
+        fid = client.register_function(demo_noop)    # agent still alive
+        good = client.run(fid, runner.endpoint_id, data={})
+        assert client.get_result(good, timeout=15) is None
+    finally:
+        runner.stop()
+
+
+def test_accepted_connections_share_one_reactor(tcp_service):
+    """Service-side thread cost of a TCP fleet is O(1): every accepted
+    connection is fed by the one shared SocketReactor — dedicated
+    `tcp-reader` threads exist only on the dialing (endpoint) side."""
+    import threading
+    svc, client, address = tcp_service
+    runners = [start_tcp_endpoint(client, address) for _ in range(3)]
+    try:
+        names = [t.name for t in threading.enumerate()]
+        assert names.count("socket-reactor") == 1
+        # the 3 reader threads belong to the 3 dialing runners (which
+        # stand in for remote processes); accepted sockets add none
+        assert names.count("tcp-reader") == 3
+        for r in runners:
+            tr = svc.endpoints[r.endpoint_id].channel.transport
+            assert tr._reactor is svc._reactor
+    finally:
+        for r in runners:
+            r.stop()
+
+
+@pytest.mark.multiprocess
+@pytest.mark.slow
+def test_subprocess_endpoint_200_task_roundtrip(tcp_service):
+    """Acceptance: a TcpTransport endpoint in a separate OS process
+    completes a 200-task submit_batch round-trip."""
+    from repro.core.endpoint import spawn_endpoint_process
+    svc, client, address = tcp_service
+    proc, eid = spawn_endpoint_process(
+        address, client.endpoint_credentials(), name="subproc", workers=4)
+    try:
+        assert eid in svc.endpoints
+        fid = client.register_function(demo_square)
+        ids = client.batch_run([(fid, eid, {"x": i}) for i in range(200)])
+        res = client.get_batch_results(ids, timeout=60)
+        assert res == [i * i for i in range(200)]
+        # the endpoint really is out-of-process, wired through a socket
+        assert isinstance(svc.endpoints[eid].channel.transport, TcpTransport)
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=5)
+        except subprocess.TimeoutExpired:
+            proc.kill()

@@ -1,0 +1,105 @@
+"""`make lint`: ruff when available, stdlib dead-import sweep otherwise.
+
+CI installs ruff and gets the full `ruff check` rule set (pyproject.toml
+``[tool.ruff]``). Containers without ruff — like the pinned benchmark
+image — fall back to an AST-based unused-import check (the F401 subset
+that matters most here: dead imports creeping into `src/repro/core/`), so
+the lint gate never silently becomes a no-op.
+
+    python -m tools.lint [paths...]
+"""
+from __future__ import annotations
+
+import ast
+import os
+import shutil
+import subprocess
+import sys
+from typing import List, Optional, Tuple
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "examples", "tools"]
+
+
+def try_ruff(paths: List[str]) -> Optional[int]:
+    """Run ruff if it exists; None means not installed."""
+    exe = shutil.which("ruff")
+    if exe is not None:
+        return subprocess.call([exe, "check", *paths])
+    try:
+        import ruff  # noqa: F401  (probe only)
+    except ImportError:
+        return None
+    return subprocess.call([sys.executable, "-m", "ruff", "check", *paths])
+
+
+def iter_python_files(paths: List[str]):
+    for path in paths:
+        if os.path.isfile(path) and path.endswith(".py"):
+            yield path
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = [d for d in dirs
+                       if not d.startswith(".") and d != "__pycache__"]
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def unused_imports(tree: ast.AST) -> List[Tuple[int, str]]:
+    """Conservative F401: flag an imported name only when it appears
+    nowhere else — not as a Name load, not inside any string constant
+    (covers ``__all__`` re-export lists and string annotations)."""
+    imported: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imported.append((node.lineno,
+                                 (a.asname or a.name).split(".")[0]))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name != "*":
+                    imported.append((node.lineno, a.asname or a.name))
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            used.update(node.value.replace(".", " ").split())
+    return [(lineno, name) for lineno, name in imported if name not in used]
+
+
+def fallback_check(paths: List[str]) -> int:
+    findings = []
+    for path in iter_python_files(paths):
+        if os.path.basename(path) == "__init__.py":
+            continue                       # re-export surface
+        try:
+            with open(path, "rb") as f:
+                tree = ast.parse(f.read(), filename=path)
+        except SyntaxError as e:
+            findings.append((path, e.lineno or 0, f"syntax error: {e.msg}"))
+            continue
+        for lineno, name in unused_imports(tree):
+            findings.append((path, lineno, f"unused import: {name}"))
+    for path, lineno, msg in findings:
+        print(f"{path}:{lineno}: {msg}")
+    if findings:
+        print(f"tools.lint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"tools.lint: clean (fallback checker; install ruff for the "
+          f"full rule set)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    paths = (argv if argv else DEFAULT_PATHS)
+    rc = try_ruff(paths)
+    if rc is not None:
+        return rc
+    return fallback_check(paths)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
