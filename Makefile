@@ -5,12 +5,16 @@
 #   make lint                 ruff check (stdlib dead-import sweep if no ruff)
 #   make bench-smoke          scaling benchmark in tiny mode (seconds)
 #   make bench-serialization  §4.5 pack-once data plane benchmarks
-#   make bench                full benchmark harness (writes BENCH_4.json)
+#   make bench-results        §7.2.3 batched result plane gauges
+#   make bench-results-gate   bench-results into a fresh artifact + compare
+#                             against the committed BENCH_5.json baseline
+#   make bench                full benchmark harness (writes BENCH_5.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast lint bench-smoke bench-serialization bench
+.PHONY: test test-fast lint bench-smoke bench-serialization \
+	bench-results bench-results-gate bench
 
 test:
 	python -m pytest -x -q
@@ -26,6 +30,15 @@ bench-smoke:
 
 bench-serialization:
 	python -m benchmarks.run --only sec4.5_serialization
+
+bench-results:
+	python -m benchmarks.run --only sec7.2.3_results
+
+bench-results-gate:
+	python -m benchmarks.run --only sec7.2.3_results --tiny \
+		--artifact bench_fresh.json
+	python -m tools.bench_gate --baseline BENCH_5.json \
+		--fresh bench_fresh.json
 
 bench:
 	python -m benchmarks.run

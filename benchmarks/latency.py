@@ -25,6 +25,7 @@ def run(n_tasks: int = 200, full: bool = False) -> None:
             client.get_result(client.run(fid, eid, data={}), timeout=10)
         parts = {k: [] for k in ("t_s", "t_f", "t_e", "t_w", "t_r", "total")}
         stats.reset()
+        env0 = agent.coalescer.result_envelopes
         for _ in range(n_tasks):
             tid = client.run(fid, eid, data={})
             client.get_result(tid, timeout=10)
@@ -46,6 +47,12 @@ def run(n_tasks: int = 200, full: bool = False) -> None:
         emit("fig3/latency/payload_unpacks_per_task",
              s["unpacks_by_tag"].get("task", 0) / n_tasks,
              f"n={n_tasks} (invariant: exactly 1.0)")
+        # result-plane gauge (DESIGN.md §6): sequential lone tasks flush
+        # immediately — one result envelope each, no coalescer batching
+        # and no linger on an idle line.
+        emit("fig3/latency/result_envelopes_per_task",
+             (agent.coalescer.result_envelopes - env0) / n_tasks,
+             f"n={n_tasks} (idle line: exactly 1.0, immediate flush)")
         agent.stop()
     finally:
         svc.shutdown()

@@ -1,0 +1,72 @@
+"""§7.2.3 + DESIGN.md §6 — the batched result plane, measured.
+
+Three gauges the acceptance gate watches:
+
+- ``throughput_tasks_per_s`` — peak tasks/s through one agent with the
+  coalesced return path. §7.2.3 measures *peak* throughput, so the run
+  repeats and records the best (shared-host interference shows up as
+  slow outliers, never fast ones).
+- ``envelopes_per_task`` — return-path wire frames (results + acks +
+  retransmissions) per completed task. The pre-batch plane paid ≥1
+  result envelope per task; the coalescer amortizes toward
+  1/batch_size. Must stay < 1 under load.
+- ``lone_task_roundtrip_us`` — a single task on an idle line must not
+  pay the linger: the coalescer's inline idle-path flush keeps this at
+  the fig3 single-task total.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import emit, make_bench_service
+
+
+def run(n_tasks: int = 3000, repeats: int = 5, workers: int = 64,
+        full: bool = False, tiny: bool = False) -> None:
+    if full:
+        n_tasks, repeats = 10000, 5
+    if tiny:
+        n_tasks, repeats = 600, 3
+    svc, client = make_bench_service()
+    try:
+        fid = client.register_function(lambda d: None, name="noop")
+        eid, agent = svc.make_endpoint(client.token, "ep", n_managers=4,
+                                       workers_per_manager=workers // 4)
+        co = agent.coalescer
+
+        def run_batch(n):
+            t0 = time.perf_counter()
+            ids = client.batch_run([(fid, eid, {}) for _ in range(n)])
+            client.get_batch_results(ids, timeout=300)
+            return time.perf_counter() - t0
+
+        run_batch(min(64, n_tasks))                      # warm
+        rates = []
+        e0, r0, re0 = co.envelopes_sent, co.results_sent, co.result_envelopes
+        for _ in range(repeats):
+            rates.append(n_tasks / run_batch(n_tasks))
+        envelopes = co.envelopes_sent - e0
+        results = co.results_sent - r0
+        result_envs = co.result_envelopes - re0
+        total = repeats * n_tasks
+        emit("sec7.2.3/results_plane/throughput_tasks_per_s", max(rates),
+             f"best of {repeats} runs of {n_tasks}; "
+             f"median={sorted(rates)[len(rates) // 2]:.0f}")
+        emit("sec7.2.3/results_plane/envelopes_per_task", envelopes / total,
+             f"n={total} (pre-batch plane: >=1.0; target <1)")
+        emit("sec7.2.3/results_plane/results_per_envelope",
+             results / max(result_envs, 1),
+             f"batch_size={co.batch_size} linger={co.linger * 1e3:.1f}ms")
+
+        # lone-task latency: idle line, inline flush — mean wall clock of
+        # sequential single-task round-trips
+        n_lone = 30 if not tiny else 10
+        t0 = time.perf_counter()
+        for _ in range(n_lone):
+            client.get_result(client.run(fid, eid, data={}), timeout=10)
+        lone = (time.perf_counter() - t0) / n_lone
+        emit("sec7.2.3/results_plane/lone_task_roundtrip_us", lone * 1e6,
+             f"n={n_lone} (immediate flush when idle; no linger penalty)")
+        agent.stop()
+    finally:
+        svc.shutdown()

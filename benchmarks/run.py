@@ -25,9 +25,11 @@ SUITES = {
     "sec7.5_batching": ("batching", "§7.5 batching"),
     "sec4.5_serialization": ("serialization",
                              "§4.5 pack-once data plane throughput"),
+    "sec7.2.3_results": ("results_plane",
+                         "§7.2.3 batched result plane (DESIGN.md §6)"),
 }
 
-ARTIFACT = "BENCH_4.json"          # seeded from BENCH_2.json (PR 2 run)
+ARTIFACT = "BENCH_5.json"          # seeded from BENCH_4.json (PR 4 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

@@ -69,17 +69,29 @@ def real_mode(workers_list=(4, 16, 64), n_strong=512,
     return dispatch_overhead
 
 
-def throughput(n_tasks=3000, workers=64) -> None:
-    """§7.2.3: peak tasks/s through one agent (paper: 1694/s on Theta)."""
+def throughput(n_tasks=3000, workers=64, repeats=3) -> None:
+    """§7.2.3: peak tasks/s through one agent (paper: 1694/s on Theta).
+    Repeats and records the best — it is a *peak* metric, and shared-host
+    interference only ever produces slow outliers. Also emits the result
+    plane's envelopes-per-task (DESIGN.md §6): the batched return path
+    must stay well under one wire frame per completed task."""
     svc, client = make_bench_service()
     try:
         fid = client.register_function(lambda d: None, name="noop")
         eid, agent = svc.make_endpoint(client.token, "ep", n_managers=4,
                                        workers_per_manager=workers // 4)
         _run_batch(client, svc, fid, eid, 64)
-        t = _run_batch(client, svc, fid, eid, n_tasks)
-        emit("sec7.2.3/throughput_tasks_per_s", n_tasks / t,
-             f"(paper: 1694/s Theta, 1466/s Cori) n={n_tasks}")
+        co = agent.coalescer
+        e0 = co.envelopes_sent
+        rates = [n_tasks / _run_batch(client, svc, fid, eid, n_tasks)
+                 for _ in range(repeats)]
+        emit("sec7.2.3/throughput_tasks_per_s", max(rates),
+             f"(paper: 1694/s Theta, 1466/s Cori) n={n_tasks} "
+             f"best of {repeats}")
+        emit("sec7.2.3/envelopes_per_task",
+             (co.envelopes_sent - e0) / (repeats * n_tasks),
+             f"all return-path frames incl. acks (DESIGN.md §6); "
+             f"pre-batch >= 1.0")
         agent.stop()
     finally:
         svc.shutdown()

@@ -32,7 +32,12 @@ from .comms import (
     Transport,
     parse_hostport,
 )
-from .endpoint import EndpointAgent, RemoteEndpointRunner, WireFunctionClient
+from .endpoint import (
+    EndpointAgent,
+    RemoteEndpointRunner,
+    ResultCoalescer,
+    WireFunctionClient,
+)
 from .errors import (
     AuthError,
     EndpointUnavailable,
@@ -52,6 +57,7 @@ from .protocol import (
     ProtocolError,
     Register,
     RegisterAck,
+    ResultBatch,
     ResultMsg,
     TaskBatch,
     TaskSpec,
@@ -81,7 +87,7 @@ from .routing import (
     make_router,
 )
 from .service import FuncXService, PAYLOAD_LIMIT, RegisteredFunction
-from .tasks import Task, TaskStatus, TaskStore
+from .tasks import BatchWaiter, Task, TaskStatus, TaskStore
 from .warming import (
     Container,
     ContainerRegistry,
@@ -92,7 +98,8 @@ from .warming import (
 from .worker import Worker, WorkItem, WorkResult
 
 __all__ = [
-    "ALL_SCOPES", "Ack", "AuthError", "AuthService", "Channel", "ChannelHub",
+    "ALL_SCOPES", "Ack", "AuthError", "AuthService", "BatchWaiter",
+    "Channel", "ChannelHub",
     "Container", "ContainerRegistry", "ContainerSpec", "CostAwareRouter",
     "DynamicBatcher", "ElasticStrategy", "EndpointAgent", "EndpointInfo",
     "EndpointLine", "EndpointRouter", "EndpointUnavailable", "FnRequest",
@@ -102,7 +109,8 @@ __all__ = [
     "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge", "ProtocolError",
     "Provider", "RandomEndpointRouter", "RandomRouter", "Register",
     "RegisterAck", "RegisteredFunction", "RegistrationError",
-    "RemoteEndpointRunner", "ResultMsg", "Router", "SCOPE_ENDPOINT",
+    "RemoteEndpointRunner", "ResultBatch", "ResultCoalescer", "ResultMsg",
+    "Router", "SCOPE_ENDPOINT",
     "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN", "SCOPE_TRANSFER",
     "SimCloudProvider", "SimSlurmProvider", "SocketReactor", "Task",
     "TaskBatch",

@@ -7,7 +7,15 @@
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import (
+    Any,
+    Callable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 from ..serialization import PackedBuffer, pack_buffer
 from .auth import Token
@@ -75,6 +83,25 @@ class FuncXClient:
     def get_batch_results(self, task_ids: Sequence[str],
                           timeout: float = 60.0) -> List[Any]:
         return self.service.get_batch_results(task_ids, timeout)
+
+    def as_completed(self, task_ids: Sequence[str],
+                     timeout: Optional[float] = 60.0
+                     ) -> Iterator[Tuple[str, Any]]:
+        """Stream ``(task_id, result)`` pairs in **completion order** —
+        the batch-waiter path (DESIGN.md §6): one registration serves the
+        whole harvest instead of N sequential waits, and each result is
+        retrieved (and purged, under the service's ``purge_on_get``) the
+        moment it lands. A failed task raises its ``TaskFailure`` /
+        ``TaskLost`` at the point it completes; tasks still pending past
+        ``timeout`` raise ``TimeoutError``."""
+        for tid in self.service.as_completed(task_ids, timeout=timeout):
+            yield tid, self.service.get_result(tid, timeout=1.0)
+
+    def wait_any(self, task_ids: Sequence[str],
+                 timeout: float = 60.0) -> List[str]:
+        """Ids of tasks (from ``task_ids``) that completed while waiting;
+        blocks until ≥1 is done or the timeout passes (→ empty list)."""
+        return self.service.wait_any(task_ids, timeout)
 
     def status(self, task_id: str) -> TaskStatus:
         return self.service.status(task_id)

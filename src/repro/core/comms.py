@@ -31,6 +31,12 @@ re-serialization); a caller may also hand over an already-packed
 ``PackedBuffer`` which is forwarded byte-identical. ``ChannelHub.poll``
 returns *packed* buffers — routing happens on the header tag alone and
 deserialization is deferred to the consumer.
+
+Return-path frame tags (DESIGN.md §6): the batched result plane ships
+``ResultBatch`` envelopes under the ``"results"`` tag (lone legacy
+``ResultMsg`` frames keep ``"result"``); both are routing tags only — the
+frame body is still one opaque msgpack dict either way, so every
+transport carries the batched plane transparently.
 """
 from __future__ import annotations
 

@@ -37,7 +37,8 @@ import itertools
 import pickle
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from time import monotonic as _monotonic
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from ..data import (
     KVStore,
@@ -58,6 +59,7 @@ from .protocol import (
     ProtocolError,
     Register,
     RegisterAck,
+    ResultBatch,
     ResultMsg,
     TaskBatch,
     TaskSpec,
@@ -68,6 +70,233 @@ from .routing import Router, make_router
 from .tasks import now
 from .warming import ContainerRegistry
 from .worker import WorkItem, WorkResult
+
+
+class _BoundedSet:
+    """Generation-bounded membership set — the duplicate-drop record for
+    shipped results. A long-running agent used to grow ``_completed``
+    forever; recency is all dedup needs (a duplicate arrives within a
+    requeue/speculation window, not a million tasks later), so entries
+    age out by generation rotation: adds go to the current generation,
+    membership checks both, and when the current one reaches ``cap/2``
+    it becomes the previous (dropping the old previous). The retention
+    window is therefore between cap/2 and cap recent ids.
+
+    The hot path is lock-free: dict reads and ``setdefault`` are atomic
+    under the GIL, and the insert *is* the membership test (two managers
+    completing the same speculated task race on one ``setdefault``; the
+    loser sees the winner's token). A lock exists only to serialize the
+    rare rotation."""
+
+    __slots__ = ("cap", "_cur", "_prev", "_rotate_lock")
+
+    def __init__(self, cap: int):
+        self.cap = max(cap, 2)
+        self._cur: Dict[str, object] = {}
+        self._prev: Dict[str, object] = {}
+        self._rotate_lock = threading.Lock()
+
+    def add(self, key: str) -> bool:
+        """True if newly added, False if already present."""
+        if key in self._prev:
+            return False
+        token = object()
+        if self._cur.setdefault(key, token) is not token:
+            return False                   # lost the race / already there
+        # re-check prev: a rotation between our prev-read and the
+        # setdefault can move a racing winner's entry into _prev while
+        # our insert lands in the fresh _cur — token identity tells our
+        # own rotated entry apart from a true duplicate
+        pv = self._prev.get(key)
+        if pv is not None and pv is not token:
+            return False
+        if len(self._cur) > self.cap // 2 and \
+                self._rotate_lock.acquire(blocking=False):
+            try:
+                if len(self._cur) > self.cap // 2:
+                    self._prev = self._cur
+                    self._cur = {}
+            finally:
+                self._rotate_lock.release()
+        return True
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._cur or key in self._prev
+
+    def __len__(self) -> int:
+        return len(self._cur) + len(self._prev)
+
+
+class ResultCoalescer:
+    """Adaptive micro-batching for the return path (DESIGN.md §6).
+
+    Two regimes, chosen per completion:
+
+    - **idle line** — the lone result's own thread flushes immediately
+      (no handoff, no linger, no timer): single-task latency is
+      untouched;
+    - **loaded line** (more results outstanding upstream) — the producer
+      just appends and a dedicated flusher thread drains everything
+      pending into :class:`ResultBatch` envelopes of at most
+      ``batch_size`` results, holding an under-full envelope open for a
+      bounded *linger* so it fills toward ``batch_size``. Producers —
+      worker callbacks and the agent recv loop — are never blocked by
+      pack/send/linger work, so result shipping cannot stall task intake
+      or execution; envelopes-per-task drops toward 1/batch_size.
+
+    Receipt ``Ack``s coalesce the same way: they ride whatever envelope
+    flushes next (an ack-only envelope never lingers — receipt stamps are
+    carried data, so coalescing costs nothing, but delivery shouldn't
+    idle-wait on a result that may be seconds away).
+
+    Envelopes the channel refuses are parked in ``_unsent`` *as built*
+    and retransmitted batch-wise by :meth:`flush_unsent` (heartbeat loop)
+    once the link returns — the service drops per-member duplicates by
+    task id, so a retransmitted batch racing a requeued re-execution
+    stays exactly-once.
+    """
+
+    def __init__(self, send: Callable[[dict], bool], *,
+                 batch_size: int = 32, linger: float = 0.002,
+                 outstanding: Optional[Callable[[], int]] = None):
+        self._send = send
+        self.batch_size = batch_size
+        self.linger = linger
+        self._outstanding = outstanding if outstanding is not None \
+            else (lambda: 0)
+        # Producer path is lock-free: deque.append is atomic under the
+        # GIL, and the kick Event is touched only through an `is_set()`
+        # fast-path read. An earlier design funneled every completion
+        # through one condition variable — with dozens of worker threads
+        # on a small core count, stack samples showed the whole fleet
+        # convoying on that lock while throughput collapsed.
+        self._results: Deque[ResultMsg] = collections.deque()
+        self._acks: Deque[Ack] = collections.deque()
+        self._kick = threading.Event()     # "pending work" signal
+        self._flush_lock = threading.Lock()    # one drainer at a time
+        self._unsent: Deque[dict] = collections.deque()
+        self._stop = threading.Event()
+        # gauges (result-plane acceptance: envelopes-per-task < 1 under load)
+        self.envelopes_sent = 0            # envelopes the channel accepted
+        self.result_envelopes = 0          # ...of which carried ≥1 result
+        self.results_sent = 0
+        self.acks_sent = 0
+        self.envelopes_parked = 0          # refused by the link, queued for
+        #                                    retransmission
+        self._thread = threading.Thread(target=self._flush_loop, daemon=True,
+                                        name="result-coalescer")
+        self._thread.start()
+
+    def close(self) -> None:
+        """Stop the flusher, then drain whatever is pending — every
+        completed result is sent or parked, never silently dropped (the
+        pre-coalescer path sent synchronously and had no stop window)."""
+        self._stop.set()
+        self._kick.set()
+        with self._flush_lock:
+            self._drain()
+
+    # -- producers ---------------------------------------------------------
+    def add_result(self, msg: ResultMsg) -> None:
+        self._results.append(msg)
+        if self._stop.is_set():
+            # flusher is gone (agent stopping, workers still completing):
+            # drain synchronously — blocking acquire, because falling back
+            # to a kick nobody listens to would drop this result
+            with self._flush_lock:
+                self._drain()
+            return
+        if self._outstanding() <= 0:
+            # idle line (or the tail of a load wave): ship on this thread
+            # right now — no handoff, no linger. If the flusher happens to
+            # hold the lock it is actively draining and will recheck; the
+            # kick covers the race window.
+            if self._flush_lock.acquire(blocking=False):
+                try:
+                    self._drain()
+                finally:
+                    self._flush_lock.release()
+            else:
+                self._kick.set()
+            return
+        if not self._kick.is_set():        # lock-free in steady state —
+            self._kick.set()               # under load the kick stays set
+
+    def add_ack(self, ack: Ack) -> None:
+        """Acks never flush inline — the recv loop must get back to task
+        intake; they ride the flusher's next envelope."""
+        self._acks.append(ack)
+        if not self._kick.is_set():
+            self._kick.set()
+
+    # -- the flusher -------------------------------------------------------
+    def _flush_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self._results and not self._acks:
+                self._kick.wait(0.05)
+                self._kick.clear()
+                continue
+            if (self.linger > 0 and self._results
+                    and len(self._results) < self.batch_size
+                    and self._outstanding() > 0):
+                # under-full envelope with more results on the way: let it
+                # fill. A plain bounded sleep — the tail never waits on it
+                # because the last completion (outstanding == 0) flushes
+                # inline on its own thread while we sleep outside the lock.
+                self._stop.wait(self.linger)
+            with self._flush_lock:
+                self._drain(max_envelopes=1)
+
+    def _drain(self, max_envelopes: Optional[int] = None) -> None:
+        """Pop pending results/acks into envelopes and ship. Caller holds
+        ``_flush_lock`` (single consumer); producers may append
+        concurrently and anything landing after the final empty check is
+        picked up by the flusher's next pass (kick/backstop)."""
+        n_env = 0
+        while True:
+            n = min(len(self._results), self.batch_size)
+            results = [self._results.popleft() for _ in range(n)]
+            acks = []
+            while self._acks:
+                acks.append(self._acks.popleft())
+            if not results and not acks:
+                return
+            env = to_wire(ResultBatch(results=results, acks=acks))
+            if self._send(env):
+                self.envelopes_sent += 1
+                self.result_envelopes += 1 if results else 0
+                self.results_sent += len(results)
+                self.acks_sent += len(acks)
+            else:
+                self._unsent.append(env)
+                self.envelopes_parked += 1
+            n_env += 1
+            if max_envelopes is not None and n_env >= max_envelopes:
+                return
+
+    # -- retransmission (single consumer: the heartbeat loop) --------------
+    def flush_unsent(self) -> None:
+        """Retransmit parked envelopes in completion order until the link
+        refuses again. Runs under ``_flush_lock`` so the gauge counters
+        never race a concurrent drain (they feed the acceptance metrics;
+        this path is cold)."""
+        if not self._unsent:
+            return
+        with self._flush_lock:
+            while self._unsent:
+                env = self._unsent[0]
+                if not self._send(env):
+                    return
+                self._unsent.popleft()
+                self.envelopes_sent += 1
+                n = len(env.get("results", ()))
+                self.result_envelopes += 1 if n else 0
+                self.results_sent += n
+                self.acks_sent += len(env.get("acks", ()))
+
+    @property
+    def unsent_count(self) -> int:
+        return len(self._unsent)
 
 
 class EndpointAgent:
@@ -89,6 +318,10 @@ class EndpointAgent:
         speculation_min: float = 0.25,
         stage_results: bool = True,
         extra_handler: Optional[Callable[[Any], None]] = None,
+        result_batch: int = 32,
+        result_linger: float = 0.002,
+        dedup_capacity: int = 16384,
+        dispatched_ttl: float = 900.0,
     ):
         self.endpoint_id = endpoint_id
         self.channel = channel
@@ -116,18 +349,27 @@ class EndpointAgent:
         self._queue: "collections.deque" = collections.deque()
         self._queue_lock = threading.Lock()
         self._queue_cond = threading.Condition(self._queue_lock)
+        self._dispatch_parked = False      # dispatch waiting for free room
 
         self._fn_cache: Dict[str, Tuple[Callable, bool]] = {}
         self._retries: Dict[str, int] = {}
-        self._completed: Set[str] = set()
-        # Result envelopes the channel refused (link down): retransmitted
-        # by the heartbeat loop once the link is back. Without this, a
+        # Duplicate-drop record, LRU-bounded (a long-running agent must
+        # not grow per-task state forever; recency is all dedup needs).
+        self._completed = _BoundedSet(dedup_capacity)
+        self._dispatched_at: Dict[str, Tuple[float, TaskSpec, str]] = {}
+        self.dispatched_ttl = dispatched_ttl
+        self._next_sweep = _monotonic() + 5.0
+        self._durations: collections.deque = collections.deque(maxlen=256)
+        # Batched return path (DESIGN.md §6): results and receipt acks
+        # coalesce into ResultBatch envelopes; envelopes the link refuses
+        # are parked inside the coalescer and retransmitted by the
+        # heartbeat loop once the link is back. Without that parking, a
         # result produced during an outage would be lost forever — the
         # task is already in _completed, so re-execution after the
         # requeue-on-disconnect would be dropped as a duplicate.
-        self._unsent_results: "collections.deque" = collections.deque()
-        self._dispatched_at: Dict[str, Tuple[float, TaskSpec, str]] = {}
-        self._durations: collections.deque = collections.deque(maxlen=256)
+        self.coalescer = ResultCoalescer(
+            self._ship_envelope, batch_size=result_batch,
+            linger=result_linger, outstanding=self._outstanding)
 
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -151,6 +393,7 @@ class EndpointAgent:
 
     def stop(self) -> None:
         self._stop.set()
+        self.coalescer.close()
         if self.strategy is not None:
             self.strategy.stop()
         with self._managers_lock:
@@ -216,10 +459,12 @@ class EndpointAgent:
                 t_recv = now()
                 for spec in msg.tasks:
                     spec.stamps["endpoint_recv"] = t_recv
-                    self._enqueue(spec)
-                self.channel.send_to_service(
-                    to_wire(Ack(task_ids=[s.task_id for s in msg.tasks],
-                                t_endpoint_recv=t_recv)), tag="ack")
+                self._enqueue_batch(msg.tasks)
+                # receipt ack rides the next result envelope (or its own
+                # immediately if none is in flight) — coalesced return path
+                self.coalescer.add_ack(
+                    Ack(task_ids=[s.task_id for s in msg.tasks],
+                        t_endpoint_recv=t_recv))
             elif self.extra_handler is not None:
                 try:
                     self.extra_handler(msg)
@@ -233,6 +478,15 @@ class EndpointAgent:
                 self._queue.appendleft(spec)
             else:
                 self._queue.append(spec)
+            self._queue_cond.notify()
+
+    def _enqueue_batch(self, specs: List[TaskSpec]) -> None:
+        """One queue-lock acquisition per received TaskBatch — the recv
+        loop used to take it once per member spec, contending with the
+        dispatch loop 32× per envelope."""
+        self.tasks_received += len(specs)
+        with self._queue_cond:
+            self._queue.extend(specs)
             self._queue_cond.notify()
 
     def _resolve_fn(self, function_id: str) -> Tuple[Callable, bool]:
@@ -286,7 +540,13 @@ class EndpointAgent:
             managers = self._alive_managers()
             infos = [m.info() for m in managers]
             by_id = {m.manager_id: m for m in managers}
-            room = {m.manager_id: m.room() for m in managers}
+            # room derives from the same snapshot — Manager.room() would
+            # re-scan every worker a second time per cycle, and this loop
+            # is the serial feed stage (§7.2.3 hot path)
+            room = {inf.manager_id:
+                    max(inf.capacity + by_id[inf.manager_id].prefetch
+                        - inf.queued, 0)
+                    for inf in infos}
             per_manager: Dict[str, list] = {}
             leftovers = []
             for spec in batch:
@@ -318,19 +578,32 @@ class EndpointAgent:
             for mid, items in per_manager.items():
                 by_id[mid].submit_batch(items)
             if leftovers:
+                # saturated: park the overflow and wait for a completion
+                # (worker callbacks notify the cond) instead of polling —
+                # a freed worker resumes dispatch immediately, an idle
+                # wait costs nothing
+                self._dispatch_parked = True
                 with self._queue_cond:
                     for spec in reversed(leftovers):
                         self._queue.appendleft(spec)
-                time.sleep(0.002)
+                    self._queue_cond.wait(0.002)
+                self._dispatch_parked = False
 
     def _on_result(self, manager_id: str, res: WorkResult) -> None:
-        if res.task_id in self._completed:
+        if not self._completed.add(res.task_id):
             return                 # duplicate (speculation / requeue) — drop
-        self._completed.add(res.task_id)
+        self._retries.pop(res.task_id, None)
         disp = self._dispatched_at.pop(res.task_id, None)
         if disp is not None:
             self._durations.append(time.perf_counter() - disp[0])
         self.tasks_completed += 1
+        # a worker just freed: wake the dispatch loop iff it parked
+        # overflow waiting for room (plain flag read keeps the common
+        # case lock-free — grabbing the queue lock on every completion
+        # would contend with the dispatch loop itself)
+        if self._dispatch_parked:
+            with self._queue_cond:
+                self._queue_cond.notify()
         result = res.result
         if res.status == "SUCCESS":
             # Pack the result exactly once (DESIGN.md §5). The same bytes
@@ -357,13 +630,13 @@ class EndpointAgent:
                         res.task_id,
                         f"result serialization: {type(e).__name__}: {e}")
                     return
-                self._send_result(to_wire(ResultMsg(
+                self._send_result(ResultMsg(
                     task_id=res.task_id, status=res.status,
                     result=pack_buffer(staged, tag="ret"),
                     error=res.error, remote_traceback=res.remote_traceback,
                     stamps=res.stamps, cold_start=res.cold_start,
                     build_time=res.build_time, worker_id=res.worker_id,
-                    manager_id=manager_id)))
+                    manager_id=manager_id))
                 return
             if (self.stage_results and self.store is not None
                     and len(packed) > SERVICE_PAYLOAD_LIMIT):
@@ -372,38 +645,40 @@ class EndpointAgent:
                                        packed=packed)
                 packed = pack_buffer(staged, tag="ret")   # tiny DataRef
             result = packed
-        self._send_result(to_wire(ResultMsg(
+        self._send_result(ResultMsg(
             task_id=res.task_id, status=res.status, result=result,
             error=res.error, remote_traceback=res.remote_traceback,
             stamps=res.stamps, cold_start=res.cold_start,
             build_time=res.build_time, worker_id=res.worker_id,
-            manager_id=manager_id)))
+            manager_id=manager_id))
 
     def _send_failure(self, task_id: str, error: str,
                       status: str = "FAILED") -> None:
         self._completed.add(task_id)
-        self._send_result(to_wire(ResultMsg(
-            task_id=task_id, status=status, error=error)))
+        self._retries.pop(task_id, None)
+        self._send_result(ResultMsg(
+            task_id=task_id, status=status, error=error))
 
-    def _send_result(self, env: dict) -> None:
-        """Ship one result envelope; park it for retransmission if the
-        link refuses (the service drops duplicates by task id, so a
+    def _send_result(self, msg: ResultMsg) -> None:
+        """Hand one outcome to the result coalescer (DESIGN.md §6): it
+        ships immediately on an idle line, rides a ResultBatch under
+        load, and is parked for batch-wise retransmission if the link
+        refuses (the service drops duplicates by task id, so a
         retransmit racing a requeued re-execution stays exactly-once)."""
-        if not self.channel.send_to_service(env, tag="result"):
-            self._unsent_results.append(env)
+        self.coalescer.add_result(msg)
 
-    def _flush_unsent_results(self) -> None:
-        """Single consumer (heartbeat loop): retransmit parked results in
-        completion order until the link refuses again."""
-        while self._unsent_results:
-            env = self._unsent_results[0]
-            if not self.channel.send_to_service(env, tag="result"):
-                return
-            self._unsent_results.popleft()
+    def _ship_envelope(self, env: dict) -> bool:
+        return self.channel.send_to_service(env, tag="results")
+
+    def _outstanding(self) -> int:
+        """Results still expected imminently — the coalescer's linger
+        gate. Lock-free advisory reads: both containers shrink to zero
+        when the line goes idle, which is the only answer that matters."""
+        return len(self._dispatched_at) + len(self._queue)
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():
-            self._flush_unsent_results()
+            self.coalescer.flush_unsent()
             self.channel.send_to_service(to_wire(self._heartbeat()), tag="hb")
             time.sleep(self.heartbeat_interval)
 
@@ -435,6 +710,20 @@ class EndpointAgent:
             self._check_lost_managers()
             if self.speculation:
                 self._check_stragglers()
+            if _monotonic() >= self._next_sweep:
+                self._sweep_dispatched()
+                self._next_sweep = _monotonic() + 5.0
+
+    def _sweep_dispatched(self) -> None:
+        """Evict stale ``_dispatched_at`` entries: tasks whose result
+        already shipped (defensive — the happy path pops on completion)
+        and tasks in flight longer than ``dispatched_ttl`` (a wedged
+        worker would otherwise pin its entry — and the straggler
+        detector's interest in it — forever)."""
+        cutoff = time.perf_counter() - self.dispatched_ttl
+        for task_id, (t0, _spec, _mid) in list(self._dispatched_at.items()):
+            if task_id in self._completed or t0 < cutoff:
+                self._dispatched_at.pop(task_id, None)
 
     def _check_lost_managers(self) -> None:
         cutoff = time.perf_counter() - self.manager_timeout

@@ -27,6 +27,7 @@ from .protocol import (
     FnResponse,
     Heartbeat,
     ProtocolError,
+    ResultBatch,
     ResultMsg,
     TaskBatch,
     TaskSpec,
@@ -61,6 +62,8 @@ class EndpointLine:
         # metrics
         self.dispatched = 0
         self.results_received = 0
+        self.result_envelopes = 0       # ResultBatch frames (gauge: results
+        #                                 per envelope → batching efficiency)
         self.requeues = 0
 
     def queue_len(self) -> int:
@@ -116,6 +119,7 @@ class ForwarderPool:
         # metrics (pool-wide; per-endpoint counts live on the lines)
         self.dispatched = 0
         self.results_received = 0
+        self.result_envelopes = 0
         self.requeues = 0
 
     # ------------------------------------------------------------------ control
@@ -241,12 +245,8 @@ class ForwarderPool:
 
     def _dispatch(self, line: EndpointLine, task_ids: List[str]) -> None:
         specs: List[TaskSpec] = []
-        for tid in task_ids:
-            try:
-                task = self.task_store.get(tid)
-            except KeyError:
-                continue
-            if task.done:
+        for tid, task in zip(task_ids, self.task_store.get_many(task_ids)):
+            if task is None or task.done:
                 continue
             task.status = TaskStatus.DISPATCHED
             task.stamp("forwarder_sent")
@@ -291,8 +291,13 @@ class ForwarderPool:
                     self._handle_heartbeat(line, msg)
                 elif isinstance(msg, Ack):
                     self._handle_ack(msg)
+                elif isinstance(msg, ResultBatch):
+                    self._handle_result_batch(line, msg)
                 elif isinstance(msg, ResultMsg):
-                    self._handle_result(line, msg)
+                    # legacy lone-result envelope (hand-built messages,
+                    # older agents): same path, batch of one
+                    self._handle_result_batch(
+                        line, ResultBatch(results=[msg]))
                 elif isinstance(msg, FnRequest):
                     self._handle_fn_request(line, msg)
 
@@ -305,41 +310,55 @@ class ForwarderPool:
                 self._cond.notify()                 # queued work can flow
 
     def _handle_ack(self, ack: Ack) -> None:
-        for tid in ack.task_ids:
-            try:
-                task = self.task_store.get(tid)
+        # one store lock round-trip for the whole acked batch
+        for task in self.task_store.get_many(ack.task_ids):
+            if task is not None:
                 task.t.setdefault("endpoint_recv",
                                   ack.t_endpoint_recv or now())
-            except KeyError:
-                pass
 
-    def _handle_result(self, line: EndpointLine, res: ResultMsg) -> None:
+    def _handle_result_batch(self, line: EndpointLine,
+                             batch: ResultBatch) -> None:
+        """Resolve a whole ResultBatch with batch-granular locking: one
+        pool-lock acquisition clears every member from the in-flight map,
+        one store round-trip fetches the tasks, and one ``mark_done_many``
+        wakes the waiters — lock traffic per *envelope*, not per task.
+        Duplicate members (batched retransmission racing a requeued
+        re-execution) are dropped by the ``task.done`` check, keeping the
+        exactly-once contract batch-wise."""
+        for ack in batch.acks:
+            self._handle_ack(ack)
+        if not batch.results:
+            return
+        line.result_envelopes += 1
+        self.result_envelopes += 1
         with self._lock:
-            line.in_flight.pop(res.task_id, None)
-        try:
-            task = self.task_store.get(res.task_id)
-        except KeyError:
-            return
-        if task.done:
-            return
-        task.t.update(res.stamps)
-        task.cold_start = res.cold_start
-        task.worker_id = res.worker_id
-        task.manager_id = res.manager_id
-        if res.status == "SUCCESS":
-            task.result = res.result
-            task.status = TaskStatus.SUCCESS
-        elif res.status == "LOST":
-            task.error = res.error
-            task.status = TaskStatus.LOST
-        else:
-            task.error = res.error
-            task.remote_traceback = res.remote_traceback
-            task.status = TaskStatus.FAILED
-        task.stamp("result_stored")
-        line.results_received += 1
-        self.results_received += 1
-        self.task_store.mark_done(res.task_id)
+            for res in batch.results:
+                line.in_flight.pop(res.task_id, None)
+        tasks = self.task_store.get_many(
+            [res.task_id for res in batch.results])
+        done_ids: List[str] = []
+        for res, task in zip(batch.results, tasks):
+            if task is None or task.done:
+                continue               # purged or duplicate — drop
+            task.t.update(res.stamps)
+            task.cold_start = res.cold_start
+            task.worker_id = res.worker_id
+            task.manager_id = res.manager_id
+            if res.status == "SUCCESS":
+                task.result = res.result
+                task.status = TaskStatus.SUCCESS
+            elif res.status == "LOST":
+                task.error = res.error
+                task.status = TaskStatus.LOST
+            else:
+                task.error = res.error
+                task.remote_traceback = res.remote_traceback
+                task.status = TaskStatus.FAILED
+            task.stamp("result_stored")
+            done_ids.append(res.task_id)
+        line.results_received += len(done_ids)
+        self.results_received += len(done_ids)
+        self.task_store.mark_done_many(done_ids)
 
     def _handle_fn_request(self, line: EndpointLine, req: FnRequest) -> None:
         """Remote endpoint pulling a function body. Errors travel back in

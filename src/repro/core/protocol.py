@@ -13,7 +13,10 @@ Wire kinds:
   ``ack``           endpoint → service   receipt of a batch (hierarchical queuing)
   ``heartbeat``     endpoint → service   liveness + load/warm-container
                                          advertisement (feeds federation routing)
-  ``result``        endpoint → service   one task outcome
+  ``result``        endpoint → service   one task outcome (legacy/lone form)
+  ``result_batch``  endpoint → service   coalesced outcomes + receipt acks —
+                                         the batched return path (§4.6 made
+                                         symmetric; see DESIGN.md §6)
   ``register``      endpoint → service   transport handshake: authenticate and
                                          attach (or re-attach) an endpoint that
                                          dialed in over a socket transport
@@ -56,10 +59,12 @@ class TaskSpec:
 
     def to_dict(self) -> dict:
         d = {"task_id": self.task_id, "function_id": self.function_id,
-             "container_type": self.container_type, "stamps": self.stamps}
+             "container_type": self.container_type}
+        if self.stamps:
+            d["stamps"] = self.stamps
         if isinstance(self.payload, PackedBuffer):
             d["payload_b"] = self.payload.data      # opaque frame, no re-pack
-        else:
+        elif self.payload is not None:
             d["payload"] = self.payload
         return d
 
@@ -116,6 +121,63 @@ class ResultMsg:
     worker_id: str = ""
     manager_id: str = ""
 
+    # field-name tuple resolved once — fields() per message is measurable
+    # at batch decode rates (set right after the class body below)
+    _FIELDS: ClassVar[Tuple[str, ...]] = ()
+
+    def to_dict(self) -> dict:
+        """Wire dict for this outcome — standalone envelope body and
+        ``ResultBatch`` element share it. A packed result travels as an
+        opaque byte frame (``result_b``), same as ``TaskSpec.payload_b``.
+        Default-valued fields are omitted (``from_dict`` restores the
+        defaults): at 32 results per envelope, encoding five always-empty
+        fields per result is real batch-path work."""
+        d: Dict[str, Any] = {"task_id": self.task_id, "status": self.status}
+        if isinstance(self.result, PackedBuffer):
+            d["result_b"] = self.result.data        # opaque frame, no re-pack
+        elif self.result is not None:
+            d["result"] = self.result
+        if self.stamps:
+            d["stamps"] = self.stamps
+        if self.error:
+            d["error"] = self.error
+        if self.remote_traceback:
+            d["remote_traceback"] = self.remote_traceback
+        if self.cold_start:
+            d["cold_start"] = True
+        if self.build_time:
+            d["build_time"] = self.build_time
+        if self.worker_id:
+            d["worker_id"] = self.worker_id
+        if self.manager_id:
+            d["manager_id"] = self.manager_id
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ResultMsg":
+        kwargs = {name: d[name] for name in cls._FIELDS if name in d}
+        if d.get("result_b") is not None:
+            kwargs["result"] = PackedBuffer.from_bytes(d["result_b"])
+        return cls(**kwargs)
+
+
+ResultMsg._FIELDS = tuple(f.name for f in fields(ResultMsg))
+
+
+@dataclass
+class ResultBatch:
+    """Coalesced return path (DESIGN.md §6): N task outcomes and any
+    pending receipt acks in **one** wire envelope. The forward path has
+    batched since PR 1 (``TaskBatch``); this is the symmetric half — the
+    endpoint's result coalescer fills it under load and degenerates to a
+    single-element batch when the line is idle, so lone tasks pay no
+    extra latency while loaded lines pay one envelope per ~batch_size
+    completions. Each member result keeps pack-once semantics (its
+    ``PackedBuffer`` bytes embed verbatim via ``result_b``)."""
+    kind: ClassVar[str] = "result_batch"
+    results: List[ResultMsg] = field(default_factory=list)
+    acks: List[Ack] = field(default_factory=list)
+
 
 @dataclass
 class Register:
@@ -158,7 +220,7 @@ class FnResponse:
 
 Message = object                      # union of the classes below
 WIRE_TYPES = {cls.kind: cls for cls in (
-    TaskBatch, Ack, Heartbeat, ResultMsg,
+    TaskBatch, Ack, Heartbeat, ResultMsg, ResultBatch,
     Register, RegisterAck, FnRequest, FnResponse)}
 
 
@@ -171,11 +233,17 @@ def to_wire(msg) -> dict:
     if isinstance(msg, TaskBatch):
         env["tasks"] = [t.to_dict() for t in msg.tasks]
         return env
+    if isinstance(msg, ResultBatch):
+        env["results"] = [r.to_dict() for r in msg.results]
+        env["acks"] = [{"task_ids": a.task_ids,
+                        "t_endpoint_recv": a.t_endpoint_recv}
+                       for a in msg.acks]
+        return env
+    if isinstance(msg, ResultMsg):
+        env.update(msg.to_dict())
+        return env
     for f in fields(msg):
         env[f.name] = getattr(msg, f.name)
-    if isinstance(msg, ResultMsg) and isinstance(msg.result, PackedBuffer):
-        env["result_b"] = msg.result.data           # opaque frame, no re-pack
-        env["result"] = None
     return env
 
 
@@ -188,7 +256,13 @@ def from_wire(env: dict):
     if cls is TaskBatch:
         return TaskBatch(tasks=[TaskSpec.from_dict(t)
                                 for t in env.get("tasks", [])])
+    if cls is ResultBatch:
+        return ResultBatch(
+            results=[ResultMsg.from_dict(r) for r in env.get("results", [])],
+            acks=[Ack(task_ids=list(a.get("task_ids", [])),
+                      t_endpoint_recv=a.get("t_endpoint_recv", 0.0))
+                  for a in env.get("acks", [])])
+    if cls is ResultMsg:
+        return ResultMsg.from_dict(env)
     kwargs = {f.name: env[f.name] for f in fields(cls) if f.name in env}
-    if cls is ResultMsg and env.get("result_b") is not None:
-        kwargs["result"] = PackedBuffer.from_bytes(env["result_b"])
     return cls(**kwargs)

@@ -17,7 +17,16 @@ import threading
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 from ..data import (
     InMemoryKVStore,
@@ -384,12 +393,8 @@ class FuncXService:
         return eid
 
     # ------------------------------------------------------------------- submit
-    def _check_request(self, identity: str, function_id: str, payload: Any
-                       ) -> Tuple[RegisteredFunction, PackedBuffer]:
-        """Validate + **pack once** (DESIGN.md §5): the same bytes serve the
-        10 MB limit check and then travel the whole pipeline — the task, the
-        wire envelope's opaque frame, and the worker's lazy unpack. A
-        pre-packed payload (client fan-out) passes through byte-identical."""
+    def _resolve_function(self, identity: str,
+                          function_id: str) -> RegisteredFunction:
         with self._lock:
             rf = self.functions.get(function_id)
         if rf is None:
@@ -397,12 +402,25 @@ class FuncXService:
         if not rf.authorized(identity):
             raise AuthError(
                 f"{identity} is not authorized to run {rf.name}")
+        return rf
+
+    def _pack_checked(self, payload: Any) -> PackedBuffer:
+        """**Pack once** (DESIGN.md §5): the same bytes serve the 10 MB
+        limit check and then travel the whole pipeline — the task, the
+        wire envelope's opaque frame, and the worker's lazy unpack. A
+        pre-packed payload (client fan-out) passes through
+        byte-identical."""
         packed = pack_buffer(payload, tag="task")
         if len(packed) > self.payload_limit:
             raise PayloadTooLarge(
                 f"payload {len(packed)}B > {self.payload_limit}B; stage via "
                 f"DataRef + TransferService (paper §5.1)")
-        return rf, packed
+        return packed
+
+    def _check_request(self, identity: str, function_id: str, payload: Any
+                       ) -> Tuple[RegisteredFunction, PackedBuffer]:
+        return (self._resolve_function(identity, function_id),
+                self._pack_checked(payload))
 
     def submit(self, token: Token, function_id: str,
                endpoint_id: Optional[str] = None, payload: Any = None, *,
@@ -437,9 +455,15 @@ class FuncXService:
         enqueued in a single pass — not one lock round-trip per task."""
         identity = self.auth.validate(token, SCOPE_RUN)
         snapshot: Optional[List[EndpointInfo]] = None
+        # resolve + authorize each distinct function once per batch, not
+        # one service-lock round-trip per request
+        rf_cache: Dict[str, RegisteredFunction] = {}
         checked: List[Tuple[str, str, PackedBuffer, str]] = []
         for fid, eid, payload in requests:
-            rf, packed = self._check_request(identity, fid, payload)
+            rf = rf_cache.get(fid)
+            if rf is None:
+                rf = rf_cache[fid] = self._resolve_function(identity, fid)
+            packed = self._pack_checked(payload)
             ct = rf.container_type
             if eid is None:
                 if snapshot is None:
@@ -454,9 +478,9 @@ class FuncXService:
             task = Task(function_id=fid, endpoint_id=eid, payload=packed,
                         container_type=ct)
             task.stamp("submit")
-            self.tasks.put(task)
             tasks.append(task)
             per_endpoint.setdefault(eid, []).append(task.task_id)
+        self.tasks.put_many(tasks)         # one store lock for the batch
         for eid, tids in per_endpoint.items():
             self.pool.enqueue_many(eid, tids)
         for task in tasks:
@@ -486,11 +510,89 @@ class FuncXService:
             if self.purge_on_get:
                 self.tasks.purge(task_id)
 
+    # -- streaming retrieval (DESIGN.md §6) --------------------------------
+    def wait_any(self, task_ids: Sequence[str],
+                 timeout: float = 30.0) -> List[str]:
+        """Block until at least one of ``task_ids`` is done; returns the
+        ids newly completed (completion order). Empty list on timeout."""
+        return self.tasks.wait_any(task_ids, timeout)
+
+    def as_completed(self, task_ids: Sequence[str],
+                     timeout: Optional[float] = 30.0) -> Iterator[str]:
+        """Yield ``task_ids`` in **completion order** as they finish.
+
+        One :class:`~repro.core.tasks.BatchWaiter` registration serves the
+        whole harvest — a 32-result batch wakes this generator once, not
+        32 times (the pre-batch path cost N sequential ``Event.wait`` +
+        purge cycles). The caller retrieves/purges each yielded id (e.g.
+        via :meth:`get_result`, which returns instantly for a done task).
+        Raises ``TimeoutError`` if the deadline passes with tasks still
+        pending."""
+        ids = list(dict.fromkeys(task_ids))
+        deadline = None if timeout is None else time.time() + timeout
+        waiter = self.tasks.make_waiter(ids)
+        try:
+            remaining = len(ids)
+            while remaining:
+                budget = None if deadline is None \
+                    else max(deadline - time.time(), 0.0)
+                done = waiter.wait(budget)
+                if not done:
+                    raise TimeoutError(
+                        f"{remaining} of {len(ids)} tasks not done "
+                        f"in {timeout}s")
+                for tid in done:
+                    remaining -= 1
+                    yield tid
+        finally:
+            self.tasks.close_waiter(waiter)
+
     def get_batch_results(self, task_ids: Sequence[str],
                           timeout: float = 30.0) -> List[Any]:
+        """Harvest a batch, streaming off completion events: one waiter
+        registration serves the whole harvest, each wakeup drains every
+        result that landed since the last (one ``get_many`` per wave, not
+        one lock round-trip per task), and the whole harvest is purged in
+        one store round-trip — **including when some tasks failed**:
+        every completed task is drained first and the error (of the
+        earliest failed task in submission order) raises only after the
+        store is clean, so a mid-list failure can no longer leak the rest
+        of the batch under ``purge_on_get=True``."""
+        ids = list(dict.fromkeys(task_ids))
         deadline = time.time() + timeout
-        return [self.get_result(tid, max(deadline - time.time(), 0.001))
-                for tid in task_ids]
+        outcomes: Dict[str, Any] = {}
+        errors: Dict[str, Exception] = {}
+        harvested: List[str] = []
+        waiter = self.tasks.make_waiter(ids)
+        try:
+            remaining = len(ids)
+            while remaining:
+                done = waiter.wait(max(deadline - time.time(), 0.0))
+                if not done:
+                    raise TimeoutError(
+                        f"{remaining} of {len(ids)} tasks not done "
+                        f"in {timeout}s")
+                remaining -= len(done)
+                harvested.extend(done)
+                for tid, task in zip(done, self.tasks.get_many(done)):
+                    if task is None:
+                        raise KeyError(tid)       # purged underneath us
+                    if task.status == TaskStatus.SUCCESS:
+                        outcomes[tid] = task.result_value()   # decode-once
+                    elif task.status == TaskStatus.LOST:
+                        errors[tid] = TaskLost(task.error or "task lost")
+                    else:
+                        errors[tid] = TaskFailure(
+                            task.error or "task failed",
+                            task.remote_traceback)
+        finally:
+            self.tasks.close_waiter(waiter)
+            if self.purge_on_get:
+                self.tasks.purge_many(harvested)
+        for tid in task_ids:               # submission order, like the old
+            if tid in errors:              # sequential-get loop raised
+                raise errors[tid]
+        return [outcomes[tid] for tid in task_ids]
 
     # ------------------------------------------------------------------- health
     def _health_loop(self) -> None:

@@ -6,12 +6,25 @@ execution) — `latency_breakdown()` reproduces Fig. 3 from any finished task.
 """
 from __future__ import annotations
 
+import collections
+import itertools
 import threading
 import time
 import uuid
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set
+
+# uuid4 costs a urandom syscall (~50 µs) per call — measurable overhead at
+# thousands of submissions per second, all on the serial submit path. One
+# random prefix per process keeps ids globally unique; a counter keeps
+# them unique in-process.
+_ID_PREFIX = uuid.uuid4().hex[:12]
+_ID_COUNTER = itertools.count()
+
+
+def new_task_id() -> str:
+    return f"{_ID_PREFIX}-{next(_ID_COUNTER):08x}"
 
 
 class TaskStatus(Enum):
@@ -38,7 +51,7 @@ class Task:
     payload: Any                       # PackedBuffer (pack-once plane) or a
     #                                    plain object on legacy/test paths
     container_type: str                # compile signature / container image
-    task_id: str = field(default_factory=lambda: str(uuid.uuid4()))
+    task_id: str = field(default_factory=new_task_id)
     status: TaskStatus = TaskStatus.PENDING
     result: Any = None
     error: Optional[str] = None
@@ -85,39 +98,162 @@ class Task:
         return self.status in TERMINAL
 
 
+class BatchWaiter:
+    """One registration over N task ids, woken batch-wise.
+
+    The pre-batch harvest loop cost N sequential ``Event.wait`` + lock
+    round-trips; a waiter registers once, and every ``mark_done_many``
+    touching its ids appends them to ``_fired`` and sets one event — so a
+    32-result batch wakes the harvester **once**, not 32 times. Obtain via
+    :meth:`TaskStore.make_waiter`, release via :meth:`TaskStore.close_waiter`
+    (or use :meth:`TaskStore.wait_any` for the one-shot form).
+    """
+
+    __slots__ = ("_store", "event", "_fired", "watching")
+
+    def __init__(self, store: "TaskStore"):
+        self._store = store
+        self.event = threading.Event()
+        self._fired: collections.deque = collections.deque()
+        self.watching: Set[str] = set()
+
+    def wait(self, timeout: Optional[float]) -> List[str]:
+        """Block until ≥1 watched task completes; return the newly
+        completed ids (in completion order). Empty list on timeout."""
+        if not self.event.wait(timeout):
+            return []
+        with self._store._lock:
+            out = list(self._fired)
+            self._fired.clear()
+            self.event.clear()
+        return out
+
+
 class TaskStore:
-    """Service-side task table (the paper's Redis hashset analogue)."""
+    """Service-side task table (the paper's Redis hashset analogue).
+
+    Bulk entry points (``put_many`` / ``get_many`` / ``mark_done_many`` /
+    ``purge_many``) make store traffic proportional to *batches*, not
+    tasks: the ForwarderPool resolves a whole ``ResultBatch`` and the
+    client harvests a whole submission under one lock round-trip each
+    (DESIGN.md §6)."""
 
     def __init__(self):
         self._tasks: Dict[str, Task] = {}
         self._lock = threading.RLock()
+        # Completion record. Events are allocated lazily — only for ids
+        # someone actually waits on with `wait()` — because the batched
+        # harvest path (BatchWaiter) needs no per-task Event at all, and
+        # an Event per submitted task is measurable allocation churn.
+        self._done: Set[str] = set()
         self._events: Dict[str, threading.Event] = {}
+        # task_id -> batch waiters watching it (removed on completion or
+        # close_waiter, so the dict only holds live registrations)
+        self._watchers: Dict[str, List[BatchWaiter]] = {}
 
     def put(self, task: Task) -> None:
         with self._lock:
             self._tasks[task.task_id] = task
-            self._events.setdefault(task.task_id, threading.Event())
+
+    def put_many(self, tasks: Iterable[Task]) -> None:
+        with self._lock:
+            for task in tasks:
+                self._tasks[task.task_id] = task
 
     def get(self, task_id: str) -> Task:
         with self._lock:
             return self._tasks[task_id]
 
-    def mark_done(self, task_id: str) -> None:
+    def get_many(self, task_ids: Sequence[str]) -> List[Optional[Task]]:
+        """One lock round-trip for a whole batch; unknown ids yield None
+        (a purged/duplicate result is the caller's drop decision)."""
         with self._lock:
-            ev = self._events.get(task_id)
-        if ev is not None:
-            ev.set()
+            return [self._tasks.get(t) for t in task_ids]
+
+    def mark_done(self, task_id: str) -> None:
+        self.mark_done_many((task_id,))
+
+    def mark_done_many(self, task_ids: Sequence[str]) -> None:
+        """Complete a batch under one lock acquisition: record each id
+        done, set its event if anyone allocated one, and wake each
+        registered batch waiter exactly once. All of it happens *inside*
+        the lock — a waiter registering concurrently either sees the done
+        record or is on the watcher list; no lost-wakeup window."""
+        if not task_ids:
+            return
+        with self._lock:
+            for tid in task_ids:
+                self._done.add(tid)
+                ev = self._events.get(tid)
+                if ev is not None:
+                    ev.set()
+                for w in self._watchers.pop(tid, ()):
+                    w.watching.discard(tid)
+                    w._fired.append(tid)
+                    w.event.set()
 
     def wait(self, task_id: str, timeout: float) -> bool:
         with self._lock:
-            ev = self._events.setdefault(task_id, threading.Event())
+            if task_id in self._done:
+                return True
+            ev = self._events.get(task_id)
+            if ev is None:
+                ev = self._events[task_id] = threading.Event()
         return ev.wait(timeout)
+
+    # -- batch-aware waiting (DESIGN.md §6) --------------------------------
+    def make_waiter(self, task_ids: Iterable[str]) -> BatchWaiter:
+        """Register a :class:`BatchWaiter` over ``task_ids``. Tasks already
+        done land in its fired queue immediately."""
+        w = BatchWaiter(self)
+        with self._lock:
+            for tid in task_ids:
+                if tid in self._done:
+                    w._fired.append(tid)
+                    continue
+                self._watchers.setdefault(tid, []).append(w)
+                w.watching.add(tid)
+            if w._fired:
+                w.event.set()
+        return w
+
+    def close_waiter(self, w: BatchWaiter) -> None:
+        with self._lock:
+            for tid in w.watching:
+                lst = self._watchers.get(tid)
+                if lst is not None:
+                    try:
+                        lst.remove(w)
+                    except ValueError:
+                        pass
+                    if not lst:
+                        del self._watchers[tid]
+            w.watching.clear()
+
+    def wait_any(self, task_ids: Iterable[str],
+                 timeout: Optional[float]) -> List[str]:
+        """Block until at least one of ``task_ids`` is done (or timeout);
+        returns the completed ids seen by this call. One-shot form of
+        :meth:`make_waiter` for callers without a harvest loop."""
+        w = self.make_waiter(task_ids)
+        try:
+            return w.wait(timeout)
+        finally:
+            self.close_waiter(w)
 
     def purge(self, task_id: str) -> None:
         """Paper: results are purged once retrieved / after a period."""
         with self._lock:
             self._tasks.pop(task_id, None)
+            self._done.discard(task_id)
             self._events.pop(task_id, None)
+
+    def purge_many(self, task_ids: Sequence[str]) -> None:
+        with self._lock:
+            for tid in task_ids:
+                self._tasks.pop(tid, None)
+                self._done.discard(tid)
+                self._events.pop(tid, None)
 
     def all_ids(self):
         with self._lock:

@@ -39,6 +39,7 @@ from __future__ import annotations
 import pickle
 import struct
 import threading
+import weakref
 from typing import Any, Dict, Optional, Tuple, Union
 
 import msgpack
@@ -74,55 +75,125 @@ class SerializationError(Exception):
 # writes tag buffers by *key*, which is unbounded) under "other" so the
 # per-tag dicts stay O(1) for the life of the process.
 _WELL_KNOWN_TAGS = frozenset({"task", "ret", "tasks", "ack", "hb",
-                              "result", "heartbeat", "task_batch", ""})
+                              "result", "results", "heartbeat",
+                              "task_batch", "result_batch", ""})
 
 
 class FacadeStats:
     """Counts actual serializations/deserializations (header-only operations
     — ``peek_tag``, wrapping existing bytes — never count). ``packs_by_tag``
     is how the benchmarks assert the pack-once invariant: exactly one
-    ``"task"``-tagged pack per submitted task, one ``"ret"`` per result."""
+    ``"task"``-tagged pack per submitted task, one ``"ret"`` per result.
+
+    Counters are **sharded per thread**: every pack on the hot path used
+    to take one global lock, and with a dozen pipeline threads on a small
+    core count that lock convoyed — stack samples showed the whole
+    service (submit, dispatch, recv, result flusher) queued on it while
+    throughput collapsed. Each thread now increments its own shard (only
+    that thread writes it; the GIL makes each increment atomic) and the
+    lock guards nothing but shard registration, ``reset`` (an epoch bump
+    that retires every shard), and the ``snapshot`` aggregation — exact
+    totals, zero hot-path contention."""
 
     def __init__(self):
         self._lock = threading.Lock()
-        self.reset()
+        self._local = threading.local()
+        # (weakref-to-thread, shard) pairs; a dead thread's shard is
+        # folded into _retired at the next snapshot, so shards-ever-
+        # created never accumulate in a long-lived process (endpoints
+        # spin worker threads up and down constantly)
+        self._shards: list = []
+        self._retired = self._new_shard(0)
+        self._epoch = 0
+
+    @staticmethod
+    def _new_shard(epoch: int) -> dict:
+        # Tag dicts are pre-seeded with every bucket they can ever hold
+        # (unknown tags collapse to "other"), so increments never insert
+        # keys — snapshot() can iterate a live shard without hitting
+        # dictionary-changed-size.
+        return {"epoch": epoch, "packs": 0, "unpacks": 0,
+                "cache_hits": 0, "cache_misses": 0,
+                "packs_by_tag": {t: 0 for t in (*_WELL_KNOWN_TAGS,
+                                                "other")},
+                "unpacks_by_tag": {t: 0 for t in (*_WELL_KNOWN_TAGS,
+                                                  "other")}}
+
+    @staticmethod
+    def _merge(dst: dict, src: dict) -> None:
+        for k in ("packs", "unpacks", "cache_hits", "cache_misses"):
+            dst[k] += src[k]
+        for k in ("packs_by_tag", "unpacks_by_tag"):
+            d = dst[k]
+            for tag, n in src[k].items():
+                if n:
+                    d[tag] = d.get(tag, 0) + n
+
+    def _shard(self) -> dict:
+        sh = getattr(self._local, "shard", None)
+        if sh is None or sh["epoch"] != self._epoch:
+            sh = self._new_shard(self._epoch)
+            with self._lock:
+                if sh["epoch"] == self._epoch:     # no reset raced us
+                    self._shards.append(
+                        (weakref.ref(threading.current_thread()), sh))
+            self._local.shard = sh
+        return sh
 
     def reset(self) -> None:
         with self._lock:
-            self.packs = 0
-            self.unpacks = 0
-            self.cache_hits = 0
-            self.cache_misses = 0
-            self.packs_by_tag: Dict[str, int] = {}
-            self.unpacks_by_tag: Dict[str, int] = {}
+            self._epoch += 1
+            self._shards = []
+            self._retired = self._new_shard(self._epoch)
 
     def count_pack(self, tag: str, cache_hit: Optional[bool]) -> None:
         if tag not in _WELL_KNOWN_TAGS:
             tag = "other"
-        with self._lock:
-            self.packs += 1
-            self.packs_by_tag[tag] = self.packs_by_tag.get(tag, 0) + 1
-            if cache_hit is True:
-                self.cache_hits += 1
-            elif cache_hit is False:
-                self.cache_misses += 1
+        sh = self._shard()
+        sh["packs"] += 1
+        sh["packs_by_tag"][tag] += 1       # key pre-seeded; no insert
+        if cache_hit is True:
+            sh["cache_hits"] += 1
+        elif cache_hit is False:
+            sh["cache_misses"] += 1
 
     def count_unpack(self, tag: str) -> None:
         if tag not in _WELL_KNOWN_TAGS:
             tag = "other"
-        with self._lock:
-            self.unpacks += 1
-            self.unpacks_by_tag[tag] = self.unpacks_by_tag.get(tag, 0) + 1
+        sh = self._shard()
+        sh["unpacks"] += 1
+        sh["unpacks_by_tag"][tag] += 1     # key pre-seeded; no insert
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
-            return {
-                "packs": self.packs, "unpacks": self.unpacks,
-                "cache_hits": self.cache_hits,
-                "cache_misses": self.cache_misses,
-                "packs_by_tag": dict(self.packs_by_tag),
-                "unpacks_by_tag": dict(self.unpacks_by_tag),
+            live = []
+            for thr_ref, sh in self._shards:
+                if thr_ref() is None:      # thread gone: fold its (now
+                    self._merge(self._retired, sh)   # frozen) counts in
+                else:
+                    live.append((thr_ref, sh))
+            self._shards = live
+            shards = [sh for _, sh in live]
+            out: Dict[str, Any] = {
+                "packs": self._retired["packs"],
+                "unpacks": self._retired["unpacks"],
+                "cache_hits": self._retired["cache_hits"],
+                "cache_misses": self._retired["cache_misses"],
+                "packs_by_tag": {t: n for t, n in
+                                 self._retired["packs_by_tag"].items()
+                                 if n},
+                "unpacks_by_tag": {t: n for t, n in
+                                   self._retired["unpacks_by_tag"].items()
+                                   if n},
             }
+        for sh in shards:
+            for k in ("packs", "unpacks", "cache_hits", "cache_misses"):
+                out[k] += sh[k]
+            for k in ("packs_by_tag", "unpacks_by_tag"):
+                for tag, n in sh[k].items():
+                    if n:                  # pre-seeded zeros stay internal
+                        out[k][tag] = out[k].get(tag, 0) + n
+        return out
 
 
 stats = FacadeStats()

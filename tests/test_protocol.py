@@ -9,6 +9,7 @@ from repro.core import (
     Channel,
     Heartbeat,
     ProtocolError,
+    ResultBatch,
     ResultMsg,
     TaskBatch,
     TaskSpec,
@@ -34,6 +35,16 @@ MESSAGES = [
     ResultMsg(task_id="t2", status="FAILED", error="boom",
               remote_traceback="Traceback ..."),
     ResultMsg(task_id="t3", status="LOST", error="lost after 2 retries"),
+    ResultBatch(
+        results=[
+            ResultMsg(task_id="t1", status="SUCCESS", result={"y": 2},
+                      stamps={"worker_start": 1.0}, worker_id="w0",
+                      manager_id="m0"),
+            ResultMsg(task_id="t2", status="FAILED", error="boom",
+                      remote_traceback="Traceback ..."),
+        ],
+        acks=[Ack(task_ids=["t3", "t4"], t_endpoint_recv=3.5)]),
+    ResultBatch(acks=[Ack(task_ids=["t9"], t_endpoint_recv=1.0)]),
 ]
 
 

@@ -1,0 +1,275 @@
+"""Batched result plane (DESIGN.md §6): frames-per-task under load,
+lone-task immediate flush, batch-wise retransmission exactly-once,
+streaming `as_completed`/`wait_any` retrieval, bulk TaskStore ops,
+harvest-then-raise batch gets, bounded endpoint dedup state, and the
+manager's deferred-placement side deque."""
+import time
+
+import pytest
+
+from repro.core import (
+    ResultCoalescer,
+    ResultMsg,
+    Task,
+    TaskFailure,
+    TaskStore,
+)
+from repro.core.endpoint import demo_sleep
+from conftest import start_tcp_endpoint, wait_until
+
+
+# -- frames-per-task / coalescing -------------------------------------------
+
+def test_frames_per_task_under_load(service, client):
+    """Under load the coalescer must amortize envelopes: ≥8 results per
+    result-carrying envelope at batch_size 32 (waves of simultaneous
+    completions + linger fill the batches)."""
+    fid = client.register_function(lambda d: time.sleep(0.01), name="s10ms")
+    eid, agent = service.make_endpoint(
+        client.token, "ep", n_managers=2, workers_per_manager=16,
+        result_linger=0.01)
+    n = 256
+    ids = client.batch_run([(fid, eid, {}) for _ in range(n)])
+    assert client.get_batch_results(ids, timeout=60) == [None] * n
+    co = agent.coalescer
+    assert co.results_sent >= n
+    assert co.result_envelopes <= n // 8, (
+        f"{co.result_envelopes} result envelopes for {n} tasks "
+        f"(avg {co.results_sent / co.result_envelopes:.1f}/envelope)")
+    # the pool saw the same batching (frames, not per-task messages)
+    assert service.pool.result_envelopes <= n // 8
+    assert service.pool.results_received >= n
+    agent.stop()
+
+
+def test_lone_task_flushes_immediately_when_idle(service, client):
+    """An idle line must not pay the linger: a lone result ships on its
+    own thread the moment it completes (set linger absurdly high — if the
+    flush waited on it, this get would take ≥2s)."""
+    fid = client.register_function(lambda d: d["x"], name="echo")
+    eid, agent = service.make_endpoint(
+        client.token, "ep", n_managers=1, workers_per_manager=2,
+        result_linger=2.0)
+    t0 = time.perf_counter()
+    assert client.get_result(client.run(fid, eid, data={"x": 7}),
+                             timeout=10) == 7
+    assert time.perf_counter() - t0 < 1.0
+    assert agent.coalescer.result_envelopes == 1
+    agent.stop()
+
+
+def test_coalescer_parks_refused_envelopes_and_retransmits():
+    """Unit: a refused send parks the built envelope; flush_unsent ships
+    it verbatim once the link accepts again."""
+    sent = []
+    link_up = {"v": False}
+
+    def send(env):
+        if not link_up["v"]:
+            return False
+        sent.append(env)
+        return True
+
+    co = ResultCoalescer(send, batch_size=4, linger=0.0)
+    co.add_result(ResultMsg(task_id="a", status="SUCCESS", result=1))
+    co.add_result(ResultMsg(task_id="b", status="SUCCESS", result=2))
+    assert co.unsent_count >= 1 and not sent
+    link_up["v"] = True
+    co.flush_unsent()
+    assert co.unsent_count == 0
+    got = [r["task_id"] for env in sent for r in env["results"]]
+    assert got == ["a", "b"]          # completion order preserved
+    assert co.results_sent == 2
+
+
+def test_batched_retransmission_after_tcp_cut_exactly_once(tcp_service):
+    """Results finished into a dead socket are parked *as batch
+    envelopes* and retransmitted after the re-dial; the requeued
+    re-execution's duplicates are dropped member-wise, so every task
+    completes exactly once."""
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address, workers_per_manager=4)
+    try:
+        fid = client.register_function(demo_sleep)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"s": 0.3})
+                                for _ in range(4)])
+        # all four on workers (function fetched, items placed) before the
+        # cut — else the cut can stall the wire fn-fetch instead, and the
+        # results would ship over the healed link without ever parking
+        assert wait_until(lambda: len(runner.agent._dispatched_at) >= 4,
+                          timeout=5)
+        runner.transport.disconnect()
+        time.sleep(1.0)              # all four finish into the dead link
+        co = runner.agent.coalescer
+        assert co.envelopes_parked >= 1
+        assert co.unsent_count >= 1
+        runner.transport.reconnect()
+        assert client.get_batch_results(ids, timeout=30) == [None] * 4
+        assert wait_until(lambda: co.unsent_count == 0, timeout=10)
+        # exactly once: every id was retrieved once and then purged
+        for tid in ids:
+            with pytest.raises(KeyError):
+                svc.get_task(tid)
+    finally:
+        runner.stop()
+
+
+# -- streaming retrieval -----------------------------------------------------
+
+def test_as_completed_yields_in_completion_order(service, client):
+    slow = client.register_function(lambda d: time.sleep(0.5) or "slow")
+    fast = client.register_function(lambda d: "fast")
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=2)
+    tid_slow = client.run(slow, eid, data={})
+    tid_fast = client.run(fast, eid, data={})
+    got = list(client.as_completed([tid_slow, tid_fast], timeout=30))
+    assert [tid for tid, _ in got] == [tid_fast, tid_slow]
+    assert dict(got) == {tid_fast: "fast", tid_slow: "slow"}
+    agent.stop()
+
+
+def test_as_completed_times_out_on_pending_tasks(service, client):
+    fid = client.register_function(lambda d: d)
+    eid, _ch = service.register_endpoint(client.token, "dead")  # no agent
+    tid = client.run(fid, eid, data=1)
+    with pytest.raises(TimeoutError):
+        list(service.as_completed([tid], timeout=0.3))
+
+
+def test_wait_any_returns_done_subset(service, client):
+    fid = client.register_function(lambda d: d["i"])
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=2)
+    ids = client.batch_run([(fid, eid, {"i": i}) for i in range(3)])
+    done = set()
+    deadline = time.time() + 20
+    while len(done) < 3 and time.time() < deadline:
+        done.update(client.wait_any(list(set(ids) - done), timeout=5))
+    assert done == set(ids)
+    # nothing pending → a wait on an unknown/never-submitted id times out
+    assert service.wait_any(["no-such-task"], timeout=0.1) == []
+    agent.stop()
+
+
+# -- bulk TaskStore ops ------------------------------------------------------
+
+def _mk_tasks(n):
+    return [Task(function_id="f", endpoint_id="e", payload=None,
+                 container_type="python") for _ in range(n)]
+
+
+def test_batch_waiter_wakes_once_per_batch():
+    store = TaskStore()
+    tasks = _mk_tasks(6)
+    store.put_many(tasks)
+    ids = [t.task_id for t in tasks]
+    w = store.make_waiter(ids)
+    store.mark_done_many(ids[:3])
+    assert sorted(w.wait(1.0)) == sorted(ids[:3])
+    assert w.wait(0.05) == []                    # drained; no new events
+    store.mark_done_many(ids[3:])
+    assert sorted(w.wait(1.0)) == sorted(ids[3:])
+    store.close_waiter(w)
+    assert not store._watchers                   # registration fully gone
+
+
+def test_make_waiter_sees_already_done_tasks():
+    store = TaskStore()
+    tasks = _mk_tasks(2)
+    store.put_many(tasks)
+    ids = [t.task_id for t in tasks]
+    store.mark_done(ids[0])
+    w = store.make_waiter(ids)
+    assert w.wait(0.5) == [ids[0]]               # fired at registration
+    store.close_waiter(w)
+
+
+def test_mark_done_many_sets_per_task_events_too():
+    store = TaskStore()
+    tasks = _mk_tasks(2)
+    store.put_many(tasks)
+    store.mark_done_many([t.task_id for t in tasks])
+    assert store.wait(tasks[0].task_id, timeout=0.5)
+    assert store.wait(tasks[1].task_id, timeout=0.5)
+
+
+# -- harvest-then-raise ------------------------------------------------------
+
+def test_get_batch_results_failure_still_drains_store(service, client):
+    """A mid-list failure used to abandon the un-harvested tail in the
+    store under purge_on_get=True; now the whole batch is drained first
+    and the error raises after."""
+    def maybe_boom(data):
+        if data["i"] == 1:
+            raise ValueError("boom")
+        return data["i"]
+    fid = client.register_function(maybe_boom)
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=2)
+    ids = client.batch_run([(fid, eid, {"i": i}) for i in range(4)])
+    with pytest.raises(TaskFailure, match="boom"):
+        client.get_batch_results(ids, timeout=30)
+    for tid in ids:                  # every task purged, none leaked
+        with pytest.raises(KeyError):
+            service.get_task(tid)
+    assert len(service.tasks) == 0
+    agent.stop()
+
+
+# -- bounded endpoint state --------------------------------------------------
+
+def test_endpoint_dedup_state_is_bounded(service, client):
+    fid = client.register_function(lambda d: None, name="noop")
+    eid, agent = service.make_endpoint(
+        client.token, "ep", n_managers=1, workers_per_manager=4,
+        dedup_capacity=64)
+    ids = client.batch_run([(fid, eid, {}) for _ in range(200)])
+    assert client.get_batch_results(ids, timeout=60) == [None] * 200
+    assert len(agent._completed) <= 64           # LRU bound held
+    assert not agent._retries                    # popped on completion
+    assert wait_until(lambda: not agent._dispatched_at, timeout=5)
+    agent.stop()
+
+
+def test_dispatched_sweep_evicts_stale_entries(service, client):
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=1,
+                                       workers_per_manager=1)
+    agent.dispatched_ttl = 0.05
+    agent._dispatched_at["ghost"] = (time.perf_counter() - 1.0, None, "m0")
+    agent._completed.add("done-task")
+    agent._dispatched_at["done-task"] = (time.perf_counter(), None, "m0")
+    time.sleep(0.1)
+    agent._sweep_dispatched()
+    assert "ghost" not in agent._dispatched_at       # TTL eviction
+    assert "done-task" not in agent._dispatched_at   # completed eviction
+    agent.stop()
+
+
+# -- manager deferred placement ----------------------------------------------
+
+def test_manager_parks_unplaceable_items_without_inbox_churn(service,
+                                                             client):
+    """Prefetched items beyond worker capacity used to be re-cycled
+    through the whole inbox (O(n²) churn); they now park in the side
+    deque — every item enters the inbox exactly once."""
+    fid = client.register_function(lambda d: time.sleep(0.05), name="s50ms")
+    eid, agent = service.make_endpoint(
+        client.token, "ep", n_managers=1, workers_per_manager=2,
+        manager_kw={"prefetch": 8})
+    mgr = list(agent.managers.values())[0]
+    puts = []
+    orig_put = mgr.inbox.put
+
+    def counting_put(item):
+        puts.append(item.task_id)
+        orig_put(item)
+
+    mgr.inbox.put = counting_put
+    n = 16
+    ids = client.batch_run([(fid, eid, {}) for _ in range(n)])
+    assert client.get_batch_results(ids, timeout=60) == [None] * n
+    assert len(puts) == n                        # one inbox entry per item
+    assert mgr.deferrals > 0                     # parking actually happened
+    assert not mgr._deferred
+    agent.stop()

@@ -1,0 +1,92 @@
+"""Perf-regression smoke gate for the result plane (CI: bench-results).
+
+Compares a freshly produced benchmark artifact against the committed
+baseline (BENCH_5.json) with tolerance:
+
+- ``sec7.2.3/results_plane/throughput_tasks_per_s`` must be at least
+  ``--tolerance`` × baseline (throughput; higher is better). CI runners
+  vary wildly, so the default tolerance is loose — the gate catches
+  collapses (a reintroduced per-task lock convoy, a lost batching path),
+  not single-digit drift.
+- ``sec7.2.3/results_plane/envelopes_per_task`` must stay < 1.0 — the
+  absolute invariant of the batched return path (the pre-batch plane
+  paid ≥ 1 envelope per task). This bound is noise-immune: batching
+  either happens or it doesn't.
+
+Exit code 0 = pass, 1 = regression, 2 = malformed/missing artifacts.
+
+    python -m tools.bench_gate --baseline BENCH_5.json \
+        --fresh bench_fresh.json [--tolerance 0.4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SUITE = "sec7.2.3_results"
+THROUGHPUT = "sec7.2.3/results_plane/throughput_tasks_per_s"
+ENVELOPES = "sec7.2.3/results_plane/envelopes_per_task"
+
+
+def load_suite(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench-gate: cannot read {path}: {e}")
+        sys.exit(2)
+    suite = doc.get(SUITE)
+    if not isinstance(suite, dict):
+        print(f"bench-gate: {path} has no {SUITE!r} suite")
+        sys.exit(2)
+    return suite
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", default="BENCH_5.json",
+                   help="committed artifact to compare against")
+    p.add_argument("--fresh", required=True,
+                   help="artifact produced by this run")
+    p.add_argument("--tolerance", type=float, default=0.4,
+                   help="fresh throughput must be >= tolerance * baseline "
+                        "(default 0.4: catches collapses, tolerates "
+                        "shared-runner noise)")
+    args = p.parse_args()
+
+    base = load_suite(args.baseline)
+    fresh = load_suite(args.fresh)
+    failures = []
+
+    base_tp, fresh_tp = base.get(THROUGHPUT), fresh.get(THROUGHPUT)
+    if base_tp is None or fresh_tp is None:
+        print(f"bench-gate: {THROUGHPUT} missing "
+              f"(baseline={base_tp}, fresh={fresh_tp})")
+        return 2
+    floor = args.tolerance * base_tp
+    status = "ok" if fresh_tp >= floor else "REGRESSION"
+    print(f"bench-gate: throughput fresh={fresh_tp:.0f}/s "
+          f"baseline={base_tp:.0f}/s floor={floor:.0f}/s -> {status}")
+    if fresh_tp < floor:
+        failures.append(THROUGHPUT)
+
+    fresh_env = fresh.get(ENVELOPES)
+    if fresh_env is None:
+        print(f"bench-gate: {ENVELOPES} missing from fresh artifact")
+        return 2
+    status = "ok" if fresh_env < 1.0 else "REGRESSION"
+    print(f"bench-gate: envelopes/task fresh={fresh_env:.3f} "
+          f"(invariant: < 1.0) -> {status}")
+    if fresh_env >= 1.0:
+        failures.append(ENVELOPES)
+
+    if failures:
+        print(f"bench-gate: FAILED on {', '.join(failures)}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
