@@ -7,14 +7,17 @@
 #   make bench-serialization  §4.5 pack-once data plane benchmarks
 #   make bench-results        §7.2.3 batched result plane gauges
 #   make bench-results-gate   bench-results into a fresh artifact + compare
-#                             against the committed BENCH_5.json baseline
-#   make bench                full benchmark harness (writes BENCH_5.json)
+#                             against the committed BENCH_6.json baseline
+#   make bench-shm            DESIGN.md §7 same-host shm vs tcp comparison
+#   make bench-shm-gate       bench-shm (tiny) + gate: channels upgraded,
+#                             ring path not collapsed
+#   make bench                full benchmark harness (writes BENCH_6.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast lint bench-smoke bench-serialization \
-	bench-results bench-results-gate bench
+	bench-results bench-results-gate bench-shm bench-shm-gate bench
 
 test:
 	python -m pytest -x -q
@@ -37,8 +40,16 @@ bench-results:
 bench-results-gate:
 	python -m benchmarks.run --only sec7.2.3_results --tiny \
 		--artifact bench_fresh.json
-	python -m tools.bench_gate --baseline BENCH_5.json \
+	python -m tools.bench_gate --baseline BENCH_6.json \
 		--fresh bench_fresh.json
+
+bench-shm:
+	python -m benchmarks.run --only sec7_shm
+
+bench-shm-gate:
+	python -m benchmarks.run --only sec7_shm --tiny \
+		--artifact bench_fresh.json
+	python -m tools.bench_gate --shm --fresh bench_fresh.json
 
 bench:
 	python -m benchmarks.run

@@ -53,6 +53,21 @@ def run(n_tasks: int = 200, full: bool = False) -> None:
         emit("fig3/latency/result_envelopes_per_task",
              (agent.coalescer.result_envelopes - env0) / n_tasks,
              f"n={n_tasks} (idle line: exactly 1.0, immediate flush)")
+        # zero-copy gauge (DESIGN.md §7): payloads at/above SEGMENT_MIN
+        # ride the wire as borrowed frame segments — the fraction of
+        # payload bytes memcpy'd into an envelope must be 0.0 here.
+        from repro.core import WIRE_STATS
+        big = {"blob": b"\x00" * (1 << 20)}
+        client.get_result(client.run(fid, eid, data=big), timeout=30)
+        WIRE_STATS.reset()
+        n_big = 5
+        for _ in range(n_big):
+            client.get_result(client.run(fid, eid, data=big), timeout=30)
+        emb = WIRE_STATS.embedded_payload_bytes
+        seg = WIRE_STATS.segment_payload_bytes
+        emit("fig3/latency/copies_per_payload_byte", emb / max(emb + seg, 1),
+             f"1MiB payloads n={n_big}: embedded={emb}B segment={seg}B "
+             f"(segmented-path invariant: 0.0)")
         agent.stop()
     finally:
         svc.shutdown()

@@ -27,9 +27,11 @@ SUITES = {
                              "§4.5 pack-once data plane throughput"),
     "sec7.2.3_results": ("results_plane",
                          "§7.2.3 batched result plane (DESIGN.md §6)"),
+    "sec7_shm": ("shm_bench",
+                 "DESIGN.md §7 same-host shm vs tcp transport"),
 }
 
-ARTIFACT = "BENCH_5.json"          # seeded from BENCH_4.json (PR 4 run)
+ARTIFACT = "BENCH_6.json"          # seeded from BENCH_5.json (PR 5 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

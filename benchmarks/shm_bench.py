@@ -1,0 +1,33 @@
+"""DESIGN.md §7 — same-host transport comparison: the identical subprocess
+endpoint fleet over plain TcpTransport vs the auto-negotiated shared-memory
+ring pair. Same service, same task mix, back to back; emits the speedup and
+a binary shm-engaged gauge that ``tools/bench_gate.py --shm`` gates on.
+"""
+from __future__ import annotations
+
+from .common import emit
+from .scaling import subprocess_lane
+
+
+def run(full: bool = False, tiny: bool = False) -> None:
+    if tiny:
+        n_endpoints, per_ep, repeats = 2, 50, 3
+    elif full:
+        n_endpoints, per_ep, repeats = 4, 200, 3
+    else:
+        n_endpoints, per_ep, repeats = 4, 100, 3
+
+    tcp_rate, _, tcp_shm = subprocess_lane(
+        "subprocess_tcp", False, n_endpoints, per_ep, prefix="shm",
+        repeats=repeats)
+    shm_rate, _, n_shm = subprocess_lane(
+        "subprocess_shm", True, n_endpoints, per_ep, prefix="shm",
+        repeats=repeats)
+    emit("shm/speedup_vs_tcp", shm_rate / max(tcp_rate, 1e-9),
+         f"shm={shm_rate:.0f}/s tcp={tcp_rate:.0f}/s "
+         f"endpoints={n_endpoints}")
+    # binary engagement gauge (noise-immune, like envelopes_per_task):
+    # 1.0 = every shm-lane channel upgraded AND the tcp lane stayed tcp
+    engaged = 1.0 if (n_shm == n_endpoints and tcp_shm == 0) else 0.0
+    emit("shm/channels_upgraded", engaged,
+         f"shm_lane={n_shm}/{n_endpoints} tcp_lane={tcp_shm}/0 expected")

@@ -26,11 +26,16 @@ from .comms import (
     Channel,
     ChannelHub,
     LocalTransport,
+    SegmentedFrame,
+    ShmRing,
+    ShmTransport,
     SocketReactor,
     TcpListener,
     TcpTransport,
     Transport,
+    decode_frame,
     parse_hostport,
+    segment_parts,
 )
 from .endpoint import (
     EndpointAgent,
@@ -59,10 +64,13 @@ from .protocol import (
     RegisterAck,
     ResultBatch,
     ResultMsg,
+    ShmAttach,
     TaskBatch,
     TaskSpec,
+    WIRE_STATS,
     from_wire,
     to_wire,
+    to_wire_parts,
 )
 from .provisioning import (
     ElasticStrategy,
@@ -112,12 +120,16 @@ __all__ = [
     "RemoteEndpointRunner", "ResultBatch", "ResultCoalescer", "ResultMsg",
     "Router", "SCOPE_ENDPOINT",
     "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN", "SCOPE_TRANSFER",
+    "SegmentedFrame", "ShmAttach", "ShmRing", "ShmTransport",
     "SimCloudProvider", "SimSlurmProvider", "SocketReactor", "Task",
     "TaskBatch",
     "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus", "TaskStore",
-    "TcpListener", "TcpTransport", "Token", "Transport", "WarmCache",
+    "TcpListener", "TcpTransport", "Token", "Transport", "WIRE_STATS",
+    "WarmCache",
     "WarmingAwareEndpointRouter", "WarmingAwareRouter", "WireFunctionClient",
-    "WorkItem", "WorkResult", "Worker", "from_wire", "make_endpoint_router",
+    "WorkItem", "WorkResult", "Worker", "decode_frame", "from_wire",
+    "make_endpoint_router",
     "make_router", "parse_hostport", "proportional_allocation",
-    "split_arrays", "stack_arrays", "to_wire",
+    "segment_parts", "split_arrays", "stack_arrays", "to_wire",
+    "to_wire_parts",
 ]

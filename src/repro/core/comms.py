@@ -37,6 +37,16 @@ Return-path frame tags (DESIGN.md §6): the batched result plane ships
 ``ResultMsg`` frames keep ``"result"``); both are routing tags only — the
 frame body is still one opaque msgpack dict either way, so every
 transport carries the batched plane transparently.
+
+Scatter-gather frames + shared memory (DESIGN.md §7): a segmented frame
+is ``RPXS || u32 nseg || u32 len[nseg] || envelope || payload segments``
+— transports gather the pieces with vectored I/O (``sendmsg``) instead of
+joining them, the receiver re-slices them as borrowed memoryviews
+(:func:`decode_frame`), and :class:`LocalTransport` passes the part list
+through untouched. :class:`ShmTransport` moves the same byte stream
+through a pair of :class:`ShmRing` SPSC rings when service and endpoint
+share a host (negotiated at Register time), keeping TCP as the control
+channel and doorbell carrier.
 """
 from __future__ import annotations
 
@@ -46,8 +56,9 @@ import selectors
 import socket
 import struct
 import threading
-from time import monotonic as _monotonic
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import deque
+from time import monotonic as _monotonic, sleep as _sleep
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..serialization import (
     PackedBuffer,
@@ -65,9 +76,197 @@ TO_SERVICE = 1
 _LEN_PREFIX = struct.Struct(">I")          # frame = u32 length + buffer bytes
 MAX_FRAME = 64 * 1024 * 1024               # sanity bound; > payload limit
 
+_HAS_SENDMSG = hasattr(socket.socket, "sendmsg")
+_IOV_CAP = 512                             # stay far under IOV_MAX
+_DOORBELL = _LEN_PREFIX.pack(0)            # zero-length frame = shm doorbell
+
 
 class ChannelClosed(Exception):
     pass
+
+
+# -- segmented frame codec (DESIGN.md §7) -------------------------------------
+SEG_MAGIC = b"RPXS"
+_SEG_COUNT = struct.Struct(">4sI")         # magic + number of segments
+_U32 = struct.Struct(">I")
+
+
+def segment_parts(header, segments: Sequence) -> list:
+    """Frame-body pieces for a segmented envelope: a segment table, the
+    packed envelope (segment 0), then each borrowed payload buffer.
+    Nothing is joined here — transports gather the list with vectored
+    I/O, or pass it through untouched (LocalTransport)."""
+    lens = [len(header)]
+    lens.extend(len(s) for s in segments)
+    table = bytearray(_SEG_COUNT.size + 4 * len(lens))
+    _SEG_COUNT.pack_into(table, 0, SEG_MAGIC, len(lens))
+    off = _SEG_COUNT.size
+    for n in lens:
+        _U32.pack_into(table, off, n)
+        off += 4
+    return [bytes(table), header, *segments]
+
+
+class SegmentedFrame:
+    """Decoded view of a segmented frame: the envelope header (a packed
+    dict) plus the borrowed payload segments — zero-copy views into the
+    receive buffer, or the sender's own buffers over LocalTransport.
+    Quacks like a PackedBuffer where the routing layer cares (``tag``,
+    ``unpack()``)."""
+
+    __slots__ = ("header", "segments")
+
+    def __init__(self, header: PackedBuffer, segments: list):
+        self.header = header
+        self.segments = segments
+
+    @property
+    def tag(self) -> str:
+        return self.header.tag
+
+    def unpack(self):
+        """Envelope dict with the borrowed segments attached under the
+        reserved ``_segs`` key — ``protocol.from_wire`` resolves the
+        ``payload_seg`` / ``result_seg`` indices against it."""
+        env = self.header.unpack()
+        if isinstance(env, dict):
+            env["_segs"] = self.segments
+        return env
+
+
+def decode_frame(frame):
+    """Wire frame → :class:`PackedBuffer` (legacy single-envelope frame)
+    or :class:`SegmentedFrame`. Accepts bytes/bytearray/memoryview from
+    byte-stream transports, or the part list a LocalTransport passed
+    through. Raises SerializationError on a corrupt frame."""
+    if isinstance(frame, (tuple, list)):       # LocalTransport pass-through
+        if len(frame) < 2:
+            raise SerializationError("short segment part list")
+        return SegmentedFrame(PackedBuffer.from_bytes(frame[1]),
+                              list(frame[2:]))
+    view = frame if isinstance(frame, memoryview) else memoryview(frame)
+    if view[:4] != SEG_MAGIC:
+        return PackedBuffer.from_bytes(frame)
+    try:
+        _, nseg = _SEG_COUNT.unpack_from(view, 0)
+        off = _SEG_COUNT.size + 4 * nseg
+        if nseg < 1 or off > len(view):
+            raise SerializationError("bad segment count")
+        segs = []
+        for i in range(nseg):
+            (n,) = _U32.unpack_from(view, _SEG_COUNT.size + 4 * i)
+            segs.append(view[off:off + n])
+            off += n
+        if off != len(view):
+            raise SerializationError("segment table mismatch")
+    except struct.error as e:
+        raise SerializationError(f"corrupt segment frame: {e}") from e
+    return SegmentedFrame(PackedBuffer.from_bytes(segs[0]), segs[1:])
+
+
+class _FrameAssembler:
+    """Incremental u32-length-prefix frame parser shared by every
+    byte-stream path: reactor-fed sockets, the dialing reader, and the
+    shm ring drain. Small frames accumulate through a scratch buffer as
+    before; a body at or above ``DIRECT_MIN`` gets a dedicated pre-sized
+    bytearray that ``read_from`` fills with ``recv_into`` — one kernel
+    copy, no accumulate-then-slice double copy — and is delivered as a
+    read-only memoryview (zero-copy into segment decode).
+
+    A zero-length frame is the shm doorbell and is delivered as ``b""``.
+    Completed frames queue up in ``frames``.
+    """
+
+    DIRECT_MIN = 32 * 1024
+
+    def __init__(self, max_frame: int = MAX_FRAME):
+        self.max_frame = max_frame
+        self.frames: deque = deque()
+        self._scratch = memoryview(bytearray(65536))
+        self._rbuf = bytearray()
+        self._body: Optional[bytearray] = None   # large frame in progress
+        self._need = 0
+        self._pos = 0
+
+    def reset(self) -> None:
+        self._rbuf.clear()
+        self.frames.clear()
+        self._body = None
+        self._need = self._pos = 0
+
+    def read_from(self, sock: socket.socket) -> str:
+        """One recv into the right buffer. Returns ``"ok"`` / ``"eof"`` /
+        ``"poison"``; timeouts and EAGAIN propagate to the caller."""
+        if self._body is not None:
+            n = sock.recv_into(memoryview(self._body)[self._pos:])
+            if n == 0:
+                return "eof"
+            self._body_progress(n)
+            return "ok"
+        n = sock.recv_into(self._scratch)
+        if n == 0:
+            return "eof"
+        return "ok" if self.feed(self._scratch[:n]) else "poison"
+
+    def feed(self, chunk) -> bool:
+        """Parse an arbitrary byte chunk (ring drains, scratch reads).
+        False = poisoned stream (oversized frame): cut the link."""
+        view = chunk if isinstance(chunk, memoryview) else memoryview(chunk)
+        while view.nbytes:
+            if self._body is not None:
+                k = min(self._need - self._pos, view.nbytes)
+                self._body[self._pos:self._pos + k] = view[:k]
+                view = view[k:]
+                self._body_progress(k)
+                continue
+            self._rbuf += view
+            view = view[:0]
+            if not self._parse_rbuf():
+                return False
+        return True
+
+    def _body_progress(self, k: int) -> None:
+        self._pos += k
+        if self._pos == self._need:
+            body, self._body = self._body, None
+            self._need = self._pos = 0
+            self.frames.append(memoryview(body).toreadonly())
+
+    def _parse_rbuf(self) -> bool:
+        rb = self._rbuf
+        off = 0
+        while True:
+            avail = len(rb) - off
+            if avail < 4:
+                break
+            (n,) = _LEN_PREFIX.unpack_from(rb, off)
+            if n > self.max_frame:
+                if off:
+                    del rb[:off]
+                return False
+            if n == 0:                         # doorbell frame
+                self.frames.append(b"")
+                off += 4
+                continue
+            if n >= self.DIRECT_MIN:
+                # switch this body to a dedicated pre-sized buffer
+                body = bytearray(n)
+                k = min(avail - 4, n)
+                body[:k] = rb[off + 4:off + 4 + k]
+                del rb[:off + 4 + k]
+                off = 0
+                self._body, self._need, self._pos = body, n, 0
+                self._body_progress(k)
+                if self._body is not None:
+                    return True                # rest arrives via read_from
+                continue
+            if avail - 4 < n:
+                break
+            self.frames.append(bytes(rb[off + 4:off + 4 + n]))
+            off += 4 + n
+        if off:
+            del rb[:off]
+        return True
 
 
 class Transport:
@@ -84,6 +283,13 @@ class Transport:
 
     def send(self, lane: int, buf: bytes) -> bool:
         raise NotImplementedError
+
+    def send_parts(self, lane: int, parts: Sequence) -> bool:
+        """Send a multi-part segmented frame (segment table + envelope +
+        borrowed payload buffers) as ONE frame. Default joins the parts;
+        byte-stream transports override with vectored I/O and
+        LocalTransport passes the list through untouched."""
+        return self.send(lane, b"".join(parts))
 
     def recv(self, lane: int, timeout: float) -> Optional[bytes]:
         raise NotImplementedError
@@ -124,6 +330,16 @@ class LocalTransport(Transport):
 
     def send(self, lane: int, buf: bytes) -> bool:
         self._queues[lane].put(buf)
+        if lane == TO_SERVICE:
+            cb = self.on_receive
+            if cb is not None:
+                cb()
+        return True
+
+    def send_parts(self, lane: int, parts: Sequence) -> bool:
+        """Segmented envelope: the part list crosses the queue untouched
+        (no join, no copy) — ``decode_frame`` reads it directly."""
+        self._queues[lane].put(tuple(parts))
         if lane == TO_SERVICE:
             cb = self.on_receive
             if cb is not None:
@@ -307,9 +523,10 @@ class TcpTransport(Transport):
         self._max_frame = max_frame
         self.on_connect = on_connect
         self.on_receive = None
+        self.on_doorbell: Optional[Callable[[], None]] = None
 
         self._inbox: "queue.Queue[bytes]" = queue.Queue()
-        self._rbuf = bytearray()               # incremental frame parser
+        self._asm = _FrameAssembler(max_frame)   # incremental frame parser
         self._send_lock = threading.Lock()
         self._connected = threading.Event()
         self._suspended = threading.Event()    # disconnect(): no redial
@@ -372,23 +589,45 @@ class TcpTransport(Transport):
     SEND_STALL_TIMEOUT = 10.0
 
     # -- data plane -----------------------------------------------------------
-    def send(self, lane: int, buf: bytes) -> bool:
+    def send(self, lane: int, buf) -> bool:
+        return self._send_bufs((_LEN_PREFIX.pack(len(buf)), buf))
+
+    def send_parts(self, lane: int, parts: Sequence) -> bool:
+        """Vectored send: one length prefix covering the gathered parts,
+        then the parts themselves — ``sendmsg`` writes the whole iovec
+        without joining (zero copies of the borrowed payload segments)."""
+        total = 0
+        for p in parts:
+            total += len(p)
+        return self._send_bufs((_LEN_PREFIX.pack(total), *parts))
+
+    def send_doorbell(self) -> bool:
+        """Zero-length frame: wakes the peer's shm ring drain (DESIGN.md
+        §7). Rides the ordinary frame stream, so it sorts after every
+        frame already sent on this socket."""
+        return self._send_bufs((_DOORBELL,), count=False)
+
+    def _send_bufs(self, bufs: Sequence, count: bool = True) -> bool:
         sock = self._sock
         if sock is None or not self.connected:
             return False
-        data = memoryview(_LEN_PREFIX.pack(len(buf)) + buf)
+        iov = [b if isinstance(b, memoryview) else memoryview(b)
+               for b in bufs]
         try:
             with self._send_lock:
                 stall_deadline = None
-                while data:
+                i = 0
+                while i < len(iov):
                     try:
-                        n = sock.send(data)
+                        if _HAS_SENDMSG:
+                            n = sock.sendmsg(iov[i:i + _IOV_CAP])
+                        else:
+                            n = sock.send(iov[i])
                     except socket.timeout:
                         # no bytes accepted within the socket timeout —
                         # keep pushing while the link is alive and the
-                        # stall budget lasts (sendall would treat its
-                        # timeout as a *total* deadline and kill big
-                        # frames on slow links)
+                        # stall budget lasts (a *total* deadline would
+                        # kill big frames on slow links)
                         if self._stop.is_set() \
                                 or not self._connected.is_set():
                             raise OSError("link down mid-send")
@@ -398,9 +637,18 @@ class TcpTransport(Transport):
                         elif now >= stall_deadline:
                             raise OSError("peer stalled")
                         continue
-                    data = data[n:]
                     stall_deadline = None
-            self.frames_out += 1
+                    # resume across the iovec after a partial write
+                    while n:
+                        cur = iov[i]
+                        if n >= len(cur):
+                            n -= len(cur)
+                            i += 1
+                        else:
+                            iov[i] = cur[n:]
+                            n = 0
+            if count:
+                self.frames_out += 1
             return True
         except (OSError, ValueError):
             # a partially written frame poisons the stream — drop the
@@ -426,27 +674,30 @@ class TcpTransport(Transport):
     def queue(self, lane: int) -> "queue.Queue[bytes]":
         return self._inbox
 
-    # -- frame parsing (shared by both reader styles) -------------------------
-    def _feed(self, chunk: bytes) -> bool:
-        """Accumulate raw bytes; deliver every complete frame. Returns
-        False when the stream is poisoned (oversized frame) — cut the
-        link; a trailing partial frame just waits for more bytes and is
-        discarded if the connection dies first."""
-        self._rbuf += chunk
-        while len(self._rbuf) >= _LEN_PREFIX.size:
-            (n,) = _LEN_PREFIX.unpack_from(self._rbuf)
-            if n > self._max_frame:
-                return False
-            if len(self._rbuf) < _LEN_PREFIX.size + n:
-                break
-            frame = bytes(self._rbuf[_LEN_PREFIX.size:_LEN_PREFIX.size + n])
-            del self._rbuf[:_LEN_PREFIX.size + n]
-            self._inbox.put(frame)
-            self.frames_in += 1
-            cb = self.on_receive
-            if cb is not None:
-                cb()
-        return True
+    # -- frame delivery (shared by both reader styles + shm drain) ------------
+    def deliver(self, frame) -> None:
+        """Hand one inbound frame to the consumer side. The shm ring
+        drain shares this inbox, so Channel/hub cannot tell which medium
+        a frame crossed."""
+        self._inbox.put(frame)
+        self.frames_in += 1
+        cb = self.on_receive
+        if cb is not None:
+            cb()
+
+    def _deliver_frames(self) -> None:
+        """Flush every frame the assembler completed. Zero-length frames
+        are shm doorbells: they trigger the ring drain instead of
+        entering the inbox."""
+        frames = self._asm.frames
+        while frames:
+            frame = frames.popleft()
+            if len(frame) == 0:
+                cb = self.on_doorbell
+                if cb is not None:
+                    cb()
+                continue
+            self.deliver(frame)
 
     # -- reactor protocol (accepted side, shared selector thread) -------------
     def reactor_sock(self) -> Optional[socket.socket]:
@@ -459,16 +710,17 @@ class TcpTransport(Transport):
         if sock is None or self._stop.is_set():
             return False
         try:
-            chunk = sock.recv(65536)
+            status = self._asm.read_from(sock)
         except (BlockingIOError, InterruptedError, socket.timeout):
             return True
         except OSError:
             self._connected.clear()
             return False
-        if not chunk:                          # EOF (incl. our shutdown)
+        self._deliver_frames()
+        if status != "ok":                     # EOF (incl. our shutdown)
             self._connected.clear()
             return False
-        return self._feed(chunk)
+        return True
 
     def _reactor_closed(self, sock) -> None:
         self._connected.clear()
@@ -523,18 +775,314 @@ class TcpTransport(Transport):
         """Drain one connection. Only complete frames are delivered; a
         short read at EOF (mid-frame or mid-prefix) is discarded with the
         connection."""
-        self._rbuf.clear()
+        self._asm.reset()
         while not self._stop.is_set() and self._sock is sock:
             try:
-                chunk = sock.recv(65536)
+                status = self._asm.read_from(sock)
             except socket.timeout:
                 continue
             except (OSError, ValueError):
                 return
-            if not chunk:
-                return                   # EOF
-            if not self._feed(chunk):
-                return                   # garbage stream: cut the link
+            self._deliver_frames()
+            if status != "ok":
+                return                   # EOF or garbage: cut the link
+
+
+class ShmRing:
+    """SPSC byte ring over ``multiprocessing.shared_memory`` — the data
+    plane of the same-host fast path (DESIGN.md §7). The byte stream
+    inside is identical to the TCP stream (u32-length-prefixed frames),
+    so the reader reuses :class:`_FrameAssembler` unchanged, and frames
+    larger than the ring simply stream through in pieces.
+
+    Header: ``u32 head`` (total bytes written, mod 2^32) | ``u32 tail``
+    (total read) | ``u32 capacity`` | ``u32 reader-waiting``. Exactly one
+    writer process and one reader process; head/tail are monotonic, so
+    ``used == head - tail`` with no full/empty ambiguity (capacity is
+    well below 2^31).
+
+    Doorbell suppression: the reader sets ``waiting`` before going idle
+    and re-checks for data (closing the publish/sleep race); the writer
+    sends the TCP doorbell only when it observes ``waiting`` — a reader
+    that is keeping up costs the writer zero syscalls.
+    """
+
+    HDR = 16
+    _U32LE = struct.Struct("<I")
+
+    def __init__(self, shm, owner: bool):
+        self._shm = shm
+        self._buf = shm.buf
+        self._owner = owner
+        (self.capacity,) = self._U32LE.unpack_from(self._buf, 8)
+        self._data = self._buf[self.HDR:self.HDR + self.capacity]
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    @classmethod
+    def create(cls, capacity: int) -> "ShmRing":
+        from multiprocessing import shared_memory
+        shm = shared_memory.SharedMemory(create=True,
+                                         size=cls.HDR + capacity)
+        cls._U32LE.pack_into(shm.buf, 0, 0)               # head
+        cls._U32LE.pack_into(shm.buf, 4, 0)               # tail
+        cls._U32LE.pack_into(shm.buf, 8, capacity)
+        cls._U32LE.pack_into(shm.buf, 12, 1)              # reader "waiting"
+        return cls(shm, owner=True)
+
+    @classmethod
+    def attach(cls, name: str) -> "ShmRing":
+        from multiprocessing import shared_memory
+        shm = shared_memory.SharedMemory(name=name)
+        try:
+            # the attaching process must not unlink the segment at exit —
+            # the creating (service) side owns the lifetime
+            from multiprocessing import resource_tracker
+            resource_tracker.unregister(shm._name, "shared_memory")
+        except Exception:
+            pass
+        return cls(shm, owner=False)
+
+    # -- header words ---------------------------------------------------------
+    def _get(self, off: int) -> int:
+        (v,) = self._U32LE.unpack_from(self._buf, off)
+        return v
+
+    def _set(self, off: int, v: int) -> None:
+        self._U32LE.pack_into(self._buf, off, v & 0xFFFFFFFF)
+
+    def used(self) -> int:
+        return (self._get(0) - self._get(4)) & 0xFFFFFFFF
+
+    def waiting(self) -> bool:
+        return self._get(12) != 0
+
+    def set_waiting(self, flag: bool) -> None:
+        self._set(12, 1 if flag else 0)
+
+    # -- data plane -----------------------------------------------------------
+    def write_some(self, view: memoryview) -> int:
+        """Copy as much of ``view`` as currently fits (two-part copy on
+        wraparound), publish it, return bytes written."""
+        head, tail = self._get(0), self._get(4)
+        free = self.capacity - ((head - tail) & 0xFFFFFFFF)
+        k = min(free, view.nbytes)
+        if k <= 0:
+            return 0
+        pos = head % self.capacity
+        first = min(k, self.capacity - pos)
+        self._data[pos:pos + first] = view[:first]
+        if k > first:
+            self._data[:k - first] = view[first:k]
+        self._set(0, head + k)
+        return k
+
+    def read_some(self, sink) -> int:
+        """Feed every readable byte span to ``sink`` (≤ 2 calls on
+        wraparound), then advance tail. Returns bytes consumed."""
+        head, tail = self._get(0), self._get(4)
+        used = (head - tail) & 0xFFFFFFFF
+        if used == 0:
+            return 0
+        pos = tail % self.capacity
+        first = min(used, self.capacity - pos)
+        sink(self._data[pos:pos + first])
+        if used > first:
+            sink(self._data[:used - first])
+        self._set(4, tail + used)
+        return used
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        try:
+            self._data.release()
+        except Exception:
+            pass
+        try:
+            self._shm.close()
+        except (BufferError, OSError):
+            pass
+
+    def unlink(self) -> None:
+        try:
+            self._shm.unlink()
+        except (OSError, FileNotFoundError):
+            pass
+
+
+class ShmTransport(Transport):
+    """Same-host fast path: frames stream through a pair of SPSC
+    shared-memory rings while the TCP connection stays up as the control
+    channel and doorbell carrier. Wraps the live :class:`TcpTransport` —
+    inbox, readiness callbacks and connection state are shared, so the
+    stack above (Channel, hub, coalescer) cannot tell the difference,
+    except that per-frame socket syscalls are gone.
+
+    Ordering stays total despite two byte streams: each producer switches
+    to the ring exactly once (everything up to the ShmAttach confirm goes
+    over TCP, everything after through the ring), and doorbells ride the
+    same TCP stream — after any frame that preceded the switch. A
+    connection loss kills both media at once; in-ring frames are lost
+    exactly like in-flight TCP bytes and the requeue machinery recovers.
+    """
+
+    RING_STALL_TIMEOUT = 10.0
+
+    def __init__(self, tcp: TcpTransport, tx: ShmRing, rx: ShmRing,
+                 owns: Sequence[ShmRing] = ()):
+        self._tcp = tcp
+        self._tx = tx
+        self._rx = rx
+        self._owns = tuple(owns)
+        self._shm_send_lock = threading.Lock()
+        self._rx_lock = threading.Lock()
+        self._rx_asm = _FrameAssembler(tcp._max_frame)
+        self._closed = False
+        tcp.on_doorbell = self._drain_rx
+        # cover the install race: anything the peer wrote (and doorbelled)
+        # before the handler existed is sitting in the ring already
+        self._drain_rx()
+
+    # -- shared state / inbox (delegates to the wrapped TCP transport) --------
+    @property
+    def connected(self) -> bool:
+        return not self._closed and self._tcp.connected
+
+    @property
+    def on_receive(self):
+        return self._tcp.on_receive
+
+    @on_receive.setter
+    def on_receive(self, cb) -> None:
+        self._tcp.on_receive = cb
+
+    def recv(self, lane: int, timeout: float):
+        return self._tcp.recv(lane, timeout)
+
+    def recv_nowait(self, lane: int):
+        return self._tcp.recv_nowait(lane)
+
+    def pending(self, lane: int) -> int:
+        return self._tcp.pending(lane)
+
+    def queue(self, lane: int):
+        return self._tcp.queue(lane)
+
+    def disconnect(self) -> None:
+        self._tcp.disconnect()
+
+    def reconnect(self) -> None:
+        self._tcp.reconnect()
+
+    def close(self) -> None:
+        self._closed = True
+        self._tcp.close()
+        self.release_rings()
+
+    def release_rings(self) -> None:
+        """Unmap both rings (and unlink the ones this side owns — the
+        service side; the attaching side owns none)."""
+        self._closed = True
+        self._tcp.on_doorbell = None
+        for ring in (self._tx, self._rx):
+            ring.close()
+        for ring in self._owns:
+            ring.unlink()
+
+    def __getattr__(self, name):
+        # metrics/introspection (frames_in, dials, _reactor, ...) proxy
+        # to the wrapped transport; reached only for undefined names
+        if name.startswith("__"):
+            raise AttributeError(name)
+        return getattr(self._tcp, name)
+
+    # -- send: stream into the tx ring ----------------------------------------
+    def send(self, lane: int, buf) -> bool:
+        return self._send_frames((_LEN_PREFIX.pack(len(buf)), buf))
+
+    def send_parts(self, lane: int, parts: Sequence) -> bool:
+        total = 0
+        for p in parts:
+            total += len(p)
+        return self._send_frames((_LEN_PREFIX.pack(total), *parts))
+
+    def _send_frames(self, bufs: Sequence) -> bool:
+        if not self.connected:
+            return False
+        with self._shm_send_lock:
+            ok = self._write_stream(bufs)
+        if ok:
+            self._tcp.frames_out += 1
+        return ok
+
+    def _write_stream(self, bufs: Sequence) -> bool:
+        """Stream the frame into the ring in as many pieces as needed —
+        frames larger than the ring flow through as the reader drains.
+        A reader that accepts nothing for RING_STALL_TIMEOUT (dead or
+        wedged peer) fails the send; the link teardown recovers."""
+        ring = self._tx
+        stall_deadline = None
+        for b in bufs:
+            view = b if isinstance(b, memoryview) else memoryview(b)
+            while view.nbytes:
+                k = ring.write_some(view)
+                if k:
+                    view = view[k:]
+                    stall_deadline = None
+                    continue
+                if self._closed or not self._tcp.connected:
+                    return False
+                self._ring_doorbell()          # reader may be asleep
+                now = _monotonic()
+                if stall_deadline is None:
+                    stall_deadline = now + self.RING_STALL_TIMEOUT
+                elif now >= stall_deadline:
+                    return False
+                _sleep(0.0005)
+        # One doorbell per frame, after the whole frame is in the ring.
+        # Ringing per chunk wakes the reader on the 4-byte length prefix,
+        # which re-arms waiting on the incomplete frame and turns one
+        # frame into several doorbell syscalls + reader wakes.
+        self._ring_doorbell()
+        return True
+
+    def _ring_doorbell(self) -> None:
+        if self._tx.waiting():
+            self._tx.set_waiting(False)
+            self._tcp.send_doorbell()
+
+    # -- recv: drain the rx ring (runs on the TCP receive thread; the
+    # lock covers the brief install-time drain racing a first doorbell) --------
+    def _drain_rx(self) -> None:
+        with self._rx_lock:
+            self._drain_rx_locked()
+
+    def _drain_rx_locked(self) -> None:
+        rx = self._rx
+        asm = self._rx_asm
+        deliver = self._tcp.deliver
+        while not self._closed:
+            try:
+                n = rx.read_some(self._feed_rx)
+            except ValueError:
+                return                         # ring released under us
+            while asm.frames:
+                frame = asm.frames.popleft()
+                if len(frame):
+                    deliver(frame)
+            if n == 0:
+                rx.set_waiting(True)
+                if rx.used() == 0:
+                    return
+                rx.set_waiting(False)          # data raced in: go again
+
+    def _feed_rx(self, view) -> None:
+        if not self._rx_asm.feed(view):
+            # oversized/corrupt frame in the ring poisons the stream —
+            # kill the link, both sides fall back through re-register
+            self._tcp._drop_connection()
 
 
 class TcpListener:
@@ -619,6 +1167,7 @@ class Channel:
         self.drop_rate = drop_rate
         self._rng = random.Random(seed)
         self._hub: Optional[Tuple["ChannelHub", str]] = None
+        self._ready_armed = False          # a hub token is outstanding
         # traffic accounting
         self.bytes_to_endpoint = 0
         self.bytes_to_service = 0
@@ -648,9 +1197,12 @@ class Channel:
 
     def _frame_arrived(self) -> None:
         """Transport callback: a frame landed on the service side — push
-        the hub readiness token (same path for local and socket frames)."""
+        a hub readiness token (same path for local and socket frames)
+        unless one is already outstanding: ``poll`` drains the whole
+        queue per token, so a 32-frame burst costs one wakeup, not 32."""
         hub = self._hub
-        if hub is not None:
+        if hub is not None and not self._ready_armed:
+            self._ready_armed = True
             hub[0]._notify(hub[1])
 
     # Direct queue access, kept for fault-injection in tests (raw poison
@@ -673,6 +1225,19 @@ class Channel:
             return obj.data
         return pack_buffer(obj, tag=tag, method_hint="msgpack").data
 
+    @staticmethod
+    def _decode_wire(buf) -> Optional[tuple]:
+        """One inbound frame → ``(obj, tag)``. Handles legacy envelope
+        frames, segmented frames (the borrowed buffers come back attached
+        under ``_segs``), and LocalTransport part lists."""
+        try:
+            frame = decode_frame(buf)
+            if isinstance(frame, SegmentedFrame):
+                return frame.unpack(), frame.tag
+            return unpack(frame)
+        except SerializationError:
+            return None                        # poison frame: drop
+
     # -- service → endpoint -----------------------------------------------------
     def send_to_endpoint(self, obj: Any, tag: str = "") -> bool:
         if not self.connected or self._maybe_drop():
@@ -687,10 +1252,7 @@ class Channel:
         buf = self.transport.recv(TO_ENDPOINT, timeout)
         if buf is None:
             return None
-        try:
-            return unpack(buf)
-        except SerializationError:
-            return None                        # poison frame: drop
+        return self._decode_wire(buf)
 
     # -- endpoint → service -----------------------------------------------------
     def send_to_service(self, obj: Any, tag: str = "") -> bool:
@@ -706,13 +1268,40 @@ class Channel:
         buf = self.transport.recv(TO_SERVICE, timeout)
         if buf is None:
             return None
-        try:
-            return unpack(buf)
-        except SerializationError:
-            return None                        # poison frame: drop
+        return self._decode_wire(buf)
 
     def pending_to_service(self) -> int:
         return self.transport.pending(TO_SERVICE)
+
+    # -- segmented sends (scatter-gather zero-copy, DESIGN.md §7) ---------------
+    def _send_segmented(self, lane: int, env: dict, segments: list,
+                        tag: str) -> Tuple[bool, int]:
+        header = pack_buffer(env, tag=tag, method_hint="msgpack").data
+        if not segments:
+            # nothing borrowed: legacy single-envelope frame, byte-identical
+            # to the pre-segment wire format
+            return self.transport.send(lane, header), len(header)
+        parts = segment_parts(header, segments)
+        return (self.transport.send_parts(lane, parts),
+                sum(len(p) for p in parts))
+
+    def send_parts_to_endpoint(self, env: dict, segments: list,
+                               tag: str = "") -> bool:
+        if not self.connected or self._maybe_drop():
+            return False
+        ok, n = self._send_segmented(TO_ENDPOINT, env, segments, tag)
+        if ok:
+            self.bytes_to_endpoint += n
+        return ok
+
+    def send_parts_to_service(self, env: dict, segments: list,
+                              tag: str = "") -> bool:
+        if not self.connected or self._maybe_drop():
+            return False
+        ok, n = self._send_segmented(TO_SERVICE, env, segments, tag)
+        if ok:
+            self.bytes_to_service += n
+        return ok
 
 
 class ChannelHub:
@@ -741,10 +1330,11 @@ class ChannelHub:
         with self._lock:
             self._channels[key] = channel
         channel._hub = (self, key)
-        # Messages that arrived before registration (e.g. heartbeats queued
-        # while a ForwarderPool was being restarted) get their tokens now.
-        for _ in range(channel.pending_to_service()):
-            self._ready.put(key)
+        # One unconditional token covers anything that arrived before
+        # registration (e.g. heartbeats queued while a ForwarderPool was
+        # being restarted) — poll drains the whole queue per token.
+        channel._ready_armed = True
+        self._ready.put(key)
 
     def unregister(self, key: str) -> None:
         with self._lock:
@@ -759,14 +1349,19 @@ class ChannelHub:
     def _notify(self, key: str) -> None:
         self._ready.put(key)
 
-    def poll(self, timeout: float = 0.1) -> List[Tuple[str, PackedBuffer]]:
+    def poll(self, timeout: float = 0.1) -> List[Tuple[str, Any]]:
         """Block up to ``timeout`` for readiness, then drain everything
-        already ready. Returns ``[(key, PackedBuffer), ...]`` — messages
-        stay *packed*: the buffer's header tag is enough to route, and the
+        already ready. Returns ``[(key, frame), ...]`` where each frame
+        is a :class:`PackedBuffer` or :class:`SegmentedFrame` — messages
+        stay *packed*: the frame's header tag is enough to route, and the
         consumer decides when (whether) to deserialize (§4.5: "only the
         buffers need to be unpacked and deserialized at the destination").
+
+        Tokens are batched (one per channel per quiet period, not one per
+        frame): each token triggers a full drain of that channel's queue,
+        so a 32-frame result burst costs one queue wakeup.
         """
-        out: List[Tuple[str, PackedBuffer]] = []
+        out: List[Tuple[str, Any]] = []
         try:
             key = self._ready.get(timeout=timeout)
         except queue.Empty:
@@ -785,14 +1380,20 @@ class ChannelHub:
             ch = channels.get(key)
             if ch is None:
                 continue
-            buf = ch.transport.recv_nowait(TO_SERVICE)
-            if buf is None:
-                continue                       # duplicate/stale token
-            try:
-                out.append((key, PackedBuffer.from_bytes(buf)))
-            except SerializationError:
-                continue                       # poison frame: drop, don't
-                #                                kill the shared poller
+            # disarm BEFORE draining: a frame landing mid-drain re-arms
+            # and gets a fresh token (worst case a spare token, never a
+            # lost frame)
+            ch._ready_armed = False
+            transport = ch.transport
+            while True:
+                buf = transport.recv_nowait(TO_SERVICE)
+                if buf is None:
+                    break                      # drained (or stale token)
+                try:
+                    out.append((key, decode_frame(buf)))
+                except SerializationError:
+                    continue                   # poison frame: drop, don't
+                    #                            kill the shared poller
         return out
 
 

@@ -35,6 +35,7 @@ import argparse
 import collections
 import itertools
 import pickle
+import socket as _socket
 import threading
 import time
 from time import monotonic as _monotonic
@@ -48,7 +49,13 @@ from ..data import (
     stage_outputs,
 )
 from ..serialization import PackedBuffer, SerializationError, pack_buffer
-from .comms import Channel, TcpTransport, parse_hostport
+from .comms import (
+    Channel,
+    ShmRing,
+    ShmTransport,
+    TcpTransport,
+    parse_hostport,
+)
 from .errors import RegistrationError
 from .manager import Manager
 from .protocol import (
@@ -61,10 +68,12 @@ from .protocol import (
     RegisterAck,
     ResultBatch,
     ResultMsg,
+    ShmAttach,
     TaskBatch,
     TaskSpec,
     from_wire,
     to_wire,
+    to_wire_parts,
 )
 from .routing import Router, make_router
 from .tasks import now
@@ -156,7 +165,7 @@ class ResultCoalescer:
     stays exactly-once.
     """
 
-    def __init__(self, send: Callable[[dict], bool], *,
+    def __init__(self, send: Callable[[dict, list], bool], *,
                  batch_size: int = 32, linger: float = 0.002,
                  outstanding: Optional[Callable[[], int]] = None):
         self._send = send
@@ -174,7 +183,7 @@ class ResultCoalescer:
         self._acks: Deque[Ack] = collections.deque()
         self._kick = threading.Event()     # "pending work" signal
         self._flush_lock = threading.Lock()    # one drainer at a time
-        self._unsent: Deque[dict] = collections.deque()
+        self._unsent: Deque[Tuple[dict, list]] = collections.deque()
         self._stop = threading.Event()
         # gauges (result-plane acceptance: envelopes-per-task < 1 under load)
         self.envelopes_sent = 0            # envelopes the channel accepted
@@ -261,14 +270,17 @@ class ResultCoalescer:
                 acks.append(self._acks.popleft())
             if not results and not acks:
                 return
-            env = to_wire(ResultBatch(results=results, acks=acks))
-            if self._send(env):
+            # scatter-gather: large packed results ride behind the
+            # envelope as borrowed segments — no memcpy into it (§7)
+            env, segs = to_wire_parts(ResultBatch(results=results,
+                                                  acks=acks))
+            if self._send(env, segs):
                 self.envelopes_sent += 1
                 self.result_envelopes += 1 if results else 0
                 self.results_sent += len(results)
                 self.acks_sent += len(acks)
             else:
-                self._unsent.append(env)
+                self._unsent.append((env, segs))
                 self.envelopes_parked += 1
             n_env += 1
             if max_envelopes is not None and n_env >= max_envelopes:
@@ -284,8 +296,8 @@ class ResultCoalescer:
             return
         with self._flush_lock:
             while self._unsent:
-                env = self._unsent[0]
-                if not self._send(env):
+                env, segs = self._unsent[0]
+                if not self._send(env, segs):
                     return
                 self._unsent.popleft()
                 self.envelopes_sent += 1
@@ -370,6 +382,14 @@ class EndpointAgent:
         self.coalescer = ResultCoalescer(
             self._ship_envelope, batch_size=result_batch,
             linger=result_linger, outstanding=self._outstanding)
+
+        # Heartbeat merge cache: the 20 Hz loop re-merges the per-manager
+        # warm/load dicts only when some manager's state version moved —
+        # an idle or steady fleet costs one tuple compare per beat, not a
+        # full Manager.info() scan + dict merge.
+        self._hb_key: Optional[tuple] = None
+        self._hb_state: Tuple[int, int, int, Dict[str, int], Dict[str, int]] \
+            = (0, 0, 0, {}, {})
 
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -667,8 +687,9 @@ class EndpointAgent:
         retransmit racing a requeued re-execution stays exactly-once)."""
         self.coalescer.add_result(msg)
 
-    def _ship_envelope(self, env: dict) -> bool:
-        return self.channel.send_to_service(env, tag="results")
+    def _ship_envelope(self, env: dict, segments: list) -> bool:
+        return self.channel.send_parts_to_service(env, segments,
+                                                  tag="results")
 
     def _outstanding(self) -> int:
         """Results still expected imminently — the coalescer's linger
@@ -684,19 +705,26 @@ class EndpointAgent:
 
     def _heartbeat(self) -> Heartbeat:
         """Liveness + load/warm advertisement (consumed by the service's
-        federation-level EndpointRouter)."""
-        warm_idle: Dict[str, int] = {}
-        warm_total: Dict[str, int] = {}
-        capacity = idle = queued = 0
-        for m in self._alive_managers():
-            inf = m.info()
-            capacity += inf.capacity
-            idle += inf.idle_workers
-            queued += inf.queued
-            for t, n in inf.warm_idle.items():
-                warm_idle[t] = warm_idle.get(t, 0) + n
-            for t, n in inf.warm_total.items():
-                warm_total[t] = warm_total.get(t, 0) + n
+        federation-level EndpointRouter). The merged dicts are rebuilt
+        only when a manager's version stamp moved since the last beat."""
+        managers = self._alive_managers()
+        key = tuple((m.manager_id, m.version) for m in managers)
+        if key != self._hb_key:
+            warm_idle: Dict[str, int] = {}
+            warm_total: Dict[str, int] = {}
+            capacity = idle = queued = 0
+            for m in managers:
+                inf = m.info()
+                capacity += inf.capacity
+                idle += inf.idle_workers
+                queued += inf.queued
+                for t, n in inf.warm_idle.items():
+                    warm_idle[t] = warm_idle.get(t, 0) + n
+                for t, n in inf.warm_total.items():
+                    warm_total[t] = warm_total.get(t, 0) + n
+            self._hb_state = (capacity, idle, queued, warm_idle, warm_total)
+            self._hb_key = key
+        capacity, idle, queued, warm_idle, warm_total = self._hb_state
         with self._queue_lock:
             queued += len(self._queue)
         return Heartbeat(endpoint_id=self.endpoint_id, ts=time.time(),
@@ -807,7 +835,7 @@ def demo_sleep(data):
 def spawn_endpoint_process(address, token: str, *,
                            name: str = "remote-endpoint",
                            n_managers: int = 1, workers: int = 4,
-                           stderr=None):
+                           shm: bool = True, stderr=None):
     """Spawn ``python -m repro.core.endpoint`` as a child process and block
     until it prints its readiness line. Returns ``(proc, endpoint_id)``.
 
@@ -830,10 +858,13 @@ def spawn_endpoint_process(address, token: str, *,
     # can never fill a pipe buffer and wedge, and the capture is still
     # readable when the readiness line never appears
     capture = tempfile.TemporaryFile("w+") if stderr is None else None
+    argv = [sys.executable, "-m", "repro.core.endpoint",
+            "--connect", address, "--token", token, "--name", name,
+            "--managers", str(n_managers), "--workers", str(workers)]
+    if not shm:
+        argv.append("--no-shm")
     proc = subprocess.Popen(
-        [sys.executable, "-m", "repro.core.endpoint",
-         "--connect", address, "--token", token, "--name", name,
-         "--managers", str(n_managers), "--workers", str(workers)],
+        argv,
         env=env, stdout=subprocess.PIPE,
         stderr=capture if capture is not None else stderr, text=True)
     line = (proc.stdout.readline() or "").strip()
@@ -848,7 +879,7 @@ def spawn_endpoint_process(address, token: str, *,
             f"endpoint subprocess failed (got {line!r}): {err[-2000:]}")
     if capture is not None:
         capture.close()                # child keeps its own fd
-    return proc, line.split()[-1]
+    return proc, line.split()[1]
 
 
 class WireFunctionClient:
@@ -921,6 +952,7 @@ class RemoteEndpointRunner:
                  workers_per_manager: int = 4, router: str = "warming_aware",
                  heartbeat_interval: float = 0.05,
                  register_timeout: float = 30.0,
+                 shm: bool = True,
                  manager_kw: Optional[dict] = None, **agent_kw):
         self.address = (parse_hostport(address)
                         if isinstance(address, str) else address)
@@ -931,6 +963,8 @@ class RemoteEndpointRunner:
         self.router = router
         self.heartbeat_interval = heartbeat_interval
         self.register_timeout = register_timeout
+        self.shm = shm                 # advertise shared-memory support
+        self.shm_attached = False
         self.manager_kw = manager_kw or {}
         self.agent_kw = agent_kw
         self.endpoint_id: Optional[str] = None
@@ -977,7 +1011,8 @@ class RemoteEndpointRunner:
     # -- handshake ------------------------------------------------------------
     def _register_msg(self, endpoint_id: str = "") -> dict:
         return to_wire(Register(name=self.name, token=self._token,
-                                endpoint_id=endpoint_id))
+                                endpoint_id=endpoint_id,
+                                host=_socket.gethostname(), shm=self.shm))
 
     def _handshake(self) -> str:
         """First registration: the agent recv loop is not running yet, so
@@ -1000,10 +1035,66 @@ class RemoteEndpointRunner:
                 if not msg.ok:
                     raise RegistrationError(
                         f"registration refused: {msg.error}")
+                self.endpoint_id = msg.endpoint_id
+                self._maybe_attach_shm(msg)
                 return msg.endpoint_id
         raise RegistrationError(
             f"no RegisterAck from {self.address} "
             f"within {self.register_timeout}s")
+
+    # -- shared-memory fast path (DESIGN.md §7) -------------------------------
+    def _maybe_attach_shm(self, ack: RegisterAck) -> None:
+        """The RegisterAck carried a ring-pair offer: attach both segments,
+        confirm over TCP, then switch the channel onto the
+        :class:`ShmTransport`. Any failure sends a decline (so the service
+        unlinks the pending rings) and stays on plain TCP — graceful
+        fallback, never a wedge."""
+        offer = ack.shm
+        if not offer or self.channel is None:
+            return
+        decline = None
+        if not self.shm or self.shm_attached \
+                or isinstance(self.channel.transport, ShmTransport):
+            decline = "shm declined"
+        else:
+            try:
+                tx = ShmRing.attach(offer["e2s"])     # endpoint writes e2s
+            except Exception as e:
+                decline = f"{type(e).__name__}: {e}"
+            else:
+                try:
+                    rx = ShmRing.attach(offer["s2e"])  # ...and reads s2e
+                except Exception as e:
+                    tx.close()
+                    decline = f"{type(e).__name__}: {e}"
+        if decline is not None:
+            self.channel.send_to_service(to_wire(ShmAttach(
+                endpoint_id=self.endpoint_id or "", ok=False,
+                ring=offer.get("s2e", ""), error=decline)), tag="shm")
+            return
+        # confirm over TCP *before* switching: the service installs its
+        # side when the confirm arrives, and because doorbells ride the
+        # same TCP stream, every pre-switch frame sorts before the first
+        # ring frame on both sides
+        if not self.channel.send_to_service(to_wire(ShmAttach(
+                endpoint_id=self.endpoint_id or "", ok=True,
+                ring=offer["s2e"])), tag="shm"):
+            tx.close()
+            rx.close()
+            return
+        self.channel.transport = ShmTransport(self.transport, tx=tx, rx=rx)
+        self.shm_attached = True
+
+    def _teardown_shm(self) -> None:
+        """Drop back to the raw TCP transport (connection loss: the rings
+        die with the link — the service unlinked them when it saw the
+        drop; in-ring frames are recovered by requeue-on-disconnect)."""
+        ch = self.channel
+        tr = ch.transport if ch is not None else None
+        if isinstance(tr, ShmTransport):
+            ch.transport = self.transport
+            tr.release_rings()
+        self.shm_attached = False
 
     def _re_register(self) -> None:
         """TcpTransport.on_connect: runs on the reader thread right after
@@ -1011,6 +1102,7 @@ class RemoteEndpointRunner:
         if self.channel is None or self.endpoint_id is None:
             return
         self.re_registrations += 1
+        self._teardown_shm()           # rings died with the old connection
         self.channel.reconnect()
         self.channel.send_to_service(self._register_msg(self.endpoint_id),
                                      tag="register")
@@ -1018,12 +1110,16 @@ class RemoteEndpointRunner:
     def _handle_extra(self, msg: Any) -> None:
         if isinstance(msg, FnResponse) and self.fns is not None:
             self.fns.handle_response(msg)
-        elif isinstance(msg, RegisterAck) and not msg.ok:
-            # Re-registration refused (e.g. a fully restarted service no
-            # longer knows this endpoint id). Tasks already queued keep
-            # executing; the flag tells operators a fresh `start` (new
-            # registration, new id) is needed.
-            self.rejected = True
+        elif isinstance(msg, RegisterAck):
+            if msg.ok:
+                # ack for a re-registration: a fresh ring offer may ride it
+                self._maybe_attach_shm(msg)
+            else:
+                # Re-registration refused (e.g. a fully restarted service
+                # no longer knows this endpoint id). Tasks already queued
+                # keep executing; the flag tells operators a fresh `start`
+                # (new registration, new id) is needed.
+                self.rejected = True
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -1045,6 +1141,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--router", default="warming_aware")
     p.add_argument("--heartbeat", type=float, default=0.05,
                    help="heartbeat interval, seconds")
+    p.add_argument("--no-shm", action="store_true",
+                   help="stay on TCP even when the service offers a "
+                        "same-host shared-memory ring")
     args = p.parse_args(argv)
     token = args.token
     if token.startswith("@"):
@@ -1053,10 +1152,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     runner = RemoteEndpointRunner(
         args.connect, token, name=args.name, n_managers=args.managers,
         workers_per_manager=args.workers, router=args.router,
-        heartbeat_interval=args.heartbeat)
+        heartbeat_interval=args.heartbeat, shm=not args.no_shm)
     eid = runner.start()
     # parseable readiness line — parents wait on this before submitting
-    print(f"ENDPOINT_READY {eid}", flush=True)
+    # (field 2 is the endpoint id; the shm marker tells benches which
+    # transport actually engaged)
+    print(f"ENDPOINT_READY {eid} shm={1 if runner.shm_attached else 0}",
+          flush=True)
     try:
         while True:
             time.sleep(0.5)

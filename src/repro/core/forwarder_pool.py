@@ -29,10 +29,12 @@ from .protocol import (
     ProtocolError,
     ResultBatch,
     ResultMsg,
+    ShmAttach,
     TaskBatch,
     TaskSpec,
     from_wire,
     to_wire,
+    to_wire_parts,
 )
 from .routing import EndpointInfo
 from .tasks import TaskStatus, TaskStore, now
@@ -101,6 +103,8 @@ class ForwarderPool:
         batch_size: int = 32,
         heartbeat_timeout: float = 0.5,
         fn_resolver: Optional[Callable[[str], Tuple[bytes, bool]]] = None,
+        on_shm_attach: Optional[Callable[["EndpointLine", ShmAttach],
+                                         None]] = None,
     ):
         self.task_store = task_store
         self.batch_size = batch_size
@@ -109,6 +113,9 @@ class ForwarderPool:
         # from remote endpoints (same-process agents call the service's
         # export hook directly and never send one).
         self.fn_resolver = fn_resolver
+        # endpoint confirmed/refused a shared-memory ring attach: the
+        # service owns the rings, so the swap decision lives there
+        self.on_shm_attach = on_shm_attach
 
         self.hub = ChannelHub()
         self._lines: Dict[str, EndpointLine] = {}
@@ -256,8 +263,11 @@ class ForwarderPool:
                                   payload=task.payload))
         if not specs:
             return
-        ok = line.channel.send_to_endpoint(to_wire(TaskBatch(tasks=specs)),
-                                           tag="tasks")
+        # scatter-gather send: the envelope carries segment indices and the
+        # packed payload buffers ride behind it as borrowed views — no
+        # payload memcpy into the envelope (DESIGN.md §7)
+        env, segs = to_wire_parts(TaskBatch(tasks=specs))
+        ok = line.channel.send_parts_to_endpoint(env, segs, tag="tasks")
         with self._lock:
             if ok:
                 t = time.time()
@@ -300,6 +310,10 @@ class ForwarderPool:
                         line, ResultBatch(results=[msg]))
                 elif isinstance(msg, FnRequest):
                     self._handle_fn_request(line, msg)
+                elif isinstance(msg, ShmAttach):
+                    cb = self.on_shm_attach
+                    if cb is not None:
+                        cb(line, msg)
 
     def _handle_heartbeat(self, line: EndpointLine, hb: Heartbeat) -> None:
         line.last_heartbeat = time.time()

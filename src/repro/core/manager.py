@@ -7,10 +7,11 @@ arriving task mix.
 from __future__ import annotations
 
 import collections
+import itertools
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .routing import ManagerInfo
 from .tasks import now
@@ -99,6 +100,19 @@ class Manager:
                    idle_timeout=idle_timeout, slowdown=worker_slowdown)
             for i in range(n_workers)
         ]
+        # Incrementally maintained advertisement (ROADMAP hot-path note 2):
+        # the idle/warm scan runs only after a worker or warm-cache state
+        # transition dirtied it — assign/complete time, not once per
+        # dispatch cycle and heartbeat. ``version`` stamps every change so
+        # the agent's 20 Hz heartbeat merge can key its own cache on it.
+        self._info_dirty = True
+        self._info_cache: Optional[
+            Tuple[int, int, Dict[str, int], Dict[str, int]]] = None
+        self._vc = itertools.count(1)
+        self.version = next(self._vc)
+        for w in self.workers:
+            w.on_state_change = self._mark_dirty
+            w.cache.on_change = self._mark_dirty
         self.inbox: "queue.Queue[WorkItem]" = queue.Queue()
         # Items that could not be placed yet (all workers busy, or warm
         # affinity worth waiting for) park here instead of being cycled
@@ -142,23 +156,46 @@ class Manager:
 
     # -- capacity / advertising (paper: managers advertise container types
     # and available capacity) -----------------------------------------------------
+    def _mark_dirty(self) -> None:
+        """Worker idle/busy or warm-set transition: invalidate the cached
+        scan and move the version stamp (``next`` on an ``itertools.count``
+        is atomic under the GIL — concurrent transitions never lose a
+        bump, so a consumer keyed on ``version`` can never cache stale
+        state forever)."""
+        self._info_dirty = True
+        self.version = next(self._vc)
+
     def info(self) -> ManagerInfo:
-        warm_idle: Dict[str, int] = collections.Counter()
-        warm_total: Dict[str, int] = collections.Counter()
-        idle = 0
-        for w in self.workers:
-            types = w.warm_types()
-            for t in types:
-                warm_total[t] += 1
-            if w.idle:
-                idle += 1
+        """Advertisement snapshot. The worker scan (idle set + warm dicts)
+        is cached and rebuilt only when dirty; the queue-depth terms are
+        O(1) reads taken fresh every call. Returns a fresh ManagerInfo
+        with copied dicts — callers (dispatch loop, routers) mutate their
+        snapshots."""
+        cached = self._info_cache
+        if self._info_dirty or cached is None:
+            # clear *before* scanning: a transition racing the scan
+            # re-dirties and the next call rebuilds again
+            self._info_dirty = False
+            warm_idle: Dict[str, int] = collections.Counter()
+            warm_total: Dict[str, int] = collections.Counter()
+            idle = busy = 0
+            for w in self.workers:
+                types = w.warm_types()
                 for t in types:
-                    warm_idle[t] += 1
+                    warm_total[t] += 1
+                if w.idle:
+                    idle += 1
+                    for t in types:
+                        warm_idle[t] += 1
+                else:
+                    busy += 1
+            cached = (idle, busy, dict(warm_idle), dict(warm_total))
+            self._info_cache = cached
+        idle, busy, warm_idle, warm_total = cached
         return ManagerInfo(
             manager_id=self.manager_id,
             idle_workers=idle,
-            queued=self.inbox.qsize() + len(self._deferred)
-            + sum(1 for w in self.workers if not w.idle),
+            queued=self.inbox.qsize() + len(self._deferred) + busy,
             warm_idle=dict(warm_idle),
             warm_total=dict(warm_total),
             capacity=len(self.workers),

@@ -32,6 +32,17 @@ re-serialization) under the ``payload_b`` / ``result_b`` keys, and are
 re-wrapped as PackedBuffers on decode without touching the payload bytes.
 Plain objects keep the legacy inline embedding, so hand-built messages and
 endpoint-internal requeues are unaffected.
+
+Scatter-gather frames (DESIGN.md §7): even the msgpack bin embed is one
+forced memcpy per payload. When the caller passes a ``segments`` list to
+``to_wire`` (see :func:`to_wire_parts`), payloads at or above
+``SEGMENT_MIN`` bytes are **borrowed** instead of embedded: the envelope
+records only a segment index (``payload_seg`` / ``result_seg``) and the
+raw buffer rides as its own length-prefixed frame segment. Transports
+gather the segments with vectored I/O; the decoder re-attaches them from
+the reserved ``_segs`` envelope key without copying. Envelopes encoded
+without a segments list are byte-identical to the pre-segment wire
+format, so mixed-version peers interoperate.
 """
 from __future__ import annotations
 
@@ -40,9 +51,47 @@ from typing import Any, ClassVar, Dict, List, Optional, Tuple
 
 from ..serialization import PackedBuffer
 
+# Payloads below this embed inline (one small memcpy beats an extra iovec
+# entry plus a 4-byte segment-table slot); at or above it they ride as
+# borrowed zero-copy segments.
+SEGMENT_MIN = 1024
+
+
+class _WireStats:
+    """Process-wide gauge counters for the zero-copy claim: how many
+    PackedBuffer payload bytes were embedded into envelopes (one memcpy
+    each) vs borrowed as segments (zero copies). benchmarks/latency.py
+    derives ``copies_per_payload_byte`` from these."""
+
+    __slots__ = ("embedded_payload_bytes", "segment_payload_bytes")
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.embedded_payload_bytes = 0
+        self.segment_payload_bytes = 0
+
+
+WIRE_STATS = _WireStats()
+
 
 class ProtocolError(Exception):
     pass
+
+
+def _emit_payload(d: dict, key: str, data,
+                  segments: Optional[list]) -> None:
+    """Embed a packed payload inline (``key_b``) or borrow it as a frame
+    segment (``key_seg``) depending on size and whether the caller's
+    transport can gather segments at all."""
+    if segments is not None and len(data) >= SEGMENT_MIN:
+        d[key + "_seg"] = len(segments)
+        segments.append(data)
+        WIRE_STATS.segment_payload_bytes += len(data)
+    else:
+        d[key + "_b"] = data
+        WIRE_STATS.embedded_payload_bytes += len(data)
 
 
 @dataclass
@@ -57,20 +106,25 @@ class TaskSpec:
     # with its already-resolved function); never serialized.
     resolved: Optional[Tuple] = None
 
-    def to_dict(self) -> dict:
+    def to_dict(self, segments: Optional[list] = None) -> dict:
         d = {"task_id": self.task_id, "function_id": self.function_id,
              "container_type": self.container_type}
         if self.stamps:
             d["stamps"] = self.stamps
         if isinstance(self.payload, PackedBuffer):
-            d["payload_b"] = self.payload.data      # opaque frame, no re-pack
+            _emit_payload(d, "payload", self.payload.data, segments)
         elif self.payload is not None:
             d["payload"] = self.payload
         return d
 
     @classmethod
-    def from_dict(cls, d: dict) -> "TaskSpec":
+    def from_dict(cls, d: dict,
+                  segments: Optional[list] = None) -> "TaskSpec":
         pb = d.get("payload_b")
+        if pb is None and segments is not None:
+            seg = d.get("payload_seg")
+            if seg is not None:
+                pb = segments[seg]
         payload = (PackedBuffer.from_bytes(pb) if pb is not None
                    else d.get("payload"))
         return cls(task_id=d["task_id"], function_id=d["function_id"],
@@ -125,16 +179,18 @@ class ResultMsg:
     # at batch decode rates (set right after the class body below)
     _FIELDS: ClassVar[Tuple[str, ...]] = ()
 
-    def to_dict(self) -> dict:
+    def to_dict(self, segments: Optional[list] = None) -> dict:
         """Wire dict for this outcome — standalone envelope body and
         ``ResultBatch`` element share it. A packed result travels as an
-        opaque byte frame (``result_b``), same as ``TaskSpec.payload_b``.
+        opaque byte frame (``result_b``) or, when the caller gathers
+        segments and the value is large enough, as a borrowed zero-copy
+        segment (``result_seg``) — same scheme as ``TaskSpec.payload_b``.
         Default-valued fields are omitted (``from_dict`` restores the
         defaults): at 32 results per envelope, encoding five always-empty
         fields per result is real batch-path work."""
         d: Dict[str, Any] = {"task_id": self.task_id, "status": self.status}
         if isinstance(self.result, PackedBuffer):
-            d["result_b"] = self.result.data        # opaque frame, no re-pack
+            _emit_payload(d, "result", self.result.data, segments)
         elif self.result is not None:
             d["result"] = self.result
         if self.stamps:
@@ -154,10 +210,16 @@ class ResultMsg:
         return d
 
     @classmethod
-    def from_dict(cls, d: dict) -> "ResultMsg":
+    def from_dict(cls, d: dict,
+                  segments: Optional[list] = None) -> "ResultMsg":
         kwargs = {name: d[name] for name in cls._FIELDS if name in d}
-        if d.get("result_b") is not None:
-            kwargs["result"] = PackedBuffer.from_bytes(d["result_b"])
+        rb = d.get("result_b")
+        if rb is None and segments is not None:
+            seg = d.get("result_seg")
+            if seg is not None:
+                rb = segments[seg]
+        if rb is not None:
+            kwargs["result"] = PackedBuffer.from_bytes(rb)
         return cls(**kwargs)
 
 
@@ -186,18 +248,41 @@ class Register:
     (validated against the service's AuthService); a non-empty
     ``endpoint_id`` asks to re-attach to an existing registration after a
     connection loss — the service swaps the line's channel and requeues
-    whatever was in flight (requeue-on-disconnect semantics)."""
+    whatever was in flight (requeue-on-disconnect semantics).
+
+    ``host`` + ``shm`` advertise the shared-memory fast path (DESIGN.md
+    §7): when the service sees its own hostname and a loopback peer it
+    may offer a ring pair in the ack. Old peers ignore both fields."""
     kind: ClassVar[str] = "register"
     name: str = ""
     token: str = ""
     endpoint_id: str = ""
+    host: str = ""                     # endpoint's hostname (shm negotiation)
+    shm: bool = False                  # endpoint can attach shm rings
 
 
 @dataclass
 class RegisterAck:
+    """``shm``, when non-empty, is the service's shared-memory ring offer:
+    ``{"s2e": <ring name>, "e2s": <ring name>, "size": <capacity>}``. The
+    endpoint answers with :class:`ShmAttach` over TCP; until that lands
+    (or if attach fails) both sides keep talking plain TCP."""
     kind: ClassVar[str] = "register_ack"
     ok: bool = True
     endpoint_id: str = ""
+    error: str = ""
+    shm: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ShmAttach:
+    """Endpoint → service confirmation of a ring offer. ``ok=False`` (or
+    the service never hearing back before the line drops) releases the
+    rings and leaves the line on TCP — graceful fallback."""
+    kind: ClassVar[str] = "shm_attach"
+    endpoint_id: str = ""
+    ok: bool = False
+    ring: str = ""         # s2e segment name — ties the confirm to its offer
     error: str = ""
 
 
@@ -221,48 +306,67 @@ class FnResponse:
 Message = object                      # union of the classes below
 WIRE_TYPES = {cls.kind: cls for cls in (
     TaskBatch, Ack, Heartbeat, ResultMsg, ResultBatch,
-    Register, RegisterAck, FnRequest, FnResponse)}
+    Register, RegisterAck, ShmAttach, FnRequest, FnResponse)}
 
 
-def to_wire(msg) -> dict:
-    """Encode a protocol message to its wire dict (``{"type": kind, ...}``)."""
+def to_wire(msg, segments: Optional[list] = None) -> dict:
+    """Encode a protocol message to its wire dict (``{"type": kind, ...}``).
+
+    With ``segments`` (a list the caller owns), large packed payloads are
+    appended to it as borrowed buffers instead of being embedded — the
+    transport then gathers envelope + segments into one frame
+    (:func:`to_wire_parts` is the usual entry)."""
     kind = getattr(type(msg), "kind", None)
     if kind not in WIRE_TYPES:
         raise ProtocolError(f"not a protocol message: {type(msg).__name__}")
     env: Dict[str, Any] = {"type": kind}
     if isinstance(msg, TaskBatch):
-        env["tasks"] = [t.to_dict() for t in msg.tasks]
+        env["tasks"] = [t.to_dict(segments) for t in msg.tasks]
         return env
     if isinstance(msg, ResultBatch):
-        env["results"] = [r.to_dict() for r in msg.results]
+        env["results"] = [r.to_dict(segments) for r in msg.results]
         env["acks"] = [{"task_ids": a.task_ids,
                         "t_endpoint_recv": a.t_endpoint_recv}
                        for a in msg.acks]
         return env
     if isinstance(msg, ResultMsg):
-        env.update(msg.to_dict())
+        env.update(msg.to_dict(segments))
         return env
     for f in fields(msg):
         env[f.name] = getattr(msg, f.name)
     return env
 
 
+def to_wire_parts(msg) -> Tuple[dict, list]:
+    """Segment-gathering encode: returns ``(envelope, segments)`` for
+    ``Channel.send_parts_*``. ``segments`` is empty when every payload
+    embedded inline — the caller then sends a plain legacy frame."""
+    segments: list = []
+    env = to_wire(msg, segments)
+    return env, segments
+
+
 def from_wire(env: dict):
-    """Decode a wire dict back into its typed message."""
+    """Decode a wire dict back into its typed message. A segmented frame's
+    decoder attaches the borrowed payload buffers under the reserved
+    ``_segs`` key (see ``comms.SegmentedFrame.unpack``); legacy envelopes
+    simply lack it."""
     kind = env.get("type")
     cls = WIRE_TYPES.get(kind)
     if cls is None:
         raise ProtocolError(f"unknown wire type: {kind!r}")
+    segs = env.get("_segs")
     if cls is TaskBatch:
-        return TaskBatch(tasks=[TaskSpec.from_dict(t)
+        return TaskBatch(tasks=[TaskSpec.from_dict(t, segs)
                                 for t in env.get("tasks", [])])
     if cls is ResultBatch:
         return ResultBatch(
-            results=[ResultMsg.from_dict(r) for r in env.get("results", [])],
+            results=[ResultMsg.from_dict(r, segs)
+                     for r in env.get("results", [])],
             acks=[Ack(task_ids=list(a.get("task_ids", [])),
                       t_endpoint_recv=a.get("t_endpoint_recv", 0.0))
                   for a in env.get("acks", [])])
     if cls is ResultMsg:
-        return ResultMsg.from_dict(env)
+        return ResultMsg.from_dict(env, segs)
     kwargs = {f.name: env[f.name] for f in fields(cls) if f.name in env}
     return cls(**kwargs)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import pickle
 import inspect
+import socket as _socket
 import threading
 import time
 import uuid
@@ -42,7 +43,14 @@ from .auth import (
     SCOPE_RUN,
     Token,
 )
-from .comms import Channel, SocketReactor, TcpListener, TcpTransport
+from .comms import (
+    Channel,
+    ShmRing,
+    ShmTransport,
+    SocketReactor,
+    TcpListener,
+    TcpTransport,
+)
 from .endpoint import EndpointAgent
 from .errors import (
     AuthError,
@@ -57,6 +65,7 @@ from .protocol import (
     ProtocolError,
     Register,
     RegisterAck,
+    ShmAttach,
     from_wire,
     to_wire,
 )
@@ -120,7 +129,9 @@ class FuncXService:
                  purge_on_get: bool = True,
                  forwarder_batch: int = 32,
                  health_interval: float = 0.25,
-                 endpoint_router: "str | EndpointRouter" = "warming_aware"):
+                 endpoint_router: "str | EndpointRouter" = "warming_aware",
+                 shm: bool = True,
+                 shm_ring_size: int = 4 * 1024 * 1024):
         self.auth = AuthService()
         self.tasks = TaskStore()
         self.containers = ContainerRegistry()
@@ -135,9 +146,16 @@ class FuncXService:
         self.endpoint_router = (
             endpoint_router if isinstance(endpoint_router, EndpointRouter)
             else make_endpoint_router(endpoint_router))
+        self.shm = shm
+        self.shm_ring_size = shm_ring_size
+        # eid -> ((s2e, e2s) rings, tcp transport) offered in a RegisterAck
+        # and awaiting the endpoint's ShmAttach confirm (DESIGN.md §7)
+        self._pending_shm: Dict[str, Tuple[Tuple[ShmRing, ShmRing],
+                                           TcpTransport]] = {}
         self.pool = ForwarderPool(self.tasks, batch_size=forwarder_batch,
                                   heartbeat_timeout=heartbeat_timeout,
-                                  fn_resolver=self._export_function_wire)
+                                  fn_resolver=self._export_function_wire,
+                                  on_shm_attach=self._complete_shm)
         self.pool.start()
         self._listener: Optional[TcpListener] = None
         self._reactor: Optional[SocketReactor] = None
@@ -156,8 +174,14 @@ class FuncXService:
         self.stop_listening()
         self.pool.stop()
         with self._lock:
+            pending = list(self._pending_shm.values())
+            self._pending_shm.clear()
             for rec in self.endpoints.values():
                 rec.channel.close()
+        for rings, _transport in pending:
+            for ring in rings:
+                ring.close()
+                ring.unlink()
         if self._reactor is not None:
             self._reactor.close()
             self._reactor = None
@@ -332,8 +356,79 @@ class FuncXService:
         else:
             eid, _ = self.register_endpoint(token, msg.name or "remote",
                                             channel=channel)
+        shm_offer = self._offer_shm(eid, transport, msg)
         channel.send_to_endpoint(
-            to_wire(RegisterAck(ok=True, endpoint_id=eid)), tag="register")
+            to_wire(RegisterAck(ok=True, endpoint_id=eid, shm=shm_offer)),
+            tag="register")
+
+    # --------------------------------------------------- shm ring negotiation
+    def _offer_shm(self, eid: str, transport: TcpTransport,
+                   msg: Register) -> Dict[str, Any]:
+        """Same-host fast path (DESIGN.md §7): when a dialer advertises shm
+        support and its hostname matches ours, create an SPSC ring pair and
+        ship the segment names in the RegisterAck. The rings stay *pending*
+        until the endpoint confirms the attach with a ``ShmAttach`` over
+        TCP — anything short of that (attach failure, disconnect, a stale
+        offer superseded by a re-register) leaves the link on plain TCP and
+        the rings get unlinked."""
+        if not (self.shm and msg.shm and msg.host
+                and msg.host == _socket.gethostname()):
+            return {}
+        with self._lock:
+            prev = self._pending_shm.get(eid)
+        if prev is not None and prev[1] is transport:
+            # duplicate Register on the same connection (handshake resend):
+            # repeat the standing offer instead of minting fresh rings the
+            # dialer may already have attached
+            s2e, e2s = prev[0]
+            return {"s2e": s2e.name, "e2s": e2s.name,
+                    "size": self.shm_ring_size}
+        try:
+            s2e = ShmRing.create(self.shm_ring_size)
+        except Exception:
+            return {}
+        try:
+            e2s = ShmRing.create(self.shm_ring_size)
+        except Exception:
+            s2e.close()
+            s2e.unlink()
+            return {}
+        with self._lock:
+            stale = self._pending_shm.pop(eid, None)
+            self._pending_shm[eid] = ((s2e, e2s), transport)
+        if stale is not None:
+            for ring in stale[0]:
+                ring.close()
+                ring.unlink()
+        return {"s2e": s2e.name, "e2s": e2s.name,
+                "size": self.shm_ring_size}
+
+    def _complete_shm(self, line: EndpointLine, msg: ShmAttach) -> None:
+        """Pool recv-loop callback for the endpoint's ``ShmAttach``
+        confirm: swap the line's channel onto a :class:`ShmTransport`
+        wrapping the live TCP transport (which stays up as control channel
+        and doorbell carrier). Any mismatch — attach failed endpoint-side,
+        the connection was replaced since the offer — discards the rings
+        and keeps TCP."""
+        with self._lock:
+            pending = self._pending_shm.get(line.endpoint_id)
+            if pending is None:
+                return
+            if msg.ring and msg.ring != pending[0][0].name:
+                return             # stale confirm from a superseded offer
+            del self._pending_shm[line.endpoint_id]
+        (s2e, e2s), transport = pending
+        if (msg.ok and line.channel.transport is transport
+                and transport.connected):
+            try:
+                line.channel.transport = ShmTransport(
+                    transport, tx=s2e, rx=e2s, owns=(s2e, e2s))
+                return
+            except Exception:
+                pass
+        for ring in (s2e, e2s):
+            ring.close()
+            ring.unlink()
 
     # -------------------------------------------------------------- discovery
     # (the paper's §10 future work: "APIs that allow users to manage and
@@ -614,7 +709,8 @@ class FuncXService:
         old.stop()
         pool = ForwarderPool(self.tasks, batch_size=self.forwarder_batch,
                              heartbeat_timeout=self.heartbeat_timeout,
-                             fn_resolver=self._export_function_wire)
+                             fn_resolver=self._export_function_wire,
+                             on_shm_attach=self._complete_shm)
         with self._lock:
             for old_line in old.lines():
                 line = pool.register(old_line.endpoint_id, old_line.channel)

@@ -92,6 +92,13 @@ class WarmCache:
         self._warm: Dict[str, Container] = {}
         self._lock = threading.RLock()
         self.stats = WarmStats()
+        # warm-set membership change hook (Manager's incremental info())
+        self.on_change: Optional[Callable[[], None]] = None
+
+    def _notify(self) -> None:
+        cb = self.on_change
+        if cb is not None:
+            cb()
 
     # -- queries -------------------------------------------------------------
     def warm_types(self) -> List[str]:
@@ -126,6 +133,7 @@ class WarmCache:
             self._warm[container_type] = c
             self.stats.cold_starts += 1
             self.stats.build_time += build_time
+        self._notify()
         return c, True
 
     def _evict_one(self) -> None:
@@ -156,6 +164,8 @@ class WarmCache:
                         pass
                     self.stats.evictions += 1
                     n += 1
+        if n:
+            self._notify()
         return n
 
     def next_reap_deadline(self) -> Optional[float]:
@@ -173,7 +183,9 @@ class WarmCache:
 
     def drop(self, container_type: str) -> None:
         with self._lock:
-            self._warm.pop(container_type, None)
+            c = self._warm.pop(container_type, None)
+        if c is not None:
+            self._notify()
 
 
 def proportional_allocation(task_mix: Dict[str, int],

@@ -62,16 +62,27 @@ class Worker(threading.Thread):
         self.slowdown = slowdown          # straggler injection (tests)
         self.target_type: Optional[str] = None   # manager's proportional plan
         self.tasks_done = 0
+        # idle/busy transition hook — the owning Manager dirties its
+        # incrementally-maintained info() counters here instead of
+        # re-scanning every worker per advertisement tick
+        self.on_state_change: Optional[Callable[[], None]] = None
         self._stop = threading.Event()
         self._killed = False
+
+    def _notify(self) -> None:
+        cb = self.on_state_change
+        if cb is not None:
+            cb()
 
     # -- control ---------------------------------------------------------------
     def submit(self, item: WorkItem) -> None:
         self.busy.set()
         self.inbox.put(item)
+        self._notify()
 
     def prewarm(self, container_type: str) -> None:
         self.inbox.put((_WARMUP, container_type))
+        self._notify()
 
     def stop(self) -> None:
         self._stop.set()
@@ -105,7 +116,9 @@ class Worker(threading.Thread):
             except queue.Empty:
                 if not self.inbox.empty():
                     continue
-                self.busy.clear()
+                if self.busy.is_set():
+                    self.busy.clear()
+                    self._notify()
                 deadline = self.cache.next_reap_deadline()
                 if deadline is not None and time.perf_counter() >= deadline:
                     self.cache.reap()
@@ -116,10 +129,12 @@ class Worker(threading.Thread):
                 self.cache.get_or_build(item[1])
                 if self.inbox.empty():
                     self.busy.clear()
+                    self._notify()
                 continue
             self._execute(item)
             if self.inbox.empty():
                 self.busy.clear()
+                self._notify()
 
     def _execute(self, item: WorkItem) -> None:
         stamps = dict(item.stamps)

@@ -435,16 +435,21 @@ class PackedBuffer:
     @classmethod
     def from_bytes(cls, data: BufferLike) -> "PackedBuffer":
         """Wrap existing wire bytes; parses only the header (no payload
-        deserialization, no copy for bytes input)."""
+        deserialization). ``bytes`` input wraps as-is; ``bytearray`` /
+        ``memoryview`` input — recv buffers and borrowed frame segments on
+        the zero-copy path (DESIGN.md §7) — wraps as a read-only view,
+        still without copying the payload."""
         if isinstance(data, PackedBuffer):
             return data
-        if not isinstance(data, bytes):
+        if isinstance(data, (bytearray, memoryview)):
+            data = memoryview(data).toreadonly()
+        elif not isinstance(data, bytes):
             data = bytes(data)
         if data[:4] != MAGIC:
             raise SerializationError("bad magic")
         try:
             _, method_id, taglen = struct.unpack("<BBH", data[4:8])
-            tag = data[8:8 + taglen].decode()
+            tag = bytes(data[8:8 + taglen]).decode()
         except Exception as e:                 # truncated / mangled header
             raise SerializationError(f"corrupt header: {e}") from e
         if method_id >= len(_METHODS):
@@ -467,7 +472,8 @@ class PackedBuffer:
         return len(self.data)
 
     def to_bytes(self) -> bytes:
-        return self.data
+        d = self.data
+        return d if isinstance(d, bytes) else bytes(d)
 
     def __eq__(self, other) -> bool:
         if isinstance(other, PackedBuffer):
@@ -475,7 +481,10 @@ class PackedBuffer:
         return NotImplemented
 
     def __hash__(self) -> int:
-        return hash(self.data)
+        # memoryview-backed buffers (borrowed segments) aren't hashable
+        # views when the underlying buffer is writable — hash the bytes
+        d = self.data
+        return hash(d if isinstance(d, bytes) else bytes(d))
 
     def __repr__(self) -> str:
         return (f"PackedBuffer(tag={self.tag!r}, method={self.method!r}, "

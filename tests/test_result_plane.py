@@ -64,7 +64,7 @@ def test_coalescer_parks_refused_envelopes_and_retransmits():
     sent = []
     link_up = {"v": False}
 
-    def send(env):
+    def send(env, segments):
         if not link_up["v"]:
             return False
         sent.append(env)

@@ -1,0 +1,319 @@
+"""Scatter-gather zero-copy frames + shared-memory transport (DESIGN.md §7):
+segmented-vs-legacy envelope identity, borrowed (uncopied) payload segments,
+partial vectored send/recv, shm ring streaming, attach-failure TCP fallback,
+and endpoint crash with a ring attached (exactly-once preserved)."""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    Channel,
+    ShmRing,
+    ShmTransport,
+    TaskBatch,
+    TaskSpec,
+    TcpTransport,
+    WIRE_STATS,
+    decode_frame,
+    from_wire,
+    segment_parts,
+    to_wire,
+    to_wire_parts,
+)
+from repro.core.comms import (
+    TO_ENDPOINT, TO_SERVICE, _FrameAssembler, _LEN_PREFIX)
+from repro.core.endpoint import demo_sleep, demo_square
+from repro.core.protocol import SEGMENT_MIN
+from repro.serialization import PackedBuffer, pack_buffer
+from conftest import start_tcp_endpoint, wait_until
+
+
+def _spec(payload_obj, task_id="t0"):
+    return TaskSpec(task_id=task_id, function_id="f",
+                    container_type="python",
+                    payload=pack_buffer(payload_obj, tag="task"))
+
+
+# -- envelope encoding: segmented vs legacy -----------------------------------
+
+def test_small_payload_embeds_identical_to_legacy():
+    """Below SEGMENT_MIN nothing changes: to_wire_parts yields no
+    segments and an envelope byte-for-byte equal to the legacy encoder's
+    — mixed-version peers see exactly the old wire format."""
+    batch = TaskBatch(tasks=[_spec({"x": 1})])
+    legacy = to_wire(batch)
+    env, segs = to_wire_parts(batch)
+    assert segs == []
+    assert env == legacy
+    assert "payload_b" in env["tasks"][0]
+
+
+def test_large_payload_rides_as_borrowed_segment():
+    """At or above SEGMENT_MIN the packed payload is *borrowed* — the
+    segment list holds the PackedBuffer's own bytes object (no copy), and
+    the envelope carries only the segment index."""
+    buf = pack_buffer({"blob": b"x" * (4 * SEGMENT_MIN)}, tag="task")
+    spec = TaskSpec(task_id="t", function_id="f", container_type="python",
+                    payload=buf)
+    WIRE_STATS.reset()
+    env, segs = to_wire_parts(TaskBatch(tasks=[spec]))
+    assert len(segs) == 1
+    assert segs[0] is buf.data                 # borrowed, not copied
+    d = env["tasks"][0]
+    assert d.get("payload_seg") == 0 and "payload_b" not in d
+    assert WIRE_STATS.embedded_payload_bytes == 0
+    assert WIRE_STATS.segment_payload_bytes == len(buf.data)
+
+
+def test_segmented_byte_stream_decodes_identical_to_legacy():
+    """The same message, shipped segmented over a byte stream and shipped
+    legacy-embedded, decodes to identical task payload bytes."""
+    payload_obj = {"blob": b"y" * (2 * SEGMENT_MIN), "k": 3}
+    batch = TaskBatch(tasks=[_spec(payload_obj)])
+
+    # segmented path: envelope + borrowed segment, gathered into one body
+    env, segs = to_wire_parts(batch)
+    header = pack_buffer(env, tag="tasks", method_hint="msgpack")
+    parts = segment_parts(header.data, segs)
+    body = b"".join(bytes(p) for p in parts)
+    frame = decode_frame(body)
+    assert frame.tag == "tasks"
+    seg_msg = from_wire(frame.unpack())
+
+    # legacy path: everything embedded in one envelope
+    legacy_env = to_wire(batch)
+    legacy_frame = decode_frame(
+        pack_buffer(legacy_env, tag="tasks", method_hint="msgpack").data)
+    assert isinstance(legacy_frame, PackedBuffer)
+    leg_msg = from_wire(legacy_frame.unpack())
+
+    a, b = seg_msg.tasks[0], leg_msg.tasks[0]
+    assert bytes(a.payload.data) == bytes(b.payload.data)
+    assert a.payload.unpack() == payload_obj == b.payload.unpack()
+
+
+def test_mixed_version_legacy_envelope_still_decodes():
+    """An envelope from an old peer (always-embedded, no ``_segs``)
+    decodes on the new side unchanged — including large payloads."""
+    env = to_wire(TaskBatch(tasks=[_spec({"big": b"z" * (8 * SEGMENT_MIN)})]))
+    assert "payload_b" in env["tasks"][0]      # legacy embeds regardless
+    msg = from_wire(env)
+    assert msg.tasks[0].payload.unpack() == {"big": b"z" * (8 * SEGMENT_MIN)}
+
+
+def test_local_transport_passes_segment_list_untouched():
+    """LocalTransport never joins: the part list crosses the in-memory
+    queue as-is, and the decoder hands back the *sender's own* payload
+    buffer (zero copies end to end)."""
+    buf = pack_buffer({"blob": b"q" * (4 * SEGMENT_MIN)}, tag="task")
+    spec = TaskSpec(task_id="t", function_id="f", container_type="python",
+                    payload=buf)
+    env, segs = to_wire_parts(TaskBatch(tasks=[spec]))
+    ch = Channel()
+    assert ch.send_parts_to_endpoint(env, segs, tag="tasks")
+    raw = ch.transport.recv_nowait(TO_ENDPOINT)
+    frame = decode_frame(raw)
+    assert frame.segments[0] is buf.data       # same object, no copy
+    msg = from_wire(frame.unpack())
+    assert msg.tasks[0].payload.data is buf.data
+
+
+# -- frame assembly under partial reads ---------------------------------------
+
+def test_frame_assembler_single_byte_dribble():
+    """A stream of legacy frame + doorbell + segmented frame + a
+    direct-buffer-sized frame, fed one byte at a time, reassembles every
+    frame intact — partial recv never corrupts framing."""
+    legacy = b"legacy-frame-body"
+    hdr = pack_buffer({"h": 1}, tag="x").data
+    seg_body = b"".join(bytes(p) for p in segment_parts(
+        hdr, [b"a" * 2000, b"b" * 3000]))
+    big = bytes(range(256)) * ((_FrameAssembler.DIRECT_MIN // 256) + 1)
+    stream = (_LEN_PREFIX.pack(len(legacy)) + legacy
+              + _LEN_PREFIX.pack(0)                       # doorbell
+              + _LEN_PREFIX.pack(len(seg_body)) + seg_body
+              + _LEN_PREFIX.pack(len(big)) + big)
+    asm = _FrameAssembler()
+    for i in range(len(stream)):
+        assert asm.feed(stream[i:i + 1])
+    frames = list(asm.frames)
+    assert len(frames) == 4
+    assert bytes(frames[0]) == legacy
+    assert frames[1] == b""                               # doorbell marker
+    assert bytes(frames[2]) == seg_body
+    assert bytes(frames[3]) == big
+    # the segmented body decodes with its segments sliced back out
+    fr = decode_frame(frames[2])
+    assert fr.tag == "x" and fr.header.unpack() == {"h": 1}
+    assert [bytes(s) for s in fr.segments] == [b"a" * 2000, b"b" * 3000]
+
+
+def test_frame_assembler_rejects_oversized_frame():
+    asm = _FrameAssembler(max_frame=1024)
+    assert not asm.feed(_LEN_PREFIX.pack(4096))           # poisoned stream
+
+
+def test_vectored_send_survives_partial_writes():
+    """``send_parts`` over a real socket with a tiny send buffer and a
+    slow reader: sendmsg partial writes must resume mid-iovec, and the
+    bytes on the wire must equal prefix + joined parts exactly."""
+    a, b = socket.socketpair()
+    a.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 8192)
+    tr = TcpTransport(sock=a)
+    try:
+        parts = segment_parts(b"H" * 100,
+                              [b"\x5a" * 200_000, b"\x7e" * 300_000])
+        total = sum(len(p) for p in parts)
+        expect = _LEN_PREFIX.pack(total) + b"".join(bytes(p) for p in parts)
+        got = bytearray()
+
+        def reader():
+            while len(got) < len(expect):
+                chunk = b.recv(4096)
+                if not chunk:
+                    break
+                got.extend(chunk)
+                time.sleep(0.0002)             # keep the sender blocked
+        t = threading.Thread(target=reader, daemon=True)
+        t.start()
+        assert tr.send_parts(TO_SERVICE, parts)
+        t.join(timeout=30)
+        assert bytes(got) == expect
+    finally:
+        tr.close()
+        b.close()
+
+
+# -- shm ring -----------------------------------------------------------------
+
+def test_shm_ring_streams_frames_larger_than_capacity():
+    """The ring is a byte stream, not a mailbox: a frame bigger than the
+    ring flows through in pieces while the reader drains, wrapping the
+    circular buffer multiple times, and reassembles intact."""
+    ring = ShmRing.create(4096)
+    peer = ShmRing.attach(ring.name)
+    try:
+        frames = [b"\xab" * 10_000, b"tiny", b"\xcd" * 5_000]
+        stream = b"".join(_LEN_PREFIX.pack(len(f)) + f for f in frames)
+        asm = _FrameAssembler()
+
+        def reader():
+            while len(asm.frames) < len(frames):
+                if peer.read_some(lambda v: asm.feed(v)) == 0:
+                    time.sleep(0.0002)
+        t = threading.Thread(target=reader, daemon=True)
+        t.start()
+        view = memoryview(stream)
+        deadline = time.time() + 10
+        while view.nbytes and time.time() < deadline:
+            k = ring.write_some(view)
+            view = view[k:] if k else view
+            if not k:
+                time.sleep(0.0002)
+        t.join(timeout=10)
+        assert [bytes(f) for f in asm.frames] == frames
+    finally:
+        peer.close()
+        ring.close()
+        ring.unlink()
+
+
+# -- negotiation: upgrade, fallback, crash ------------------------------------
+
+def test_same_host_negotiation_upgrades_both_sides(tcp_service):
+    """A same-host dialer auto-negotiates the shm fast path at Register
+    time: both sides swap to ShmTransport and the full task round-trip —
+    including a >SEGMENT_MIN payload — runs through the rings."""
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address)
+    try:
+        assert wait_until(lambda: runner.shm_attached, timeout=5)
+        assert isinstance(runner.channel.transport, ShmTransport)
+        assert wait_until(lambda: isinstance(
+            svc.endpoints[runner.endpoint_id].channel.transport,
+            ShmTransport), timeout=5)
+        assert not svc._pending_shm            # offer confirmed + installed
+        fid = client.register_function(demo_square)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"x": i})
+                                for i in range(40)])
+        big = client.run(fid, runner.endpoint_id,
+                         data={"x": 2, "pad": b"p" * 100_000})
+        assert client.get_batch_results(ids, timeout=30) == \
+            [i * i for i in range(40)]
+        assert client.get_result(big, timeout=30) == 4
+    finally:
+        runner.stop()
+
+
+def test_shm_attach_failure_falls_back_to_tcp(tcp_service, monkeypatch):
+    """If the endpoint cannot map the offered rings (stale name, shm
+    exhausted...), it declines over TCP and keeps the socket: tasks still
+    complete, and the service reaps the unconfirmed rings."""
+    svc, client, address = tcp_service
+
+    def boom(name):
+        raise FileNotFoundError(f"no such segment: {name}")
+    monkeypatch.setattr(ShmRing, "attach", staticmethod(boom))
+    runner = start_tcp_endpoint(client, address)
+    try:
+        assert not runner.shm_attached
+        assert isinstance(runner.channel.transport, TcpTransport)
+        assert not isinstance(runner.channel.transport, ShmTransport)
+        fid = client.register_function(demo_square)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"x": i})
+                                for i in range(20)])
+        assert client.get_batch_results(ids, timeout=30) == \
+            [i * i for i in range(20)]
+        tr = svc.endpoints[runner.endpoint_id].channel.transport
+        assert not isinstance(tr, ShmTransport)
+        # the declined offer's rings were closed and unlinked
+        assert wait_until(lambda: not svc._pending_shm, timeout=5)
+    finally:
+        runner.stop()
+
+
+def test_endpoint_crash_with_ring_attached_exactly_once(tcp_service):
+    """Kill the link while a batch is mid-flight *through the rings*:
+    requeue + re-register recovers every task exactly once, the dead
+    rings are unlinked, and a fresh pair is negotiated."""
+    svc, client, address = tcp_service
+    runner = start_tcp_endpoint(client, address, workers_per_manager=4)
+    try:
+        assert wait_until(lambda: runner.shm_attached, timeout=5)
+        assert wait_until(lambda: isinstance(
+            svc.endpoints[runner.endpoint_id].channel.transport,
+            ShmTransport), timeout=5)
+        old = svc.endpoints[runner.endpoint_id].channel.transport
+        old_names = (old._tx.name, old._rx.name)
+        fid = client.register_function(demo_sleep)
+        ids = client.batch_run([(fid, runner.endpoint_id, {"s": 0.2})
+                                for _ in range(8)])
+        assert wait_until(lambda: runner.agent.tasks_received >= 1,
+                          timeout=10)
+        runner.channel.transport.disconnect()  # crash: both media die
+        runner.transport.reconnect()
+        assert client.get_batch_results(ids, timeout=60) == [None] * 8
+        assert runner.re_registrations >= 1
+        for tid in ids:                        # exactly once, then purged
+            with pytest.raises(KeyError):
+                svc.get_task(tid)
+        # a new ring pair was negotiated for the new connection...
+        assert wait_until(lambda: runner.shm_attached, timeout=10)
+        new = svc.endpoints[runner.endpoint_id].channel.transport
+        assert isinstance(new, ShmTransport)
+        assert (new._tx.name, new._rx.name) != old_names
+
+        # ...and the crashed pair's segments are gone from /dev/shm
+        def unlinked(name):
+            try:
+                r = ShmRing.attach(name)
+            except FileNotFoundError:
+                return True
+            r.close()
+            return False
+        assert wait_until(lambda: all(unlinked(n) for n in old_names),
+                          timeout=10)
+    finally:
+        runner.stop()

@@ -12,6 +12,7 @@ from repro.core import (
     ChannelHub,
     LocalTransport,
     RegistrationError,
+    ShmTransport,
     TcpListener,
     TcpTransport,
     parse_hostport,
@@ -146,7 +147,10 @@ def test_tcp_endpoint_thread_roundtrip(tcp_service):
         res = client.get_batch_results(ids, timeout=30)
         assert res == [i * i for i in range(40)]
         rec = svc.endpoints[runner.endpoint_id]
-        assert isinstance(rec.channel.transport, TcpTransport)
+        # same-host dialers auto-negotiate the shm fast path; either way
+        # a real socket (possibly ring-wrapped) carries the channel
+        assert isinstance(rec.channel.transport, (TcpTransport,
+                                                  ShmTransport))
     finally:
         runner.stop()
 
@@ -220,8 +224,10 @@ def test_subprocess_endpoint_200_task_roundtrip(tcp_service):
         ids = client.batch_run([(fid, eid, {"x": i}) for i in range(200)])
         res = client.get_batch_results(ids, timeout=60)
         assert res == [i * i for i in range(200)]
-        # the endpoint really is out-of-process, wired through a socket
-        assert isinstance(svc.endpoints[eid].channel.transport, TcpTransport)
+        # the endpoint really is out-of-process; same-host negotiation
+        # upgrades the socket channel to the shared-memory fast path
+        assert isinstance(svc.endpoints[eid].channel.transport,
+                          (TcpTransport, ShmTransport))
     finally:
         proc.terminate()
         try:

@@ -1,7 +1,7 @@
-"""Perf-regression smoke gate for the result plane (CI: bench-results).
+"""Perf-regression smoke gate (CI: bench-results, bench-shm).
 
 Compares a freshly produced benchmark artifact against the committed
-baseline (BENCH_5.json) with tolerance:
+baseline (BENCH_6.json) with tolerance:
 
 - ``sec7.2.3/results_plane/throughput_tasks_per_s`` must be at least
   ``--tolerance`` × baseline (throughput; higher is better). CI runners
@@ -13,10 +13,23 @@ baseline (BENCH_5.json) with tolerance:
   paid ≥ 1 envelope per task). This bound is noise-immune: batching
   either happens or it doesn't.
 
+With ``--shm`` it instead gates the same-host transport suite
+(``sec7_shm``, DESIGN.md §7):
+
+- ``shm/channels_upgraded`` must be exactly 1.0 — every endpoint in the
+  shm lane negotiated the ring pair and the tcp lane stayed on the
+  socket. Binary and noise-immune: negotiation works or it doesn't.
+- ``shm/speedup_vs_tcp`` must be at least ``--shm-floor`` (default 0.4:
+  a collapse detector for the ring path — a stall/retry storm, a lost
+  doorbell — not a parity gate; on loaded single-core runners shm vs
+  tcp jitters around 1× at smoke scale, and the real margin is recorded
+  in the committed artifact).
+
 Exit code 0 = pass, 1 = regression, 2 = malformed/missing artifacts.
 
-    python -m tools.bench_gate --baseline BENCH_5.json \
+    python -m tools.bench_gate --baseline BENCH_6.json \
         --fresh bench_fresh.json [--tolerance 0.4]
+    python -m tools.bench_gate --shm --fresh bench_fresh.json
 """
 from __future__ import annotations
 
@@ -28,24 +41,56 @@ SUITE = "sec7.2.3_results"
 THROUGHPUT = "sec7.2.3/results_plane/throughput_tasks_per_s"
 ENVELOPES = "sec7.2.3/results_plane/envelopes_per_task"
 
+SHM_SUITE = "sec7_shm"
+SHM_SPEEDUP = "shm/speedup_vs_tcp"
+SHM_UPGRADED = "shm/channels_upgraded"
 
-def load_suite(path: str) -> dict:
+
+def load_suite(path: str, suite_key: str = SUITE) -> dict:
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         print(f"bench-gate: cannot read {path}: {e}")
         sys.exit(2)
-    suite = doc.get(SUITE)
+    suite = doc.get(suite_key)
     if not isinstance(suite, dict):
-        print(f"bench-gate: {path} has no {SUITE!r} suite")
+        print(f"bench-gate: {path} has no {suite_key!r} suite")
         sys.exit(2)
     return suite
 
 
+def gate_shm(args) -> int:
+    fresh = load_suite(args.fresh, SHM_SUITE)
+    failures = []
+
+    upgraded = fresh.get(SHM_UPGRADED)
+    speedup = fresh.get(SHM_SPEEDUP)
+    if upgraded is None or speedup is None:
+        print(f"bench-gate: {SHM_UPGRADED} / {SHM_SPEEDUP} missing "
+              f"(got {upgraded}, {speedup})")
+        return 2
+    status = "ok" if upgraded == 1.0 else "REGRESSION"
+    print(f"bench-gate: shm channels upgraded={upgraded} "
+          f"(invariant: 1.0) -> {status}")
+    if upgraded != 1.0:
+        failures.append(SHM_UPGRADED)
+    status = "ok" if speedup >= args.shm_floor else "REGRESSION"
+    print(f"bench-gate: shm speedup vs tcp={speedup:.2f}x "
+          f"floor={args.shm_floor:.2f}x -> {status}")
+    if speedup < args.shm_floor:
+        failures.append(SHM_SPEEDUP)
+
+    if failures:
+        print(f"bench-gate: FAILED on {', '.join(failures)}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--baseline", default="BENCH_5.json",
+    p.add_argument("--baseline", default="BENCH_6.json",
                    help="committed artifact to compare against")
     p.add_argument("--fresh", required=True,
                    help="artifact produced by this run")
@@ -53,7 +98,17 @@ def main() -> int:
                    help="fresh throughput must be >= tolerance * baseline "
                         "(default 0.4: catches collapses, tolerates "
                         "shared-runner noise)")
+    p.add_argument("--shm", action="store_true",
+                   help="gate the sec7_shm same-host transport suite "
+                        "instead of the result plane")
+    p.add_argument("--shm-floor", type=float, default=0.4,
+                   help="fresh shm/speedup_vs_tcp must be >= this "
+                        "(default 0.4: catches a collapsed ring path, "
+                        "tolerates smoke-scale jitter around parity)")
     args = p.parse_args()
+
+    if args.shm:
+        return gate_shm(args)
 
     base = load_suite(args.baseline)
     fresh = load_suite(args.fresh)
