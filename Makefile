@@ -7,17 +7,22 @@
 #   make bench-serialization  §4.5 pack-once data plane benchmarks
 #   make bench-results        §7.2.3 batched result plane gauges
 #   make bench-results-gate   bench-results into a fresh artifact + compare
-#                             against the committed BENCH_6.json baseline
+#                             against the committed BENCH_7.json baseline
 #   make bench-shm            DESIGN.md §7 same-host shm vs tcp comparison
 #   make bench-shm-gate       bench-shm (tiny) + gate: channels upgraded,
 #                             ring path not collapsed
-#   make bench                full benchmark harness (writes BENCH_6.json)
+#   make bench-executor       DESIGN.md §8 futures-native submit coalescing
+#   make bench-executor-gate  bench-executor (tiny) + gate: storm envelope
+#                             ratio <= 1/8, no lone-submit linger, no
+#                             throughput collapse vs per-call
+#   make bench                full benchmark harness (writes BENCH_7.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast lint bench-smoke bench-serialization \
-	bench-results bench-results-gate bench-shm bench-shm-gate bench
+	bench-results bench-results-gate bench-shm bench-shm-gate \
+	bench-executor bench-executor-gate bench
 
 test:
 	python -m pytest -x -q
@@ -40,7 +45,7 @@ bench-results:
 bench-results-gate:
 	python -m benchmarks.run --only sec7.2.3_results --tiny \
 		--artifact bench_fresh.json
-	python -m tools.bench_gate --baseline BENCH_6.json \
+	python -m tools.bench_gate --baseline BENCH_7.json \
 		--fresh bench_fresh.json
 
 bench-shm:
@@ -50,6 +55,14 @@ bench-shm-gate:
 	python -m benchmarks.run --only sec7_shm --tiny \
 		--artifact bench_fresh.json
 	python -m tools.bench_gate --shm --fresh bench_fresh.json
+
+bench-executor:
+	python -m benchmarks.run --only sec5_executor
+
+bench-executor-gate:
+	python -m benchmarks.run --only sec5_executor --tiny \
+		--artifact bench_fresh.json
+	python -m tools.bench_gate --executor --fresh bench_fresh.json
 
 bench:
 	python -m benchmarks.run

@@ -1,0 +1,118 @@
+"""§5 + DESIGN.md §8 — the futures-native executor's submit plane,
+measured.
+
+Three gauges the acceptance gate watches:
+
+- ``submit_envelopes_per_task`` — per-endpoint submit groups landed on
+  the service per task under a 16-thread submit storm. Per-call
+  ``client.run`` pays exactly 1.0; the SubmitCoalescer amortizes toward
+  1/batch_size. Acceptance: ≤ 1/8.
+- ``speedup_vs_percall`` — storm throughput through the executor vs the
+  same 16 threads using funcX per-call (Listing 1 usage: each thread
+  blocks on ``get_result(run(...))`` one task at a time). Futures let a
+  caller thread keep 100 tasks in flight while the coalescer amortizes
+  their submission — the executor must win (committed target ≥ 1.2×).
+- ``lone_overhead_ratio`` — a single ``executor.submit(...).result()``
+  on an idle line vs a direct ``client.run``+``get_result``. The idle
+  line flushes inline on the caller's thread, so a lone submit must not
+  pay the linger — only the harvest-thread hop (< 2× bound; a linger
+  regression shows up as 3×+).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from .common import emit, make_bench_service
+
+
+def _noop(data):
+    return None
+
+
+def run(n_threads: int = 16, per_thread: int = 100, repeats: int = 5,
+        workers: int = 64, full: bool = False, tiny: bool = False) -> None:
+    if full:
+        per_thread, repeats = 300, 7
+    if tiny:
+        n_threads, per_thread, repeats = 8, 30, 2
+    svc, client = make_bench_service()
+    try:
+        fid = client.register_function(_noop, name="noop")
+        eid, agent = svc.make_endpoint(client.token, "ep", n_managers=4,
+                                       workers_per_manager=workers // 4)
+        n_tasks = n_threads * per_thread
+
+        def storm(worker):
+            """n_threads threads × per_thread tasks each; wall clock
+            until every result is back on its submitting thread."""
+            threads = [threading.Thread(target=worker,
+                                        args=(k * per_thread,))
+                       for k in range(n_threads)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            return time.perf_counter() - t0
+
+        # -- executor path: futures in flight, coalesced submit ----------
+        ex = client.executor(endpoint_id=eid)
+
+        def ex_worker(base):
+            futs = [ex.submit(fid, {"x": base + i})
+                    for i in range(per_thread)]
+            for f in futs:
+                f.result(timeout=60)
+
+        storm(ex_worker)                                        # warm
+        env0, sub0 = svc.submit_envelopes, svc.submitted
+        ex_rates = [n_tasks / storm(ex_worker) for _ in range(repeats)]
+        envelopes = svc.submit_envelopes - env0
+        tasks = svc.submitted - sub0
+        ex.shutdown(wait=True)
+
+        # -- baseline: funcX per-call usage (Listing 1) — each thread
+        # blocks on one run/get_result round trip per task ---------------
+        def pc_worker(base):
+            for i in range(per_thread):
+                client.get_result(client.run(fid, eid,
+                                             data={"x": base + i}),
+                                  timeout=30)
+
+        storm(pc_worker)                                        # warm
+        pc_rates = [n_tasks / storm(pc_worker) for _ in range(repeats)]
+
+        ex_tp, pc_tp = max(ex_rates), max(pc_rates)
+        emit("sec5/executor/tasks_per_s", ex_tp,
+             f"best of {repeats} storms of {n_threads}x{per_thread}; "
+             f"median={sorted(ex_rates)[len(ex_rates) // 2]:.0f}")
+        emit("sec5/executor/percall_tasks_per_s", pc_tp,
+             "same storm, per-call run+get_result round trip per task")
+        emit("sec5/executor/speedup_vs_percall", ex_tp / pc_tp,
+             "futures pipeline + coalesced submit vs per-call round trips")
+        emit("sec5/executor/submit_envelopes_per_task", envelopes / tasks,
+             f"n={tasks} (per-call: 1.0; acceptance <= 1/8 = 0.125)")
+
+        # -- lone submit: idle line must flush inline --------------------
+        n_lone = 30 if not tiny else 10
+        ex = client.executor(endpoint_id=eid)
+        ex.submit(fid, {"x": 0}).result(timeout=10)             # warm
+        t0 = time.perf_counter()
+        for i in range(n_lone):
+            ex.submit(fid, {"x": i}).result(timeout=10)
+        lone_ex = (time.perf_counter() - t0) / n_lone
+        ex.shutdown(wait=True)
+        t0 = time.perf_counter()
+        for i in range(n_lone):
+            client.get_result(client.run(fid, eid, data={"x": i}),
+                              timeout=10)
+        lone_pc = (time.perf_counter() - t0) / n_lone
+        emit("sec5/executor/lone_submit_roundtrip_us", lone_ex * 1e6,
+             f"n={n_lone} (idle line -> inline flush, no linger)")
+        emit("sec5/executor/lone_overhead_ratio", lone_ex / lone_pc,
+             f"vs client.run roundtrip {lone_pc * 1e6:.0f}us "
+             f"(harvest-thread hop only; linger would be 3x+)")
+        agent.stop()
+    finally:
+        svc.shutdown()

@@ -29,9 +29,12 @@ SUITES = {
                          "§7.2.3 batched result plane (DESIGN.md §6)"),
     "sec7_shm": ("shm_bench",
                  "DESIGN.md §7 same-host shm vs tcp transport"),
+    "sec5_executor": ("executor_bench",
+                      "§5 futures-native executor submit coalescing "
+                      "(DESIGN.md §8)"),
 }
 
-ARTIFACT = "BENCH_6.json"          # seeded from BENCH_5.json (PR 5 run)
+ARTIFACT = "BENCH_7.json"          # seeded from BENCH_6.json (PR 6 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

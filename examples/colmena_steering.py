@@ -36,9 +36,14 @@ def main():
     store = service.transfer.store_for(eid)
     rng = np.random.default_rng(0)
 
+    # the Thinker drives everything through one futures-native executor
+    # (DESIGN.md §8): submit by registered function id, harvest as the
+    # simulations land instead of blocking on a whole-batch wave
+    ex = client.executor(endpoint_id=eid)
+
     def run_batch(xs):
-        ids = client.batch_run([(sim_id, eid, {"x": x}) for x in xs])
-        outs = client.get_batch_results(ids, timeout=60)
+        futs = [ex.submit(sim_id, {"x": x}) for x in xs]
+        outs = [f.result(timeout=60) for f in futs]
         for i, o in enumerate(outs):
             store.set(f"results/{time.monotonic():.6f}/{i}", o)
         return outs
@@ -77,6 +82,9 @@ def main():
     print(f"(optimum ≈ 0.1 at x*=[0.7,-0.3]; steering should get closer)")
     print(f"store carried {store.stats.sets} result objects, "
           f"{store.stats.bytes_in/1e3:.0f} kB")
+    print(f"executor landed {ex.tasks_submitted} sims in "
+          f"{ex.coalescer.flushes} coalesced flushes")
+    ex.shutdown(wait=True)
     agent.stop()
     service.shutdown()
     # steering must improve on its own first (random) round

@@ -4,11 +4,15 @@
 
 WordCount over generated text: map tasks shuffle partial counts through the
 endpoint's store (Redis-analogue vs shared FS — Table 1's comparison),
-reduce tasks merge. All tasks flow through the full FaaS path.
+reduce tasks merge. All tasks flow through the full FaaS path, driven by
+the futures-native FuncXExecutor (DESIGN.md §8): the shuffle starts the
+moment each map *future* completes — no barrier waiting for the slowest
+mapper — and reduce results stream back the same way.
 """
 import argparse
 import tempfile
 import time
+from concurrent.futures import as_completed
 
 import numpy as np
 
@@ -51,8 +55,6 @@ def main():
     service = FuncXService()
     token = service.register_user("mr-user")
     client = FuncXClient(service, token)
-    mid = client.register_function(map_fn)
-    rid = client.register_function(reduce_fn)
     eid, agent = service.make_endpoint(token, "cluster", n_managers=2,
                                        workers_per_manager=4, store=store)
 
@@ -61,34 +63,40 @@ def main():
     texts = [" ".join(rng.choice(vocab, args.words_per_map))
              for _ in range(args.maps)]
 
-    t0 = time.perf_counter()
-    # map phase (batch submission)
-    map_ids = client.batch_run([
-        (mid, eid, {"text": t, "n_reducers": args.reducers})
-        for t in texts])
-    map_outs = client.get_batch_results(map_ids, timeout=120)
-    t_map = time.perf_counter() - t0
+    with client.executor(endpoint_id=eid) as ex:
+        t0 = time.perf_counter()
+        # map phase: one Future per mapper; the coalescer lands all of
+        # them as a couple of packed batches, not args.maps submit calls
+        map_futs = {ex.submit(map_fn, {"text": t,
+                                       "n_reducers": args.reducers}): m
+                    for m, t in enumerate(texts)}
+        # shuffle each mapper's parts through the endpoint store the
+        # moment its future resolves (Table 1's intermediate write)
+        t_shuffle = 0.0
+        for fut in as_completed(map_futs):
+            m = map_futs[fut]
+            ts = time.perf_counter()
+            for r, part in fut.result()["parts"].items():
+                store.set(f"shuffle/{m}/{r}", part)
+            t_shuffle += time.perf_counter() - ts
+        t_map = time.perf_counter() - t0
 
-    # shuffle via the endpoint store (intermediate write/read — Table 1)
-    t0 = time.perf_counter()
-    for m, out in enumerate(map_outs):
-        for r, part in out["parts"].items():
-            store.set(f"shuffle/{m}/{r}", part)
-    by_reducer = {r: [] for r in range(args.reducers)}
-    for r in range(args.reducers):
-        for m in range(args.maps):
-            if store.exists(f"shuffle/{m}/{r}"):
-                by_reducer[r].append(store.get(f"shuffle/{m}/{r}"))
-    t_shuffle = time.perf_counter() - t0
+        ts = time.perf_counter()
+        by_reducer = {r: [] for r in range(args.reducers)}
+        for r in range(args.reducers):
+            for m in range(args.maps):
+                if store.exists(f"shuffle/{m}/{r}"):
+                    by_reducer[r].append(store.get(f"shuffle/{m}/{r}"))
+        t_shuffle += time.perf_counter() - ts
 
-    t0 = time.perf_counter()
-    red_ids = client.batch_run([
-        (rid, eid, {"parts": parts}) for parts in by_reducer.values()])
-    red_outs = client.get_batch_results(red_ids, timeout=120)
-    t_red = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        red_outs = ex.map(reduce_fn, [{"parts": parts}
+                                      for parts in by_reducer.values()])
+        t_red = time.perf_counter() - t0
 
     unique = sum(o["unique"] for o in red_outs)
-    print(f"store={args.store}: map {t_map:.2f}s  shuffle {t_shuffle:.3f}s  "
+    print(f"store={args.store}: map+shuffle {t_map:.2f}s "
+          f"(shuffle {t_shuffle:.3f}s)  "
           f"reduce {t_red:.2f}s  unique_words={unique}")
     print(f"store stats: {store.stats.as_dict()}")
     agent.stop()

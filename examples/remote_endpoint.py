@@ -10,13 +10,17 @@ The service opens a TCP listener; each endpoint agent is spawned as
 
 registers over the wire (Register/RegisterAck handshake), pulls function
 bodies on demand (FnRequest/FnResponse), executes with its local
-managers/workers, and streams results back over the same socket. Midway
-through, the demo kills one endpoint's connection to show the
-requeue-on-disconnect + re-dial + re-register recovery path.
+managers/workers, and streams results back over the same socket. The
+client side drives it all through the futures-native FuncXExecutor
+(DESIGN.md §8) and harvests in completion order. Midway through, the
+demo kills one endpoint's connection to show the requeue-on-disconnect +
+re-dial + re-register recovery path — futures for the orphaned tasks
+resolve once the endpoint recovers.
 """
 import argparse
 import tempfile
 import time
+from concurrent.futures import as_completed
 
 from repro.core import FuncXClient, FuncXService
 from repro.core.endpoint import demo_square, spawn_endpoint_process
@@ -51,24 +55,33 @@ def main():
                 print(f"endpoint {i}: pid={proc.pid} id={eid[:8]}…")
 
             fid = client.register_function(demo_square)
-            t0 = time.perf_counter()
-            ids = client.batch_run([(fid, eids[i % len(eids)], {"x": i})
-                                    for i in range(args.tasks)])
-            res = client.get_batch_results(ids, timeout=120)
-            dt = time.perf_counter() - t0
-            assert res == [i * i for i in range(args.tasks)]
-            print(f"{args.tasks} tasks across {args.endpoints} processes "
-                  f"in {dt:.2f}s ({args.tasks / dt:.0f} tasks/s)")
+            with client.executor() as ex:
+                t0 = time.perf_counter()
+                futs = [ex.submit(fid, {"x": i},
+                                  endpoint_id=eids[i % len(eids)])
+                        for i in range(args.tasks)]
+                res = [f.result(timeout=120) for f in futs]
+                dt = time.perf_counter() - t0
+                assert res == [i * i for i in range(args.tasks)]
+                print(f"{args.tasks} tasks across {args.endpoints} "
+                      f"processes in {dt:.2f}s "
+                      f"({args.tasks / dt:.0f} tasks/s)")
 
-            # fault demo: cut endpoint 0's socket mid-batch
-            rec = service.endpoints[eids[0]]
-            ids = client.batch_run([(fid, eids[0], {"x": i})
-                                    for i in range(10)])
-            rec.channel.transport.disconnect()      # service-side cut
-            print("cut endpoint 0's connection mid-batch…")
-            res = client.get_batch_results(ids, timeout=120)
-            assert res == [i * i for i in range(10)]
-            print("…re-dial + re-register + requeue recovered every task")
+                # fault demo: cut endpoint 0's socket mid-batch; the
+                # futures stay pending until recovery re-runs the tasks
+                rec = service.endpoints[eids[0]]
+                futs = [ex.submit(fid, {"x": i}, endpoint_id=eids[0])
+                        for i in range(10)]
+                rec.channel.transport.disconnect()  # service-side cut
+                print("cut endpoint 0's connection mid-batch…")
+                n_done = 0
+                for fut in as_completed(futs, timeout=120):
+                    fut.result()
+                    n_done += 1
+                assert sorted(f.result() for f in futs) == \
+                    sorted(i * i for i in range(10))
+                print(f"…re-dial + re-register + requeue recovered all "
+                      f"{n_done} tasks")
         finally:
             for proc in procs:
                 proc.terminate()

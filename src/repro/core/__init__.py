@@ -20,7 +20,12 @@ from .auth import (
     SCOPE_TRANSFER,
     Token,
 )
-from .batching import DynamicBatcher, split_arrays, stack_arrays
+from .batching import (
+    DynamicBatcher,
+    SubmitCoalescer,
+    split_arrays,
+    stack_arrays,
+)
 from .client import FuncXClient
 from .comms import (
     Channel,
@@ -52,6 +57,7 @@ from .errors import (
     TaskFailure,
     TaskLost,
 )
+from .executor import FuncXExecutor
 from .forwarder_pool import EndpointLine, ForwarderPool
 from .manager import Manager
 from .protocol import (
@@ -112,6 +118,7 @@ __all__ = [
     "DynamicBatcher", "ElasticStrategy", "EndpointAgent", "EndpointInfo",
     "EndpointLine", "EndpointRouter", "EndpointUnavailable", "FnRequest",
     "FnResponse", "ForwarderPool", "FuncXClient", "FuncXError",
+    "FuncXExecutor",
     "FuncXService", "Heartbeat", "LeastLoadedEndpointRouter",
     "LocalProvider", "LocalTransport", "LocalityAwareRouter", "Manager",
     "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge", "ProtocolError",
@@ -121,7 +128,8 @@ __all__ = [
     "Router", "SCOPE_ENDPOINT",
     "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN", "SCOPE_TRANSFER",
     "SegmentedFrame", "ShmAttach", "ShmRing", "ShmTransport",
-    "SimCloudProvider", "SimSlurmProvider", "SocketReactor", "Task",
+    "SimCloudProvider", "SimSlurmProvider", "SocketReactor",
+    "SubmitCoalescer", "Task",
     "TaskBatch",
     "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus", "TaskStore",
     "TcpListener", "TcpTransport", "Token", "Transport", "WIRE_STATS",

@@ -20,6 +20,8 @@ from typing import (
 from ..serialization import PackedBuffer, pack_buffer
 from .auth import Token
 from .batching import DynamicBatcher
+from .errors import TaskFailure, TaskLost
+from .executor import FuncXExecutor
 from .service import FuncXService
 from .tasks import Task, TaskStatus
 
@@ -70,11 +72,50 @@ class FuncXClient:
         """User-facing batching (§4.6); ``None`` endpoints are routed."""
         return self.service.submit_batch(self.token, requests)
 
+    def submit_packed_batch(
+            self, entries: Sequence[Tuple[str, Optional[str], Any,
+                                          Optional[str]]]) -> List[str]:
+        """Land one pre-grouped flush of ``(function_id, endpoint_id,
+        payload, container_type)`` entries — the coalesced-submit entry
+        the executor's flusher uses (DESIGN.md §8)."""
+        return self.service.submit_packed_batch(self.token, entries)
+
+    def executor(self, *, endpoint_id: Optional[str] = None,
+                 container_type: Optional[str] = None,
+                 batch_size: int = 32,
+                 linger: float = 0.002) -> FuncXExecutor:
+        """A ``concurrent.futures``-style :class:`FuncXExecutor` over this
+        client: real Futures, client-side submit coalescing, harvest off
+        the batched result plane (DESIGN.md §8)."""
+        return FuncXExecutor(self, endpoint_id=endpoint_id,
+                             container_type=container_type,
+                             batch_size=batch_size, linger=linger)
+
     def map(self, function_id: str, endpoint_id: Optional[str],
             payloads: Sequence[Any], timeout: float = 60.0) -> List[Any]:
+        """Batch-submit one task per payload; results in **input order**.
+
+        Harvests by streaming off ``as_completed`` (one waiter
+        registration, each result retrieved — and purged — the moment it
+        lands) instead of a single ``get_batch_results`` wave, so peak
+        result retention is what's un-harvested, not the whole batch.
+        Failures keep the harvest-then-raise contract: every completed
+        task is drained/purged first, then the earliest failed task (in
+        submission order) raises."""
         ids = self.batch_run([(function_id, endpoint_id, p)
                               for p in payloads])
-        return self.get_batch_results(ids, timeout)
+        index = {tid: i for i, tid in enumerate(ids)}
+        out: List[Any] = [None] * len(ids)
+        errors = {}
+        for tid in self.service.as_completed(ids, timeout=timeout):
+            try:
+                out[index[tid]] = self.service.get_result(tid, timeout=1.0)
+            except (TaskFailure, TaskLost) as e:
+                errors[tid] = e
+        for tid in ids:
+            if tid in errors:
+                raise errors[tid]
+        return out
 
     # -- results ----------------------------------------------------------------
     def get_result(self, task_id: str, timeout: float = 30.0) -> Any:

@@ -63,6 +63,9 @@ class EndpointLine:
         self.advertised = Heartbeat(endpoint_id=endpoint_id)
         # metrics
         self.dispatched = 0
+        self.task_envelopes = 0         # TaskBatch frames sent (gauge:
+        #                                 tasks per envelope → submit-side
+        #                                 batching efficiency, DESIGN.md §8)
         self.results_received = 0
         self.result_envelopes = 0       # ResultBatch frames (gauge: results
         #                                 per envelope → batching efficiency)
@@ -125,6 +128,7 @@ class ForwarderPool:
         self._threads: List[threading.Thread] = []
         # metrics (pool-wide; per-endpoint counts live on the lines)
         self.dispatched = 0
+        self.task_envelopes = 0
         self.results_received = 0
         self.result_envelopes = 0
         self.requeues = 0
@@ -276,7 +280,9 @@ class ForwarderPool:
                 for spec in specs:
                     line.in_flight[spec.task_id] = t
                 line.dispatched += len(specs)
+                line.task_envelopes += 1
                 self.dispatched += len(specs)
+                self.task_envelopes += 1
             else:
                 # channel refused (disconnected / dropped): requeue in order
                 line.queue.extendleft(reversed([s.task_id for s in specs]))

@@ -230,6 +230,18 @@ class EndpointInfo:
         heartbeat not seen yet — count as capacity 1)."""
         return self.backlog / max(self.capacity, 1)
 
+    def note_pick(self, container_type: str) -> None:
+        """Feed a routing pick back into this snapshot (queue depth up,
+        warm-idle and idle-workers down) so consecutive picks from the
+        same snapshot — a routed batch or coalesced flush — spread over
+        the fleet instead of all landing on the momentary best
+        endpoint."""
+        self.service_queue += 1
+        if self.warm_idle.get(container_type, 0) > 0:
+            self.warm_idle[container_type] -= 1
+        if self.idle_workers > 0:
+            self.idle_workers -= 1
+
 
 class EndpointRouter:
     name = "abstract"
@@ -237,6 +249,26 @@ class EndpointRouter:
     def select(self, container_type: str,
                endpoints: Sequence[EndpointInfo]) -> Optional[str]:
         raise NotImplementedError
+
+    def select_many(self, container_type: str,
+                    endpoints: Sequence[EndpointInfo],
+                    n: int) -> List[str]:
+        """``n`` picks against one snapshot, with each pick fed back via
+        :meth:`EndpointInfo.note_pick` before the next — the per-flush
+        grouping primitive for coalesced submissions (DESIGN.md §8).
+        Stops short (returned list < ``n``) only if the policy returns
+        no endpoint."""
+        out: List[str] = []
+        for _ in range(n):
+            eid = self.select(container_type, endpoints)
+            if eid is None:
+                break
+            for e in endpoints:
+                if e.endpoint_id == eid:
+                    e.note_pick(container_type)
+                    break
+            out.append(eid)
+        return out
 
     @staticmethod
     def _candidates(endpoints: Sequence[EndpointInfo]) -> List[EndpointInfo]:

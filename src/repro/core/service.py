@@ -167,6 +167,12 @@ class FuncXService:
         self._health.start()
         # metrics
         self.submitted = 0
+        # submit-side envelope gauge (DESIGN.md §8): how many submit
+        # "envelopes" — per-endpoint groups landed on the pool — carried
+        # the submitted tasks. Per-call submit() pays 1.0 per task; the
+        # executor's coalesced flushes amortize toward 1/batch_size,
+        # symmetric to the result plane's envelopes-per-task gauge.
+        self.submit_envelopes = 0
         self.forwarder_restarts = 0
 
     def shutdown(self) -> None:
@@ -479,11 +485,7 @@ class FuncXService:
             raise EndpointUnavailable("endpoint router returned no endpoint")
         for inf in infos:
             if inf.endpoint_id == eid:
-                inf.service_queue += 1
-                if inf.warm_idle.get(container_type, 0) > 0:
-                    inf.warm_idle[container_type] -= 1
-                if inf.idle_workers > 0:
-                    inf.idle_workers -= 1
+                inf.note_pick(container_type)
                 break
         return eid
 
@@ -536,6 +538,7 @@ class FuncXService:
         self.pool.enqueue(endpoint_id, task.task_id)
         task.stamp("service_queued")
         self.submitted += 1
+        self.submit_envelopes += 1
         return task.task_id
 
     def submit_batch(self, token: Token,
@@ -575,12 +578,77 @@ class FuncXService:
             task.stamp("submit")
             tasks.append(task)
             per_endpoint.setdefault(eid, []).append(task.task_id)
+        return self._land_checked(checked)
+
+    def submit_packed_batch(
+            self, token: Token,
+            entries: Sequence[Tuple[str, Optional[str], Any, Optional[str]]]
+    ) -> List[str]:
+        """Coalesced-submit entry point (DESIGN.md §8): land one flush of
+        pre-grouped submissions — ``(function_id, endpoint_id, payload,
+        container_type)`` tuples, payloads typically already
+        :class:`PackedBuffer`\\ s (the executor packs on the caller's
+        thread; pack-once passes them through byte-identical here).
+
+        The token is validated once for the whole flush and each distinct
+        function is resolved once. Endpoint-less entries are routed
+        **per flush**: grouped by container type and routed via
+        ``EndpointRouter.select_many`` against a single snapshot with
+        pick feedback, so a 32-task flush spreads over the fleet instead
+        of piling onto the momentary best endpoint. Each endpoint's share
+        then lands with one ``put_many`` + ``enqueue_many`` — service
+        cost per *envelope*, not per task — and the pool's dispatch loop
+        turns it into one ``TaskBatch`` wire frame per endpoint."""
+        identity = self.auth.validate(token, SCOPE_RUN)
+        rf_cache: Dict[str, RegisteredFunction] = {}
+        checked: List[List] = []
+        for fid, eid, payload, ct in entries:
+            rf = rf_cache.get(fid)
+            if rf is None:
+                rf = rf_cache[fid] = self._resolve_function(identity, fid)
+            packed = self._pack_checked(payload)
+            if eid is not None and eid not in self.endpoints:
+                raise EndpointUnavailable(f"unknown endpoint {eid}")
+            checked.append([fid, eid, packed, ct or rf.container_type])
+        unrouted = [c for c in checked if c[1] is None]
+        if unrouted:
+            infos = self.pool.endpoint_infos()
+            if not infos:
+                raise EndpointUnavailable("no endpoints registered")
+            by_ct: Dict[str, List[List]] = {}
+            for c in unrouted:
+                by_ct.setdefault(c[3], []).append(c)
+            for ct, group in by_ct.items():
+                picks = self.endpoint_router.select_many(ct, infos,
+                                                         len(group))
+                if len(picks) < len(group):
+                    raise EndpointUnavailable(
+                        "endpoint router returned no endpoint")
+                for c, eid in zip(group, picks):
+                    c[1] = eid
+        return self._land_checked([tuple(c) for c in checked])
+
+    def _land_checked(
+            self, checked: Sequence[Tuple[str, str, PackedBuffer, str]]
+    ) -> List[str]:
+        """Store + enqueue fully validated/routed requests: one store lock
+        for the whole batch, one pool round-trip per endpoint group (each
+        group counts as one submit envelope — the DESIGN.md §8 gauge)."""
+        tasks: List[Task] = []
+        per_endpoint: Dict[str, List[str]] = {}
+        for fid, eid, packed, ct in checked:
+            task = Task(function_id=fid, endpoint_id=eid, payload=packed,
+                        container_type=ct)
+            task.stamp("submit")
+            tasks.append(task)
+            per_endpoint.setdefault(eid, []).append(task.task_id)
         self.tasks.put_many(tasks)         # one store lock for the batch
         for eid, tids in per_endpoint.items():
             self.pool.enqueue_many(eid, tids)
         for task in tasks:
             task.stamp("service_queued")
         self.submitted += len(tasks)
+        self.submit_envelopes += len(per_endpoint)
         return [t.task_id for t in tasks]
 
     # ------------------------------------------------------------------ results

@@ -206,6 +206,15 @@ class TaskStore:
         """Register a :class:`BatchWaiter` over ``task_ids``. Tasks already
         done land in its fired queue immediately."""
         w = BatchWaiter(self)
+        self.watch(w, task_ids)
+        return w
+
+    def watch(self, w: BatchWaiter, task_ids: Iterable[str]) -> None:
+        """Register additional ids on an existing waiter — the incremental
+        form of :meth:`make_waiter`, for harvesters whose watch set grows
+        while they wait (the executor's harvest thread registers each
+        flush's task ids on its one long-lived waiter, DESIGN.md §8).
+        Ids already done land in the fired queue immediately."""
         with self._lock:
             for tid in task_ids:
                 if tid in self._done:
@@ -215,7 +224,6 @@ class TaskStore:
                 w.watching.add(tid)
             if w._fired:
                 w.event.set()
-        return w
 
     def close_waiter(self, w: BatchWaiter) -> None:
         with self._lock:

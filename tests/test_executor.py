@@ -1,0 +1,300 @@
+"""FuncXExecutor + SubmitCoalescer (DESIGN.md §8): futures-native
+submission, client-side submit coalescing, harvest lifecycle."""
+import threading
+
+import pytest
+
+from repro.core import FuncXExecutor, SubmitCoalescer, TaskFailure
+from tests.conftest import wait_until
+
+
+def square(data):
+    return data["x"] * data["x"]
+
+
+def boom(data):
+    raise ValueError("deliberate failure: " + data["msg"])
+
+
+@pytest.fixture
+def endpoint(service, client):
+    eid, agent = service.make_endpoint(client.token, "ep", n_managers=2,
+                                       workers_per_manager=4)
+    yield eid
+    agent.stop()
+
+
+# ---------------------------------------------------------------- basics
+class TestExecutorBasics:
+    def test_submit_returns_real_future(self, client, endpoint):
+        with client.executor(endpoint_id=endpoint) as ex:
+            fut = ex.submit(square, {"x": 7})
+            from concurrent.futures import Future
+            assert isinstance(fut, Future)
+            assert fut.result(timeout=10) == 49
+
+    def test_callable_registered_once(self, client, endpoint):
+        with client.executor(endpoint_id=endpoint) as ex:
+            assert ex.submit(square, {"x": 2}).result(timeout=10) == 4
+            assert ex.submit(square, {"x": 3}).result(timeout=10) == 9
+            assert len(ex._fn_ids) == 1
+
+    def test_submit_by_function_id_string(self, client, endpoint):
+        fid = client.register_function(square)
+        with client.executor(endpoint_id=endpoint) as ex:
+            assert ex.submit(fid, {"x": 5}).result(timeout=10) == 25
+
+    def test_per_submit_endpoint_override(self, service, client):
+        eid_a, agent_a = service.make_endpoint(client.token, "a",
+                                               workers_per_manager=2)
+        eid_b, agent_b = service.make_endpoint(client.token, "b",
+                                               workers_per_manager=2)
+        try:
+            with client.executor(endpoint_id=eid_a) as ex:
+                fa = ex.submit(square, {"x": 2})
+                fb = ex.submit(square, {"x": 3}, endpoint_id=eid_b)
+                assert fa.result(timeout=10) == 4
+                assert fb.result(timeout=10) == 9
+        finally:
+            agent_a.stop()
+            agent_b.stop()
+
+    def test_routed_when_no_endpoint(self, service, client, endpoint):
+        # endpoint_id=None at both construction and submit → the service
+        # routes each flush across the federation
+        with client.executor() as ex:
+            assert ex.submit(square, {"x": 6}).result(timeout=10) == 36
+
+    def test_map_preserves_input_order(self, client, endpoint):
+        with client.executor(endpoint_id=endpoint) as ex:
+            out = ex.map(square, [{"x": i} for i in range(20)])
+        assert out == [i * i for i in range(20)]
+
+
+# ----------------------------------------------------------- error paths
+class TestExceptionPropagation:
+    def test_remote_failure_sets_future_exception(self, client, endpoint):
+        with client.executor(endpoint_id=endpoint) as ex:
+            fut = ex.submit(boom, {"msg": "kaput"})
+            with pytest.raises(TaskFailure, match="kaput"):
+                fut.result(timeout=10)
+
+    def test_failure_does_not_poison_neighbours(self, client, endpoint):
+        # a failed task resolves only ITS future; tasks coalesced into
+        # the same flush still succeed
+        with client.executor(endpoint_id=endpoint) as ex:
+            futs = [ex.submit(square, {"x": i}) for i in range(5)]
+            bad = ex.submit(boom, {"msg": "one bad apple"})
+            assert [f.result(timeout=10) for f in futs] == \
+                [i * i for i in range(5)]
+            with pytest.raises(TaskFailure):
+                bad.result(timeout=10)
+
+    def test_submit_flush_error_resolves_futures(self, client, endpoint):
+        # a flush that fails at the service (unknown endpoint) must not
+        # strand its futures — the exception propagates into each one
+        with client.executor(endpoint_id="no-such-endpoint") as ex:
+            fut = ex.submit(square, {"x": 1})
+            with pytest.raises(Exception):
+                fut.result(timeout=10)
+
+
+# ----------------------------------------------------------------- cancel
+class TestCancel:
+    def test_cancel_before_flush_skips_task(self, service, client,
+                                            endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        try:
+            before = service.submitted
+            # hold the coalescer's flush lock so the entry stays parked
+            with ex.coalescer._flush_lock:
+                fut = ex.submit(square, {"x": 1})
+                assert fut.cancel()
+            assert wait_until(lambda: ex.tasks_cancelled == 1)
+            assert fut.cancelled()
+            assert service.submitted == before  # never became a task
+        finally:
+            ex.shutdown(wait=False)
+
+    def test_cancel_after_flush_fails(self, client, endpoint):
+        with client.executor(endpoint_id=endpoint) as ex:
+            fut = ex.submit(square, {"x": 4})
+            # lone submit flushes inline → already RUNNING (or done)
+            assert not fut.cancel()
+            assert fut.result(timeout=10) == 16
+
+
+# --------------------------------------------------------------- shutdown
+class TestShutdown:
+    def test_shutdown_wait_drains_everything(self, client, endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        futs = [ex.submit(square, {"x": i}) for i in range(40)]
+        ex.shutdown(wait=True)
+        assert all(f.done() for f in futs)
+        assert [f.result() for f in futs] == [i * i for i in range(40)]
+
+    def test_shutdown_nowait_returns_then_completes(self, client,
+                                                    endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        futs = [ex.submit(square, {"x": i}) for i in range(40)]
+        ex.shutdown(wait=False)
+        # futures keep resolving on the harvest thread after return
+        assert [f.result(timeout=10) for f in futs] == \
+            [i * i for i in range(40)]
+
+    def test_submit_after_shutdown_raises(self, client, endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        ex.shutdown(wait=True)
+        with pytest.raises(RuntimeError):
+            ex.submit(square, {"x": 1})
+
+    def test_shutdown_cancel_futures_cancels_parked(self, service, client,
+                                                    endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        before = service.submitted
+        with ex.coalescer._flush_lock:       # park the entry
+            fut = ex.submit(square, {"x": 1})
+            t = threading.Thread(
+                target=lambda: ex.shutdown(wait=True, cancel_futures=True))
+            t.start()
+        t.join(timeout=5)
+        assert not t.is_alive()
+        assert fut.cancelled()
+        assert service.submitted == before
+
+
+# ------------------------------------------------------ coalescing + storm
+class TestCoalescing:
+    def test_storm_amortizes_submit_envelopes(self, service, client,
+                                              endpoint):
+        """16 threads × 50 submits → ≤1/8 submit envelopes per task
+        (ISSUE acceptance), every result correct."""
+        n_threads, per_thread = 16, 50
+        env0, sub0 = service.submit_envelopes, service.submitted
+        with client.executor(endpoint_id=endpoint) as ex:
+            all_futs, lock = [], threading.Lock()
+
+            def storm(base):
+                futs = [ex.submit(square, {"x": base + i})
+                        for i in range(per_thread)]
+                with lock:
+                    all_futs.extend(futs)
+
+            threads = [threading.Thread(target=storm,
+                                        args=(k * per_thread,))
+                       for k in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            results = sorted(f.result(timeout=30) for f in all_futs)
+        tasks = service.submitted - sub0
+        envelopes = service.submit_envelopes - env0
+        assert tasks == n_threads * per_thread
+        assert envelopes / tasks <= 1 / 8, \
+            f"{envelopes} envelopes for {tasks} tasks"
+        assert results == sorted(i * i
+                                 for i in range(n_threads * per_thread))
+
+    def test_lone_submit_is_one_envelope(self, service, client, endpoint):
+        # idle line → inline flush: exactly one envelope, no linger wait
+        with client.executor(endpoint_id=endpoint) as ex:
+            env0 = service.submit_envelopes
+            assert ex.submit(square, {"x": 3}).result(timeout=10) == 9
+            assert service.submit_envelopes - env0 == 1
+            assert ex.coalescer.flushes == 1
+
+    def test_mixed_endpoints_grouped_per_flush(self, service, client):
+        # one flush containing two endpoints lands one envelope per
+        # endpoint group (submit_packed_batch groups by resolved id)
+        eid_a, agent_a = service.make_endpoint(client.token, "a",
+                                               workers_per_manager=2)
+        eid_b, agent_b = service.make_endpoint(client.token, "b",
+                                               workers_per_manager=2)
+        try:
+            ex = client.executor()
+            env0 = service.submit_envelopes
+            with ex.coalescer._flush_lock:   # force one combined flush
+                futs = [ex.submit(square, {"x": i},
+                                  endpoint_id=eid_a if i % 2 else eid_b)
+                        for i in range(8)]
+            assert [f.result(timeout=10) for f in futs] == \
+                [i * i for i in range(8)]
+            assert service.submit_envelopes - env0 == 2
+            ex.shutdown(wait=True)
+        finally:
+            agent_a.stop()
+            agent_b.stop()
+
+
+# -------------------------------------------------------- harvest lifecycle
+class TestHarvestLifecycle:
+    def test_harvester_stops_at_zero_outstanding(self, client, endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        ex.harvest_grace = 0.05              # shrink the linger for test
+        try:
+            assert not ex.harvest_running    # no thread before first use
+            assert ex.submit(square, {"x": 2}).result(timeout=10) == 4
+            assert ex.harvest_running        # lingers through the grace
+            assert wait_until(lambda: not ex.harvest_running, timeout=5)
+            assert ex.outstanding() == 0
+            # next submit restarts it
+            assert ex.submit(square, {"x": 3}).result(timeout=10) == 9
+            assert wait_until(lambda: not ex.harvest_running, timeout=5)
+        finally:
+            ex.shutdown(wait=True)
+
+    def test_executor_usable_across_harvest_restarts(self, client,
+                                                     endpoint):
+        ex = client.executor(endpoint_id=endpoint)
+        ex.harvest_grace = 0.02
+        try:
+            for wave in range(3):
+                futs = [ex.submit(square, {"x": i}) for i in range(8)]
+                assert [f.result(timeout=10) for f in futs] == \
+                    [i * i for i in range(8)]
+                wait_until(lambda: not ex.harvest_running, timeout=5)
+        finally:
+            ex.shutdown(wait=True)
+
+
+# ------------------------------------------------- SubmitCoalescer unit level
+class TestSubmitCoalescer:
+    def test_idle_line_flushes_inline(self):
+        shipped = []
+        c = SubmitCoalescer(shipped.append, batch_size=8)
+        try:
+            c.add("a")                       # idle → flushed on this thread
+            assert shipped == [["a"]]
+            assert c.pending() == 0
+        finally:
+            c.close()
+
+    def test_loaded_line_batches(self):
+        shipped = []
+        c = SubmitCoalescer(shipped.append, batch_size=8, linger=0.005,
+                            outstanding=lambda: 1)   # wave in flight
+        try:
+            for i in range(20):
+                c.add(i)
+            assert wait_until(lambda: sum(len(b) for b in shipped) == 20)
+            assert len(shipped) < 20         # actually coalesced
+            assert max(len(b) for b in shipped) <= 8
+        finally:
+            c.close()
+
+    def test_close_drains_parked(self):
+        shipped = []
+        c = SubmitCoalescer(shipped.append, batch_size=100, linger=5.0,
+                            outstanding=lambda: 1)
+        c.add("x")
+        c.add("y")
+        c.close()                            # long linger: close must drain
+        assert sum(len(b) for b in shipped) == 2
+
+    def test_add_after_close_still_ships(self):
+        shipped = []
+        c = SubmitCoalescer(shipped.append, batch_size=8)
+        c.close()
+        c.add("late")                        # racing submit at shutdown
+        assert sum(len(b) for b in shipped) == 1

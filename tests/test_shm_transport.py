@@ -300,9 +300,14 @@ def test_endpoint_crash_with_ring_attached_exactly_once(tcp_service):
             with pytest.raises(KeyError):
                 svc.get_task(tid)
         # a new ring pair was negotiated for the new connection...
+        # (shm_attached flips when the endpoint *sends* its ShmAttach
+        # confirm; the service installs its ShmTransport when the pool
+        # recv-loop *processes* it — wait for both sides, as above)
         assert wait_until(lambda: runner.shm_attached, timeout=10)
+        assert wait_until(lambda: isinstance(
+            svc.endpoints[runner.endpoint_id].channel.transport,
+            ShmTransport), timeout=10)
         new = svc.endpoints[runner.endpoint_id].channel.transport
-        assert isinstance(new, ShmTransport)
         assert (new._tx.name, new._rx.name) != old_names
 
         # ...and the crashed pair's segments are gone from /dev/shm

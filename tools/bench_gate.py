@@ -1,7 +1,8 @@
-"""Perf-regression smoke gate (CI: bench-results, bench-shm).
+"""Perf-regression smoke gate (CI: bench-results, bench-shm,
+bench-executor).
 
 Compares a freshly produced benchmark artifact against the committed
-baseline (BENCH_6.json) with tolerance:
+baseline (BENCH_7.json) with tolerance:
 
 - ``sec7.2.3/results_plane/throughput_tasks_per_s`` must be at least
   ``--tolerance`` × baseline (throughput; higher is better). CI runners
@@ -25,11 +26,27 @@ With ``--shm`` it instead gates the same-host transport suite
   tcp jitters around 1× at smoke scale, and the real margin is recorded
   in the committed artifact).
 
+With ``--executor`` it gates the futures-native submit plane
+(``sec5_executor``, DESIGN.md §8):
+
+- ``executor/submit_envelopes_per_task`` must be ≤ ``--envelope-cap``
+  (default 0.125 = the ISSUE's 1/8 acceptance bound). Noise-immune:
+  submit coalescing either amortizes the storm or it doesn't.
+- ``executor/speedup_vs_percall`` must be at least ``--executor-floor``
+  (default 0.9: a collapse detector — a lost coalescing path drops the
+  executor to per-call throughput or below; the real ≥1.2× margin is
+  recorded in the committed artifact, but smoke-scale storms on loaded
+  runners jitter).
+- ``executor/lone_overhead_ratio`` must stay < 2.0 — a lone submit that
+  starts paying the linger (a broken idle-line inline flush) shows up
+  as 3×+ against the direct ``client.run`` roundtrip.
+
 Exit code 0 = pass, 1 = regression, 2 = malformed/missing artifacts.
 
-    python -m tools.bench_gate --baseline BENCH_6.json \
+    python -m tools.bench_gate --baseline BENCH_7.json \
         --fresh bench_fresh.json [--tolerance 0.4]
     python -m tools.bench_gate --shm --fresh bench_fresh.json
+    python -m tools.bench_gate --executor --fresh bench_fresh.json
 """
 from __future__ import annotations
 
@@ -44,6 +61,11 @@ ENVELOPES = "sec7.2.3/results_plane/envelopes_per_task"
 SHM_SUITE = "sec7_shm"
 SHM_SPEEDUP = "shm/speedup_vs_tcp"
 SHM_UPGRADED = "shm/channels_upgraded"
+
+EXEC_SUITE = "sec5_executor"
+EXEC_ENVELOPES = "sec5/executor/submit_envelopes_per_task"
+EXEC_SPEEDUP = "sec5/executor/speedup_vs_percall"
+EXEC_LONE = "sec5/executor/lone_overhead_ratio"
 
 
 def load_suite(path: str, suite_key: str = SUITE) -> dict:
@@ -88,9 +110,44 @@ def gate_shm(args) -> int:
     return 0
 
 
+def gate_executor(args) -> int:
+    fresh = load_suite(args.fresh, EXEC_SUITE)
+    failures = []
+
+    envelopes = fresh.get(EXEC_ENVELOPES)
+    speedup = fresh.get(EXEC_SPEEDUP)
+    lone = fresh.get(EXEC_LONE)
+    if envelopes is None or speedup is None or lone is None:
+        print(f"bench-gate: {EXEC_ENVELOPES} / {EXEC_SPEEDUP} / "
+              f"{EXEC_LONE} missing "
+              f"(got {envelopes}, {speedup}, {lone})")
+        return 2
+    status = "ok" if envelopes <= args.envelope_cap else "REGRESSION"
+    print(f"bench-gate: executor submit envelopes/task={envelopes:.3f} "
+          f"cap={args.envelope_cap:.3f} -> {status}")
+    if envelopes > args.envelope_cap:
+        failures.append(EXEC_ENVELOPES)
+    status = "ok" if speedup >= args.executor_floor else "REGRESSION"
+    print(f"bench-gate: executor speedup vs percall={speedup:.2f}x "
+          f"floor={args.executor_floor:.2f}x -> {status}")
+    if speedup < args.executor_floor:
+        failures.append(EXEC_SPEEDUP)
+    status = "ok" if lone < args.lone_cap else "REGRESSION"
+    print(f"bench-gate: lone submit overhead={lone:.2f}x "
+          f"cap={args.lone_cap:.2f}x -> {status}")
+    if lone >= args.lone_cap:
+        failures.append(EXEC_LONE)
+
+    if failures:
+        print(f"bench-gate: FAILED on {', '.join(failures)}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--baseline", default="BENCH_6.json",
+    p.add_argument("--baseline", default="BENCH_7.json",
                    help="committed artifact to compare against")
     p.add_argument("--fresh", required=True,
                    help="artifact produced by this run")
@@ -105,10 +162,26 @@ def main() -> int:
                    help="fresh shm/speedup_vs_tcp must be >= this "
                         "(default 0.4: catches a collapsed ring path, "
                         "tolerates smoke-scale jitter around parity)")
+    p.add_argument("--executor", action="store_true",
+                   help="gate the sec5_executor submit-coalescing suite "
+                        "instead of the result plane")
+    p.add_argument("--envelope-cap", type=float, default=0.125,
+                   help="executor submit envelopes/task under storm must "
+                        "be <= this (default 1/8, the ISSUE acceptance)")
+    p.add_argument("--executor-floor", type=float, default=0.9,
+                   help="executor storm speedup vs per-call must be >= "
+                        "this (default 0.9: collapse detector; committed "
+                        "artifact records the real >=1.2x margin)")
+    p.add_argument("--lone-cap", type=float, default=2.0,
+                   help="lone executor.submit roundtrip vs client.run "
+                        "must stay < this (a linger-on-idle regression "
+                        "is 3x+)")
     args = p.parse_args()
 
     if args.shm:
         return gate_shm(args)
+    if args.executor:
+        return gate_executor(args)
 
     base = load_suite(args.baseline)
     fresh = load_suite(args.fresh)
