@@ -15,14 +15,18 @@
 #   make bench-executor-gate  bench-executor (tiny) + gate: storm envelope
 #                             ratio <= 1/8, no lone-submit linger, no
 #                             throughput collapse vs per-call
-#   make bench                full benchmark harness (writes BENCH_7.json)
+#   make bench-p2p            DESIGN.md §9 peer data plane all-to-all shuffle
+#   make bench-p2p-gate       bench-p2p (tiny) + gate: zero relay bytes on
+#                             the peer lane, no speedup collapse vs the
+#                             hub-relay path
+#   make bench                full benchmark harness (writes BENCH_8.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast lint bench-smoke bench-serialization \
 	bench-results bench-results-gate bench-shm bench-shm-gate \
-	bench-executor bench-executor-gate bench
+	bench-executor bench-executor-gate bench-p2p bench-p2p-gate bench
 
 test:
 	python -m pytest -x -q
@@ -63,6 +67,14 @@ bench-executor-gate:
 	python -m benchmarks.run --only sec5_executor --tiny \
 		--artifact bench_fresh.json
 	python -m tools.bench_gate --executor --fresh bench_fresh.json
+
+bench-p2p:
+	python -m benchmarks.run --only sec6_p2p
+
+bench-p2p-gate:
+	python -m benchmarks.run --only sec6_p2p --tiny \
+		--artifact bench_fresh.json
+	python -m tools.bench_gate --p2p --fresh bench_fresh.json
 
 bench:
 	python -m benchmarks.run

@@ -1,0 +1,127 @@
+"""DESIGN.md §9 — peer data plane: N-endpoint all-to-all shuffle of
+staged intermediates, direct endpoint↔endpoint TCP vs the hub relay.
+
+Two identical subprocess fleets (shm off in both, so the only variable is
+the data plane): the *peer* lane runs PeerServers and resolves every
+cross-endpoint DataRef with a direct fetch; the *hub* lane starts its
+endpoints ``--no-peer`` (nothing listening, nothing advertised) so every
+fetch falls back to the service relay. Emits the aggregate shuffle
+throughput of both lanes, the speedup, and the relay-byte gauges that
+``tools/bench_gate.py --p2p`` gates on (``hub_relay_bytes == 0`` on the
+peer lane is the headline invariant: intermediates never transit the
+hub when peers are reachable).
+"""
+from __future__ import annotations
+
+import subprocess
+import time
+
+from .common import emit
+
+
+def shuffle_lane(label: str, peer: bool, n_endpoints: int, blob_bytes: int,
+                 partitions: int = 4, repeats: int = 2):
+    """One fleet, ``repeats`` complete produce→shuffle rounds (fresh refs
+    each round — consumers cache fetched keys, so reusing refs would
+    measure the local store). Each producer mints ``partitions`` blobs
+    per consumer; each consumer's gather pulls every one of them, so
+    the shuffle is data-bound: the direct lane spreads the bytes over
+    N×N independent peer sockets while the relay lane funnels every
+    byte through the service's recv loop twice. Returns (best bytes/s,
+    best tasks/s, relay bytes across all rounds)."""
+    from repro.core import FuncXClient, FuncXService
+    from repro.core.endpoint import (
+        demo_gather,
+        demo_produce,
+        spawn_endpoint_process,
+    )
+
+    svc = FuncXService(heartbeat_timeout=1.0, purge_on_get=False, shm=False)
+    procs = []
+    try:
+        tok = svc.register_user("bench")
+        client = FuncXClient(svc, tok)
+        fid_p = client.register_function(demo_produce)
+        fid_g = client.register_function(demo_gather)
+        address = svc.listen()
+        token = client.endpoint_credentials()
+        eids = []
+        for i in range(n_endpoints):
+            p, eid = spawn_endpoint_process(
+                address, token, name=f"{label}{i}", workers=4, shm=False,
+                peer=peer, stage_limit=4096)
+            procs.append(p)
+            eids.append(eid)
+
+        per_cons = n_endpoints - 1
+        best_bps = best_tps = 0.0
+        for _ in range(repeats):
+            # produce: every endpoint mints `partitions` blobs per consumer
+            pids = client.batch_run([
+                (fid_p, eids[i], {"n": blob_bytes, "seed": i})
+                for i in range(n_endpoints)
+                for _ in range(per_cons * partitions)])
+            refs = client.get_batch_results(pids, timeout=120)
+            span = per_cons * partitions
+            per_producer = [refs[i * span:(i + 1) * span]
+                            for i in range(n_endpoints)]
+            # shuffle: endpoint i runs one gather pulling ALL of its
+            # partitions from every OTHER endpoint — cross-endpoint refs
+            # resolved at stage-in. One deep task per endpoint keeps the
+            # phase data-bound: the task-pipeline constant is paid N
+            # times, the fetch path (N-1)·partitions times
+            payloads = []
+            for i in range(n_endpoints):
+                parts = [per_producer[j].pop()
+                         for j in range(n_endpoints) if j != i
+                         for _k in range(partitions)]
+                payloads.append((fid_g, eids[i], {"parts": parts}))
+            t0 = time.perf_counter()
+            gids = client.batch_run(payloads)
+            sizes = client.get_batch_results(gids, timeout=180)
+            dt = time.perf_counter() - t0
+            moved = n_endpoints * partitions * per_cons * blob_bytes
+            assert sizes == [per_cons * partitions * blob_bytes] \
+                * len(payloads)
+            best_bps = max(best_bps, moved / dt)
+            best_tps = max(best_tps, len(payloads) / dt)
+        return best_bps, best_tps, svc.hub_relay_bytes
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                p.kill()
+        svc.shutdown()
+
+
+def run(full: bool = False, tiny: bool = False) -> None:
+    if tiny:
+        n_endpoints, blob, parts, repeats = 2, 64 * 1024, 2, 2
+    elif full:
+        n_endpoints, blob, parts, repeats = 4, 256 * 1024, 24, 4
+    else:
+        n_endpoints, blob, parts, repeats = 4, 256 * 1024, 16, 3
+
+    peer_bps, peer_tps, peer_relay = shuffle_lane(
+        "p2p_peer", True, n_endpoints, blob, parts, repeats)
+    hub_bps, hub_tps, hub_relay = shuffle_lane(
+        "p2p_hub", False, n_endpoints, blob, parts, repeats)
+
+    mb = 1024 * 1024
+    emit(f"p2p/peer/shuffle_MBps/endpoints={n_endpoints}", peer_bps / mb,
+         f"blob={blob}B all-to-all tasks/s={peer_tps:.1f}")
+    emit(f"p2p/hub/shuffle_MBps/endpoints={n_endpoints}", hub_bps / mb,
+         f"blob={blob}B all-to-all tasks/s={hub_tps:.1f}")
+    emit("p2p/speedup_vs_hub", peer_bps / max(hub_bps, 1e-9),
+         f"peer={peer_bps / mb:.1f}MB/s hub={hub_bps / mb:.1f}MB/s")
+    # the headline invariant: with peers reachable, zero intermediate
+    # bytes transit the hub (gated == 0)
+    emit("p2p/peer/hub_relay_bytes", float(peer_relay),
+         "must be 0: every ref resolved endpoint-to-endpoint")
+    # sanity: the hub lane really did relay everything at least once
+    floor = n_endpoints * (n_endpoints - 1) * parts * blob * repeats
+    emit("p2p/hub/hub_relay_bytes", float(hub_relay),
+         f"expected >= {floor} (all shuffle bytes, every round)")

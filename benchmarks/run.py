@@ -32,9 +32,12 @@ SUITES = {
     "sec5_executor": ("executor_bench",
                       "§5 futures-native executor submit coalescing "
                       "(DESIGN.md §8)"),
+    "sec6_p2p": ("p2p_bench",
+                 "§5/§6 peer data plane all-to-all shuffle "
+                 "(DESIGN.md §9)"),
 }
 
-ARTIFACT = "BENCH_7.json"          # seeded from BENCH_6.json (PR 6 run)
+ARTIFACT = "BENCH_8.json"          # seeded from BENCH_7.json (PR 7 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

@@ -2,93 +2,120 @@
 
     PYTHONPATH=src python examples/colmena_steering.py
 
-A *Thinker* (decision policy) steers a computational campaign: it submits
-"simulation" tasks to a CPU endpoint, periodically "trains" a surrogate on
-results from the store, and uses it to pick the next batch — the classic
-simulate → learn → steer loop, with funcX as the execution fabric and the
-in-memory store carrying task payloads (Table 2's communication stages).
+A *Thinker* (decision policy) steers a computational campaign across a
+small federation: "simulation" tasks run on an HPC endpoint and return a
+trajectory too large for the service payload path, so each result leaves
+the endpoint as a **cross-endpoint DataRef** (DESIGN.md §9). A separate
+"learn" endpoint fits the surrogate: its task consumes the accumulated
+refs — stage-in dials the simulation endpoint directly over the peer
+data plane; the hub only brokers addresses — and returns the small
+steering summary (best points) the Thinker uses to pick the next batch.
+The classic simulate → learn → steer loop, with intermediates never
+transiting the cloud service.
 
-The campaign optimizes a noisy 2-D function; steering must beat random.
+The campaign optimizes a noisy 2-D function; steering must beat its own
+first (random) round, and the self-check asserts zero hub-relay bytes.
 """
 import time
 
 import numpy as np
 
-from repro.core import FuncXClient, FuncXService
+from repro.core import FuncXClient, FuncXService, RemoteEndpointRunner
+from repro.data import DataRef
 
 
 def simulate(data):
-    """Expensive 'simulation': evaluate the hidden landscape at x."""
+    """Expensive 'simulation': evaluate the hidden landscape at x, and
+    emit a trajectory big enough to stage out as a ref."""
+    import numpy as np
     x = np.asarray(data["x"])
     val = -np.sum((x - np.array([0.7, -0.3])) ** 2) + \
         0.05 * np.sin(13 * x).sum()
     time.sleep(0.005)
-    return {"x": x, "y": float(val)}
+    traj = np.cumsum(np.sin(np.linspace(0, 40, 2048)[:, None] + x), axis=0)
+    return {"x": x.tolist(), "y": float(val), "traj": traj}
+
+
+def fit_surrogate(data):
+    """'Train' on every simulation so far (refs resolved at stage-in) and
+    hand the Thinker its steering summary: the top-3 points."""
+    results = data["results"]
+    top = sorted(results, key=lambda o: -o["y"])[:3]
+    return {"best_y": top[0]["y"],
+            "top_xs": [t["x"] for t in top],
+            "n_seen": len(results)}
 
 
 def main():
     service = FuncXService()
     token = service.register_user("thinker")
     client = FuncXClient(service, token)
-    sim_id = client.register_function(simulate)
-    eid, agent = service.make_endpoint(token, "hpc", n_managers=2,
-                                       workers_per_manager=4)
-    store = service.transfer.store_for(eid)
+    address = service.listen()
+    creds = client.endpoint_credentials()
+
+    def endpoint(name):
+        r = RemoteEndpointRunner(address, creds, name=name, n_managers=1,
+                                 workers_per_manager=4, stage_limit=1024)
+        r.start()
+        return r
+
+    hpc = endpoint("hpc")        # simulations; results park in its store
+    learn = endpoint("learn")    # surrogate fits; pulls refs peer-to-peer
     rng = np.random.default_rng(0)
 
-    # the Thinker drives everything through one futures-native executor
-    # (DESIGN.md §8): submit by registered function id, harvest as the
-    # simulations land instead of blocking on a whole-batch wave
-    ex = client.executor(endpoint_id=eid)
+    # the Thinker drives everything through futures-native executors
+    # (DESIGN.md §8): submit, harvest as the simulations land
+    ex_sim = client.executor(endpoint_id=hpc.endpoint_id)
+    ex_fit = client.executor(endpoint_id=learn.endpoint_id)
 
-    def run_batch(xs):
-        futs = [ex.submit(sim_id, {"x": x}) for x in xs]
+    refs = []
+
+    def run_round(xs):
+        """One campaign round: simulate the batch, then fit the surrogate
+        on everything so far. Returns the Thinker's steering summary."""
+        futs = [ex_sim.submit(simulate, {"x": x.tolist()}) for x in xs]
         outs = [f.result(timeout=60) for f in futs]
-        for i, o in enumerate(outs):
-            store.set(f"results/{time.monotonic():.6f}/{i}", o)
-        return outs
+        assert all(isinstance(o, DataRef) for o in outs), \
+            "simulation outputs should stage out as refs"
+        refs.extend(outs)
+        fit = ex_fit.submit(fit_surrogate, {"results": list(refs)})
+        return fit.result(timeout=60)
 
-    # --- random baseline ------------------------------------------------------
     t0 = time.perf_counter()
-    random_best = -1e9
-    for _ in range(6):
-        outs = run_batch(rng.uniform(-2, 2, (8, 2)))
-        random_best = max(random_best, max(o["y"] for o in outs))
-    t_random = time.perf_counter() - t0
-
-    # --- steered campaign -----------------------------------------------------
-    t0 = time.perf_counter()
-    history = []
-    best = first_round_best = -1e9
+    history_best = []
+    best = -1e9
     xs = rng.uniform(-2, 2, (8, 2))
     for rnd in range(6):
-        outs = run_batch(xs)
-        history.extend(outs)
-        best = max(best, max(o["y"] for o in outs))
-        if rnd == 0:
-            first_round_best = best
-        # "surrogate": local quadratic fit around the top-3 points;
-        # next batch = perturbations of the best (exploit) + random (explore)
-        top = sorted(history, key=lambda o: -o["y"])[:3]
-        centers = np.stack([t["x"] for t in top])
-        exploit = centers[rng.integers(0, 3, 6)] + \
+        summary = run_round(xs)
+        best = max(best, summary["best_y"])
+        history_best.append(best)
+        # steer: perturbations of the surrogate's top points (exploit)
+        # plus fresh uniform draws (explore)
+        centers = np.array(summary["top_xs"])
+        exploit = centers[rng.integers(0, len(centers), 6)] + \
             rng.normal(0, 0.3 / (rnd + 1), (6, 2))
         explore = rng.uniform(-2, 2, (2, 2))
         xs = np.concatenate([exploit, explore])
     t_steer = time.perf_counter() - t0
 
-    print(f"random:  best={random_best:.4f} in {t_random:.2f}s (48 sims)")
-    print(f"steered: best={best:.4f} in {t_steer:.2f}s (48 sims)")
-    print(f"(optimum ≈ 0.1 at x*=[0.7,-0.3]; steering should get closer)")
-    print(f"store carried {store.stats.sets} result objects, "
-          f"{store.stats.bytes_in/1e3:.0f} kB")
-    print(f"executor landed {ex.tasks_submitted} sims in "
-          f"{ex.coalescer.flushes} coalesced flushes")
-    ex.shutdown(wait=True)
-    agent.stop()
+    stats = learn.peer_client.stats
+    print(f"steered: best={best:.4f} in {t_steer:.2f}s (48 sims, "
+          f"optimum ~0.1 at x*=[0.7,-0.3])")
+    print(f"peer plane: {stats.direct_fetches} direct fetches, "
+          f"{stats.direct_bytes / 1e6:.1f} MB simulation trajectories "
+          f"endpoint-to-endpoint, hub relay bytes="
+          f"{service.hub_relay_bytes}")
+    ex_sim.shutdown(wait=True)
+    ex_fit.shutdown(wait=True)
+    hpc.stop()
+    learn.stop()
     service.shutdown()
-    # steering must improve on its own first (random) round
-    assert best >= first_round_best
+    # steering must improve on its own first (random) round, every sim
+    # result must have crossed as a ref exactly once, and none of those
+    # bytes may have transited the hub
+    assert best >= history_best[0]
+    assert stats.direct_fetches == len(refs), stats.as_dict()
+    assert service.hub_relays == 0 and service.hub_relay_bytes == 0
 
 
 if __name__ == "__main__":

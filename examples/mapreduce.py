@@ -1,23 +1,31 @@
-"""MapReduce through funcX + the intra-endpoint data store (paper §7.3.1).
+"""Federated MapReduce over the peer data plane (paper §7.3.1 + §5).
 
-    PYTHONPATH=src python examples/mapreduce.py [--store memory|sharedfs]
+    PYTHONPATH=src python examples/mapreduce.py
 
-WordCount over generated text: map tasks shuffle partial counts through the
-endpoint's store (Redis-analogue vs shared FS — Table 1's comparison),
-reduce tasks merge. All tasks flow through the full FaaS path, driven by
-the futures-native FuncXExecutor (DESIGN.md §8): the shuffle starts the
-moment each map *future* completes — no barrier waiting for the slowest
-mapper — and reduce results stream back the same way.
+WordCount over generated text, spread across a federation: map tasks run
+on two *map endpoints*, reduce tasks on a third. Each map output is
+larger than the endpoint's stage-out limit, so it leaves the mapper as a
+**cross-endpoint DataRef** — the bytes stay parked in the producer's
+store. When a reduce task's stage-in meets those refs it dials the
+producing endpoints directly over the peer data plane (DESIGN.md §9);
+the service only brokers addresses and tokens. The self-check asserts
+that no intermediate byte transited the hub (``hub_relay_bytes == 0``)
+and that each map output crossed the wire exactly once even though every
+reducer consumes it (the first fetch caches it in the reduce endpoint's
+store — rung 0 for the other reducers).
+
+The map phase still rides the futures-native FuncXExecutor (DESIGN.md
+§8): refs stream back the moment each map future lands.
 """
 import argparse
-import tempfile
 import time
+from collections import Counter
 from concurrent.futures import as_completed
 
 import numpy as np
 
-from repro.core import FuncXClient, FuncXService
-from repro.data import InMemoryKVStore, SharedFSStore
+from repro.core import FuncXClient, FuncXService, RemoteEndpointRunner
+from repro.data import DataRef
 
 
 def map_fn(data):
@@ -33,73 +41,89 @@ def map_fn(data):
 
 def reduce_fn(data):
     total = {}
-    for part in data["parts"]:
+    for out in data["outputs"]:          # full map outputs (refs resolved
+        part = out["parts"].get(data["reducer"], {})   # at stage-in)
         for w, c in part.items():
             total[w] = total.get(w, 0) + c
-    top = sorted(total.items(), key=lambda kv: -kv[1])[:5]
-    return {"unique": len(total), "top5": top}
+    top = sorted(total.items(), key=lambda kv: (-kv[1], kv[0]))[:5]
+    return {"unique": len(total), "total": sum(total.values()), "top5": top}
 
 
 def main():
     p = argparse.ArgumentParser()
-    p.add_argument("--store", default="memory", choices=["memory", "sharedfs"])
     p.add_argument("--maps", type=int, default=12)
     p.add_argument("--reducers", type=int, default=4)
     p.add_argument("--words-per-map", type=int, default=50_000)
     args = p.parse_args()
 
-    tmp = tempfile.mkdtemp(prefix="mr_")
-    store = (InMemoryKVStore() if args.store == "memory"
-             else SharedFSStore(tmp))
-
     service = FuncXService()
     token = service.register_user("mr-user")
     client = FuncXClient(service, token)
-    eid, agent = service.make_endpoint(token, "cluster", n_managers=2,
-                                       workers_per_manager=4, store=store)
+    address = service.listen()
+    creds = client.endpoint_credentials()
+
+    # two map endpoints + one reduce endpoint, all on real TCP channels;
+    # the low stage_limit turns every map output into a DataRef
+    def endpoint(name):
+        r = RemoteEndpointRunner(address, creds, name=name, n_managers=1,
+                                 workers_per_manager=4, stage_limit=2048)
+        r.start()
+        return r
+
+    maps = [endpoint("map-a"), endpoint("map-b")]
+    red = endpoint("reduce")
 
     rng = np.random.default_rng(0)
     vocab = np.array([f"word{i:05d}" for i in range(5000)])
     texts = [" ".join(rng.choice(vocab, args.words_per_map))
              for _ in range(args.maps)]
 
-    with client.executor(endpoint_id=eid) as ex:
-        t0 = time.perf_counter()
-        # map phase: one Future per mapper; the coalescer lands all of
-        # them as a couple of packed batches, not args.maps submit calls
-        map_futs = {ex.submit(map_fn, {"text": t,
-                                       "n_reducers": args.reducers}): m
-                    for m, t in enumerate(texts)}
-        # shuffle each mapper's parts through the endpoint store the
-        # moment its future resolves (Table 1's intermediate write)
-        t_shuffle = 0.0
-        for fut in as_completed(map_futs):
-            m = map_futs[fut]
-            ts = time.perf_counter()
-            for r, part in fut.result()["parts"].items():
-                store.set(f"shuffle/{m}/{r}", part)
-            t_shuffle += time.perf_counter() - ts
-        t_map = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    refs = []
+    with client.executor(endpoint_id=maps[0].endpoint_id) as ex_a, \
+            client.executor(endpoint_id=maps[1].endpoint_id) as ex_b:
+        futs = [
+            (ex_a if m % 2 == 0 else ex_b).submit(
+                map_fn, {"text": t, "n_reducers": args.reducers})
+            for m, t in enumerate(texts)]
+        for fut in as_completed(futs):
+            refs.append(fut.result())
+    t_map = time.perf_counter() - t0
 
-        ts = time.perf_counter()
-        by_reducer = {r: [] for r in range(args.reducers)}
-        for r in range(args.reducers):
-            for m in range(args.maps):
-                if store.exists(f"shuffle/{m}/{r}"):
-                    by_reducer[r].append(store.get(f"shuffle/{m}/{r}"))
-        t_shuffle += time.perf_counter() - ts
+    assert all(isinstance(r, DataRef) for r in refs), \
+        "map outputs should leave the mapper as refs, not values"
 
-        t0 = time.perf_counter()
-        red_outs = ex.map(reduce_fn, [{"parts": parts}
-                                      for parts in by_reducer.values()])
-        t_red = time.perf_counter() - t0
+    # reduce: every reducer consumes ALL map outputs (its partition of
+    # each); stage-in resolves the refs endpoint-to-endpoint, pipelined
+    # per producer, and caches them so only the first reducer pays wire
+    t0 = time.perf_counter()
+    with client.executor(endpoint_id=red.endpoint_id) as ex:
+        red_outs = ex.map(reduce_fn, [{"outputs": refs, "reducer": r}
+                                      for r in range(args.reducers)])
+    t_red = time.perf_counter() - t0
 
-    unique = sum(o["unique"] for o in red_outs)
-    print(f"store={args.store}: map+shuffle {t_map:.2f}s "
-          f"(shuffle {t_shuffle:.3f}s)  "
-          f"reduce {t_red:.2f}s  unique_words={unique}")
-    print(f"store stats: {store.stats.as_dict()}")
-    agent.stop()
+    # ---- self-check -----------------------------------------------------
+    expected = Counter(w for t in texts for w in t.split())
+    assert sum(o["total"] for o in red_outs) == args.maps * args.words_per_map
+    assert sum(o["unique"] for o in red_outs) == len(expected)
+    merged = sorted((tuple(kv) for o in red_outs for kv in o["top5"]),
+                    key=lambda kv: (-kv[1], kv[0]))[:5]
+    assert merged == sorted(expected.items(),
+                            key=lambda kv: (-kv[1], kv[0]))[:5]
+    # the shuffle never transited the hub, and each map output crossed
+    # the wire once (reducers 2..R hit the reduce store's cache)
+    assert service.hub_relays == 0 and service.hub_relay_bytes == 0, \
+        "intermediates took the hub relay"
+    stats = red.peer_client.stats
+    assert stats.direct_fetches == args.maps, stats.as_dict()
+
+    print(f"map {t_map:.2f}s  reduce(+peer shuffle) {t_red:.2f}s  "
+          f"unique_words={sum(o['unique'] for o in red_outs)}")
+    print(f"peer shuffle: {stats.direct_fetches} direct fetches, "
+          f"{stats.direct_bytes / 1e6:.1f} MB endpoint-to-endpoint, "
+          f"hub relay bytes={service.hub_relay_bytes}")
+    for r in maps + [red]:
+        r.stop()
     service.shutdown()
 
 

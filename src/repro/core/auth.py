@@ -123,3 +123,55 @@ class AuthService:
     def revoke(self, token: Token) -> None:
         with self._lock:
             self._revoked.add(token.token_id)
+
+
+# ---------------------------------------------------------------------------
+# Peer-tokens (peer data plane, DESIGN.md §9).
+#
+# Unlike the bearer tokens above these are *capability grants for one
+# producer*: the service holds a per-endpoint peer secret (shared with that
+# endpoint at registration), and signs (producer, consumer, expires) with
+# it. The producer's PeerServer validates incoming grants against its own
+# secret — entirely offline, no service round-trip on the data path. TTLs
+# are short (seconds to minutes): a consumer re-resolves through the
+# service when its grant lapses, which is also the hook that lets the
+# service stop brokering a producer whose store dropped the refs.
+
+PEER_TOKEN_TTL = 60.0
+
+
+def _peer_sign(secret: bytes, producer: str, consumer: str,
+               expires: float) -> str:
+    msg = f"{producer}|{consumer}|{expires:.3f}".encode()
+    return hmac.new(secret, msg, hashlib.sha256).hexdigest()
+
+
+def mint_peer_token(secret: bytes, producer: str, consumer: str,
+                    ttl: float = PEER_TOKEN_TTL) -> "tuple[str, float]":
+    """Returns ``(token, expires)`` granting ``consumer`` fetch access to
+    ``producer``'s PeerServer until ``expires``."""
+    expires = time.time() + ttl
+    sig = _peer_sign(secret, producer, consumer, expires)
+    tok = json.dumps({"producer": producer, "consumer": consumer,
+                      "expires": expires, "sig": sig})
+    return tok, expires
+
+
+def validate_peer_token(secret: bytes, token: str, producer: str) -> str:
+    """Returns the consumer identity or raises AuthError."""
+    try:
+        d = json.loads(token)
+        t_producer = d["producer"]
+        consumer = d["consumer"]
+        expires = float(d["expires"])
+        sig = d["sig"]
+    except (ValueError, KeyError, TypeError) as e:
+        raise AuthError(f"malformed peer token: {e}") from e
+    if t_producer != producer:
+        raise AuthError("peer token for a different producer")
+    if time.time() > expires:
+        raise AuthError("peer token expired")
+    expect = _peer_sign(secret, t_producer, consumer, expires)
+    if not hmac.compare_digest(expect, sig):
+        raise AuthError("bad peer token signature")
+    return consumer

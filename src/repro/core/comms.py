@@ -387,7 +387,7 @@ class SocketReactor:
     fd can collide with a reused descriptor number.
     """
 
-    def __init__(self):
+    def __init__(self, name: str = "socket-reactor"):
         self._selector = selectors.DefaultSelector()
         self._wake_r, self._wake_w = socket.socketpair()
         self._wake_r.setblocking(False)
@@ -396,7 +396,7 @@ class SocketReactor:
         self._pending: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="socket-reactor")
+                                        name=name)
         self._thread.start()
 
     def add(self, member) -> None:

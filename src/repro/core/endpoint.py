@@ -63,9 +63,12 @@ from .protocol import (
     FnRequest,
     FnResponse,
     Heartbeat,
+    PeerData,
+    PeerGet,
     ProtocolError,
     Register,
     RegisterAck,
+    ResolvePeerAck,
     ResultBatch,
     ResultMsg,
     ShmAttach,
@@ -329,11 +332,14 @@ class EndpointAgent:
         speculation_factor: float = 4.0,
         speculation_min: float = 0.25,
         stage_results: bool = True,
+        stage_limit: int = SERVICE_PAYLOAD_LIMIT,
         extra_handler: Optional[Callable[[Any], None]] = None,
         result_batch: int = 32,
         result_linger: float = 0.002,
         dedup_capacity: int = 16384,
         dispatched_ttl: float = 900.0,
+        peer_server: Optional[Any] = None,
+        peer_client: Optional[Any] = None,
     ):
         self.endpoint_id = endpoint_id
         self.channel = channel
@@ -350,9 +356,23 @@ class EndpointAgent:
         self.speculation_factor = speculation_factor
         self.speculation_min = speculation_min
         self.stage_results = stage_results
+        # Stage-out threshold: results whose packed size exceeds it are
+        # parked in the local store and travel as DataRefs. Defaults to
+        # the paper's 10 MB service limit; shuffle-style workloads (and
+        # the p2p benchmarks) lower it so intermediates become refs and
+        # cross endpoint-to-endpoint instead of transiting the hub.
+        self.stage_limit = stage_limit
         # Non-task wire messages (FnResponse, RegisterAck on a re-dial)
         # are routed here — the remote runner's hook into the recv loop.
         self.extra_handler = extra_handler
+        # Peer data plane (DESIGN.md §9): the server answers other
+        # endpoints' direct fetches; the client resolves cross-endpoint
+        # DataRefs at stage-in. Its signaling (ResolvePeer/HubFetch) rides
+        # this agent's hub channel.
+        self.peer_server = peer_server
+        self.peer_client = peer_client
+        if peer_client is not None and peer_client.signal is None:
+            peer_client.signal = self._send_signal
 
         self.managers: Dict[str, Manager] = {}
         self._managers_lock = threading.RLock()
@@ -416,6 +436,10 @@ class EndpointAgent:
         self.coalescer.close()
         if self.strategy is not None:
             self.strategy.stop()
+        if self.peer_server is not None:
+            self.peer_server.close()
+        if self.peer_client is not None:
+            self.peer_client.close()
         with self._managers_lock:
             for m in self.managers.values():
                 m.stop()
@@ -485,11 +509,43 @@ class EndpointAgent:
                 self.coalescer.add_ack(
                     Ack(task_ids=[s.task_id for s in msg.tasks],
                         t_endpoint_recv=t_recv))
+            elif isinstance(msg, PeerGet):
+                # hub-relay serving: the service pulls a key from our
+                # store over the already-authenticated hub channel
+                self._serve_hub_get(msg)
+            elif (isinstance(msg, (ResolvePeerAck, PeerData))
+                  and self.peer_client is not None
+                  and self.peer_client.handle_signal(msg)):
+                pass                   # matched a waiting peer fetch
             elif self.extra_handler is not None:
                 try:
                     self.extra_handler(msg)
                 except Exception:
                     pass               # a bad handler never kills recv
+
+    def _send_signal(self, msg: Any) -> bool:
+        """PeerClient's signaling sender: one message to the service."""
+        return self.channel.send_to_service(to_wire(msg), tag="peer")
+
+    def _serve_hub_get(self, msg: PeerGet) -> None:
+        """Answer a relayed fetch (rung 3 of the fallback ladder): no
+        token check — the hub channel authenticated at Register."""
+        if self.store is None:
+            reply = PeerData(req_id=msg.req_id, key=msg.key, ok=False,
+                             error="endpoint has no store")
+        else:
+            try:
+                data = self.store.get_raw(msg.key)
+                reply = PeerData(req_id=msg.req_id, key=msg.key, ok=True,
+                                 data=data)
+            except KeyError:
+                reply = PeerData(req_id=msg.req_id, key=msg.key, ok=False,
+                                 error=f"no such key: {msg.key}")
+            except Exception as e:     # noqa: BLE001 — report, serve on
+                reply = PeerData(req_id=msg.req_id, key=msg.key, ok=False,
+                                 error=f"{type(e).__name__}: {e}")
+        env, segs = to_wire_parts(reply)
+        self.channel.send_parts_to_service(env, segs, tag="peer")
 
     def _enqueue(self, spec: TaskSpec, front: bool = False) -> None:
         self.tasks_received += 1
@@ -532,10 +588,12 @@ class EndpointAgent:
                     if payload.method == "pickle":
                         payload = resolve_inputs(
                             payload.unpack(), self.endpoint_id,
-                            self.store, self.transfer)
+                            self.store, self.transfer,
+                            peer=self.peer_client)
                 else:
                     payload = resolve_inputs(payload, self.endpoint_id,
-                                             self.store, self.transfer)
+                                             self.store, self.transfer,
+                                             peer=self.peer_client)
         return WorkItem(
             task_id=spec.task_id,
             container_type=spec.container_type,
@@ -642,7 +700,8 @@ class EndpointAgent:
                     try:
                         staged = stage_outputs(
                             result, self.endpoint_id, self.store,
-                            key_prefix=f"task/{res.task_id}")
+                            key_prefix=f"task/{res.task_id}",
+                            location=self._peer_location())
                     except Exception:
                         staged = None
                 if staged is None or staged is result:
@@ -659,10 +718,12 @@ class EndpointAgent:
                     manager_id=manager_id))
                 return
             if (self.stage_results and self.store is not None
-                    and len(packed) > SERVICE_PAYLOAD_LIMIT):
+                    and len(packed) > self.stage_limit):
                 staged = stage_outputs(result, self.endpoint_id, self.store,
                                        key_prefix=f"task/{res.task_id}",
-                                       packed=packed)
+                                       packed=packed,
+                                       limit=self.stage_limit,
+                                       location=self._peer_location())
                 packed = pack_buffer(staged, tag="ret")   # tiny DataRef
             result = packed
         self._send_result(ResultMsg(
@@ -671,6 +732,11 @@ class EndpointAgent:
             stamps=res.stamps, cold_start=res.cold_start,
             build_time=res.build_time, worker_id=res.worker_id,
             manager_id=manager_id))
+
+    def _peer_location(self) -> str:
+        """Producer address hint stamped into outgoing DataRefs."""
+        srv = self.peer_server
+        return srv.address if srv is not None else ""
 
     def _send_failure(self, task_id: str, error: str,
                       status: str = "FAILED") -> None:
@@ -727,9 +793,20 @@ class EndpointAgent:
         capacity, idle, queued, warm_idle, warm_total = self._hb_state
         with self._queue_lock:
             queued += len(self._queue)
+        # store inventory advertisement (peer plane): O(1) counter reads;
+        # the version stamp lets the service invalidate peer grants for
+        # producers whose store has mutated since the grant was minted
+        sv = sk = sb = 0
+        if self.store is not None:
+            try:
+                inv = self.store.inventory()
+                sv, sk, sb = inv.version, inv.keys, inv.nbytes
+            except Exception:
+                pass
         return Heartbeat(endpoint_id=self.endpoint_id, ts=time.time(),
                          queued=queued, idle_workers=idle, capacity=capacity,
-                         warm_idle=warm_idle, warm_total=warm_total)
+                         warm_idle=warm_idle, warm_total=warm_total,
+                         store_version=sv, store_keys=sk, store_bytes=sb)
 
     # -- fault tolerance: lost managers & stragglers --------------------------
     def _monitor_loop(self) -> None:
@@ -832,10 +909,27 @@ def demo_sleep(data):
     return None
 
 
+def demo_produce(data):
+    """Mint an ``n``-byte blob whose content encodes ``seed`` — returned
+    whole so the agent's stage-out turns it into a DataRef whenever it
+    exceeds the stage limit (peer-plane benchmarks & examples)."""
+    n = int(data.get("n", 65536))
+    seed = int(data.get("seed", 0))
+    return bytes([seed % 251]) * n
+
+
+def demo_gather(data):
+    """Sum the sizes of ``parts`` — each element arrives as real bytes
+    because stage-in resolved any DataRefs before execution."""
+    return sum(len(p) for p in data["parts"])
+
+
 def spawn_endpoint_process(address, token: str, *,
                            name: str = "remote-endpoint",
                            n_managers: int = 1, workers: int = 4,
-                           shm: bool = True, stderr=None):
+                           shm: bool = True, peer: bool = True,
+                           store_kind: str = "memory",
+                           stage_limit: Optional[int] = None, stderr=None):
     """Spawn ``python -m repro.core.endpoint`` as a child process and block
     until it prints its readiness line. Returns ``(proc, endpoint_id)``.
 
@@ -860,9 +954,14 @@ def spawn_endpoint_process(address, token: str, *,
     capture = tempfile.TemporaryFile("w+") if stderr is None else None
     argv = [sys.executable, "-m", "repro.core.endpoint",
             "--connect", address, "--token", token, "--name", name,
-            "--managers", str(n_managers), "--workers", str(workers)]
+            "--managers", str(n_managers), "--workers", str(workers),
+            "--store", store_kind]
+    if stage_limit is not None:
+        argv += ["--stage-limit", str(stage_limit)]
     if not shm:
         argv.append("--no-shm")
+    if not peer:
+        argv.append("--no-peer")
     proc = subprocess.Popen(
         argv,
         env=env, stdout=subprocess.PIPE,
@@ -953,6 +1052,8 @@ class RemoteEndpointRunner:
                  heartbeat_interval: float = 0.05,
                  register_timeout: float = 30.0,
                  shm: bool = True,
+                 peer: bool = True,
+                 peer_host: str = "127.0.0.1",
                  manager_kw: Optional[dict] = None, **agent_kw):
         self.address = (parse_hostport(address)
                         if isinstance(address, str) else address)
@@ -965,6 +1066,8 @@ class RemoteEndpointRunner:
         self.register_timeout = register_timeout
         self.shm = shm                 # advertise shared-memory support
         self.shm_attached = False
+        self.peer = peer               # run the peer data plane (DESIGN §9)
+        self.peer_host = peer_host
         self.manager_kw = manager_kw or {}
         self.agent_kw = agent_kw
         self.endpoint_id: Optional[str] = None
@@ -972,6 +1075,8 @@ class RemoteEndpointRunner:
         self.transport: Optional[TcpTransport] = None
         self.agent: Optional[EndpointAgent] = None
         self.fns: Optional[WireFunctionClient] = None
+        self.peer_server = None
+        self.peer_client = None
         self.re_registrations = 0
         self.rejected = False          # re-registration refused by service
 
@@ -987,15 +1092,34 @@ class RemoteEndpointRunner:
         leave a window where a drop re-dials without re-registering and
         the endpoint wedges (the service would just keep discarding the
         unregistered connection's heartbeats)."""
+        if self.peer:
+            # the peer server must listen before Register so the handshake
+            # can advertise its address; a store is mandatory for serving
+            from ..data import InMemoryKVStore
+            from .peer import PeerServer
+            store = self.agent_kw.get("store")
+            if store is None:
+                store = InMemoryKVStore()
+                self.agent_kw["store"] = store
+            self.peer_server = PeerServer("", store, host=self.peer_host)
         self.transport = TcpTransport(connect=self.address,
                                       on_connect=self._re_register)
         self.channel = Channel(transport=self.transport)
         self.endpoint_id = self._handshake()
         self.fns = WireFunctionClient(self.channel)
+        # The client side of the peer plane is always on: even with the
+        # server disabled (``peer=False``: nothing to advertise, nothing
+        # listening) a consumer still needs PeerClient.fetch_raw so
+        # cross-endpoint refs resolve via the hub relay — that IS the
+        # fallback lane the benchmarks compare against.
+        from .peer import PeerClient
+        self.peer_client = PeerClient(self.endpoint_id)
         self.agent = EndpointAgent(
             self.endpoint_id, self.channel, self.fns.fetch,
             router=self.router, heartbeat_interval=self.heartbeat_interval,
-            extra_handler=self._handle_extra, **self.agent_kw)
+            extra_handler=self._handle_extra,
+            peer_server=self.peer_server, peer_client=self.peer_client,
+            **self.agent_kw)
         for _ in range(self.n_managers):
             self.agent.add_manager(n_workers=self.workers_per_manager,
                                    **self.manager_kw)
@@ -1004,15 +1128,20 @@ class RemoteEndpointRunner:
 
     def stop(self) -> None:
         if self.agent is not None:
-            self.agent.stop()
+            self.agent.stop()          # closes peer server/client too
+        elif self.peer_server is not None:
+            self.peer_server.close()   # handshake never completed
         if self.channel is not None:
             self.channel.close()
 
     # -- handshake ------------------------------------------------------------
     def _register_msg(self, endpoint_id: str = "") -> dict:
+        peer_addr = (self.peer_server.address
+                     if self.peer_server is not None else "")
         return to_wire(Register(name=self.name, token=self._token,
                                 endpoint_id=endpoint_id,
-                                host=_socket.gethostname(), shm=self.shm))
+                                host=_socket.gethostname(), shm=self.shm,
+                                peer_addr=peer_addr))
 
     def _handshake(self) -> str:
         """First registration: the agent recv loop is not running yet, so
@@ -1036,6 +1165,7 @@ class RemoteEndpointRunner:
                     raise RegistrationError(
                         f"registration refused: {msg.error}")
                 self.endpoint_id = msg.endpoint_id
+                self._apply_peer_secret(msg)
                 self._maybe_attach_shm(msg)
                 return msg.endpoint_id
         raise RegistrationError(
@@ -1107,12 +1237,27 @@ class RemoteEndpointRunner:
         self.channel.send_to_service(self._register_msg(self.endpoint_id),
                                      tag="register")
 
+    def _apply_peer_secret(self, ack: RegisterAck) -> None:
+        """Arm the PeerServer with the id + secret the service assigned —
+        from here on it can validate peer-tokens offline. The secret is
+        stable across re-attach, so outstanding consumer grants survive a
+        re-registration."""
+        if self.peer_server is None or not ack.peer_secret:
+            return
+        self.peer_server.endpoint_id = ack.endpoint_id
+        try:
+            self.peer_server.set_secret(bytes.fromhex(ack.peer_secret))
+        except ValueError:
+            pass
+
     def _handle_extra(self, msg: Any) -> None:
         if isinstance(msg, FnResponse) and self.fns is not None:
             self.fns.handle_response(msg)
         elif isinstance(msg, RegisterAck):
             if msg.ok:
-                # ack for a re-registration: a fresh ring offer may ride it
+                # ack for a re-registration: a fresh ring offer may ride
+                # it, and the peer secret is re-delivered
+                self._apply_peer_secret(msg)
                 self._maybe_attach_shm(msg)
             else:
                 # Re-registration refused (e.g. a fully restarted service
@@ -1144,21 +1289,41 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--no-shm", action="store_true",
                    help="stay on TCP even when the service offers a "
                         "same-host shared-memory ring")
+    p.add_argument("--no-peer", action="store_true",
+                   help="disable the peer data plane: cross-endpoint "
+                        "DataRefs resolve via the hub relay only")
+    p.add_argument("--store", default="memory",
+                   choices=["memory", "sharedfs", "device"],
+                   help="local store kind (sharedfs uses a temp dir)")
+    p.add_argument("--stage-limit", type=int, default=SERVICE_PAYLOAD_LIMIT,
+                   help="stage-out threshold in bytes: results packing "
+                        "larger than this become DataRefs into the local "
+                        "store (default: the 10 MB service limit)")
     args = p.parse_args(argv)
     token = args.token
     if token.startswith("@"):
         with open(token[1:]) as f:
             token = f.read().strip()
+    from ..data import make_store
+    if args.store == "sharedfs":
+        import tempfile
+        store = make_store("sharedfs", root=tempfile.mkdtemp(
+            prefix="repro-ep-store-"))
+    else:
+        store = make_store(args.store)
     runner = RemoteEndpointRunner(
         args.connect, token, name=args.name, n_managers=args.managers,
         workers_per_manager=args.workers, router=args.router,
-        heartbeat_interval=args.heartbeat, shm=not args.no_shm)
+        heartbeat_interval=args.heartbeat, shm=not args.no_shm,
+        peer=not args.no_peer, store=store, stage_limit=args.stage_limit)
     eid = runner.start()
     # parseable readiness line — parents wait on this before submitting
-    # (field 2 is the endpoint id; the shm marker tells benches which
-    # transport actually engaged)
-    print(f"ENDPOINT_READY {eid} shm={1 if runner.shm_attached else 0}",
-          flush=True)
+    # (field 2 is the endpoint id; the shm/peer markers tell benches which
+    # planes actually engaged)
+    peer_addr = (runner.peer_server.address
+                 if runner.peer_server is not None else "0")
+    print(f"ENDPOINT_READY {eid} shm={1 if runner.shm_attached else 0} "
+          f"peer={peer_addr}", flush=True)
     try:
         while True:
             time.sleep(0.5)

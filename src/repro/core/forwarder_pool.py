@@ -26,7 +26,10 @@ from .protocol import (
     FnRequest,
     FnResponse,
     Heartbeat,
+    HubFetch,
+    PeerData,
     ProtocolError,
+    ResolvePeer,
     ResultBatch,
     ResultMsg,
     ShmAttach,
@@ -61,6 +64,8 @@ class EndpointLine:
         self.send_rtt = 0.0             # per-message latency (benchmarks)
         self.next_send_at = 0.0         # send_rtt gate; never blocks others
         self.advertised = Heartbeat(endpoint_id=endpoint_id)
+        self.peer_addr = ""             # PeerServer address from Register
+        #   ("" → endpoint runs no peer server; ResolvePeer answers no)
         # metrics
         self.dispatched = 0
         self.task_envelopes = 0         # TaskBatch frames sent (gauge:
@@ -108,6 +113,8 @@ class ForwarderPool:
         fn_resolver: Optional[Callable[[str], Tuple[bytes, bool]]] = None,
         on_shm_attach: Optional[Callable[["EndpointLine", ShmAttach],
                                          None]] = None,
+        on_peer_msg: Optional[Callable[["EndpointLine", object],
+                                       None]] = None,
     ):
         self.task_store = task_store
         self.batch_size = batch_size
@@ -119,6 +126,10 @@ class ForwarderPool:
         # endpoint confirmed/refused a shared-memory ring attach: the
         # service owns the rings, so the swap decision lives there
         self.on_shm_attach = on_shm_attach
+        # peer-plane signaling (ResolvePeer / HubFetch / relayed PeerData):
+        # grant minting and relay correlation are service policy, not
+        # transport — the pool only routes
+        self.on_peer_msg = on_peer_msg
 
         self.hub = ChannelHub()
         self._lines: Dict[str, EndpointLine] = {}
@@ -320,6 +331,15 @@ class ForwarderPool:
                     cb = self.on_shm_attach
                     if cb is not None:
                         cb(line, msg)
+                elif isinstance(msg, (ResolvePeer, HubFetch, PeerData)):
+                    cb = self.on_peer_msg
+                    if cb is not None:
+                        try:
+                            cb(line, msg)
+                        except Exception:
+                            # a malformed signaling frame must not kill
+                            # the shared recv loop; the requester times out
+                            pass
 
     def _handle_heartbeat(self, line: EndpointLine, hb: Heartbeat) -> None:
         line.last_heartbeat = time.time()

@@ -1,0 +1,476 @@
+"""Peer data plane (DESIGN.md §9): endpoint↔endpoint DataRef resolution.
+
+The third communication topology. funcX's data fabric moves intermediate
+data between endpoints without funneling bytes through the cloud service
+(paper §5); here every endpoint agent runs a :class:`PeerServer` — a
+TcpListener serving its local :class:`~repro.data.KVStore` over the same
+framed transport the hub channels use — and a :class:`PeerClient` that
+dials producers directly when stage-in meets a cross-endpoint DataRef.
+
+The service stays in the *control* path only (service-brokered
+signaling): endpoints advertise their peer listen address at Register,
+and a consumer asks the service ``ResolvePeer(producer)`` to learn the
+address plus a short-TTL HMAC peer-token minted with the producer's
+per-endpoint secret. The producer's PeerServer validates that token
+entirely offline — the service never touches the data path.
+
+Fallback ladder (each rung taken only when the one above fails):
+
+  1. local store / same-process store registry (shm-adjacent: zero wire)
+  2. direct peer TCP  — PeerGet/PeerData on a cached connection
+  3. hub relay        — HubFetch to the service, which pulls the key over
+                        the producer's already-attached hub channel
+
+Rung 3 is correct but expensive (two hops, bytes transit the hub); the
+service counts ``hub_relay_bytes`` so benchmarks can assert the happy
+path never takes it.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+from ..data.store import KVStore
+from ..data.transfer import DataRef
+from .auth import validate_peer_token
+from .comms import Channel, SocketReactor, TcpListener, TcpTransport, \
+    parse_hostport
+from .errors import AuthError
+from .protocol import HubFetch, PeerData, PeerGet, ResolvePeer, \
+    ResolvePeerAck, from_wire, to_wire, to_wire_parts
+
+
+class PeerError(Exception):
+    """A peer fetch failed for a reason a retry through the hub relay
+    cannot fix (missing key, refused token after refresh, bad reply)."""
+
+
+class PeerUnreachable(PeerError):
+    """The producer could not be dialed / the connection died mid-fetch —
+    the rung-3 hub relay is the right next move."""
+
+
+@dataclass
+class PeerStats:
+    """Consumer-side gauges: the bench invariants live here and on the
+    service's ``hub_relay_bytes``."""
+    direct_fetches: int = 0
+    direct_bytes: int = 0
+    relay_fetches: int = 0
+    relay_bytes: int = 0
+    dials: int = 0
+    dial_failures: int = 0
+    resolves: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(direct_fetches=self.direct_fetches,
+                    direct_bytes=self.direct_bytes,
+                    relay_fetches=self.relay_fetches,
+                    relay_bytes=self.relay_bytes,
+                    dials=self.dials, dial_failures=self.dial_failures,
+                    resolves=self.resolves)
+
+
+class PeerServer:
+    """Serves the endpoint's local store to authenticated peers.
+
+    One TcpListener on the shared reactor; each accepted peer connection
+    gets a serving loop on the listener's handshake thread (peer
+    connections are persistent and bounded by fleet size, so a thread per
+    peer is the simple shape — the reactor still owns all socket reads).
+    Requests are :class:`PeerGet` frames; replies are :class:`PeerData`
+    with the raw store bytes riding as a borrowed zero-copy segment.
+    """
+
+    def __init__(self, endpoint_id: str, store: KVStore,
+                 secret: bytes = b"", host: str = "127.0.0.1",
+                 port: int = 0, reactor: Optional[SocketReactor] = None):
+        self.endpoint_id = endpoint_id
+        self.store = store
+        self._secret = secret
+        self._closed = threading.Event()
+        self.serves = 0
+        self.bytes_out = 0
+        self.refused = 0
+        # the peer plane's reactor is per-agent, distinct from the hub's
+        # service-side one — name it so thread accounting can tell them
+        # apart (test_transport pins one "socket-reactor" per service)
+        self._own_reactor = reactor is None
+        if reactor is None:
+            reactor = SocketReactor(name="peer-reactor")
+        self._reactor = reactor
+        self._listener = TcpListener(host, port, self._serve,
+                                     reactor=reactor)
+        self.address = "%s:%d" % self._listener.address
+
+    def set_secret(self, secret: bytes) -> None:
+        """The secret arrives from the service in RegisterAck — until it
+        lands, every tokened request is refused."""
+        self._secret = secret
+
+    def close(self) -> None:
+        self._closed.set()
+        self._listener.close()
+        if self._own_reactor:
+            self._reactor.close()
+
+    # -- serving loop (one per peer connection) -------------------------------
+    def _serve(self, transport: TcpTransport, peer) -> None:
+        ch = Channel(transport=transport)
+        while not self._closed.is_set() and transport.connected:
+            got = ch.recv_at_service(timeout=0.25)
+            if got is None:
+                continue
+            env, _tag = got
+            try:
+                msg = from_wire(env)
+            except Exception:
+                continue                     # poison frame: drop
+            if isinstance(msg, PeerGet):
+                self._answer(ch, msg)
+        ch.close()
+
+    def _answer(self, ch: Channel, msg: PeerGet) -> None:
+        if self._secret:
+            try:
+                validate_peer_token(self._secret, msg.token,
+                                    self.endpoint_id)
+            except AuthError as e:
+                self.refused += 1
+                ch.send_to_endpoint(to_wire(PeerData(
+                    req_id=msg.req_id, key=msg.key, ok=False,
+                    error=f"refused: {e}")), tag="peer")
+                return
+        try:
+            data = self.store.get_raw(msg.key)
+        except KeyError:
+            ch.send_to_endpoint(to_wire(PeerData(
+                req_id=msg.req_id, key=msg.key, ok=False,
+                error=f"no such key: {msg.key}")), tag="peer")
+            return
+        except Exception as e:               # noqa: BLE001 — report, serve on
+            ch.send_to_endpoint(to_wire(PeerData(
+                req_id=msg.req_id, key=msg.key, ok=False,
+                error=f"{type(e).__name__}: {e}")), tag="peer")
+            return
+        env, segs = to_wire_parts(PeerData(
+            req_id=msg.req_id, key=msg.key, ok=True, data=data))
+        if ch.send_parts_to_endpoint(env, segs, tag="peer"):
+            self.serves += 1
+            self.bytes_out += len(data)
+
+
+class _PeerConn:
+    """One cached consumer→producer connection: a synchronously dialed
+    socket (fast failure — the channel-grade dialing transport redials
+    forever, which would stall the fallback ladder) plus a lock making
+    request/response cycles on it atomic."""
+
+    def __init__(self, addr: str, dial_timeout: float):
+        import socket as _socket
+        host, port = parse_hostport(addr)
+        sock = _socket.create_connection((host, port),
+                                         timeout=dial_timeout)
+        sock.settimeout(None)
+        try:
+            sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self.transport = TcpTransport(sock=sock)
+        self.channel = Channel(transport=self.transport)
+        self.addr = addr
+        self.lock = threading.Lock()
+
+    @property
+    def connected(self) -> bool:
+        return self.transport.connected
+
+    def close(self) -> None:
+        self.channel.close()
+
+
+class PeerClient:
+    """Consumer side: resolve-and-fetch with grant, connection, and value
+    caching.
+
+    The client doesn't own a hub channel; the endpoint agent hands it
+    ``signal`` — a callable that ships a protocol message to the service —
+    and routes every :class:`ResolvePeerAck` / relayed :class:`PeerData`
+    it receives back in through :meth:`handle_signal`. The client matches
+    replies to waiters by req_id.
+    """
+
+    GRANT_SLACK = 2.0          # refresh a grant this close to expiry
+
+    def __init__(self, endpoint_id: str,
+                 signal: Optional[Callable[[object], bool]] = None,
+                 dial_timeout: float = 2.0, fetch_timeout: float = 15.0,
+                 resolve_timeout: float = 5.0):
+        self.endpoint_id = endpoint_id
+        self.signal = signal
+        self.dial_timeout = dial_timeout
+        self.fetch_timeout = fetch_timeout
+        self.resolve_timeout = resolve_timeout
+        self.stats = PeerStats()
+        self._grants: Dict[str, ResolvePeerAck] = {}
+        self._conns: Dict[str, _PeerConn] = {}
+        self._lock = threading.RLock()
+        self._req_ids = itertools.count(1)
+        self._waiters: Dict[str, Tuple[threading.Event, list]] = {}
+
+    # -- signaling (rides the agent's hub channel) ----------------------------
+    def _next_req(self) -> str:
+        return f"{self.endpoint_id}:{next(self._req_ids)}"
+
+    def _rpc(self, req_id: str, msg, timeout: float):
+        """Send a signaling message and wait for its correlated reply."""
+        if self.signal is None:
+            return None
+        ev: threading.Event = threading.Event()
+        slot: list = []
+        with self._lock:
+            self._waiters[req_id] = (ev, slot)
+        try:
+            if not self.signal(msg):
+                return None
+            if not ev.wait(timeout):
+                return None
+            return slot[0] if slot else None
+        finally:
+            with self._lock:
+                self._waiters.pop(req_id, None)
+
+    def handle_signal(self, msg) -> bool:
+        """Feed a ResolvePeerAck or relayed PeerData from the agent's recv
+        loop; returns True when it matched a waiter."""
+        req_id = getattr(msg, "req_id", None)
+        if not req_id:
+            return False
+        with self._lock:
+            waiter = self._waiters.get(req_id)
+        if waiter is None:
+            return False
+        ev, slot = waiter
+        slot.append(msg)
+        ev.set()
+        return True
+
+    # -- grants + connections -------------------------------------------------
+    def _grant(self, producer: str, force: bool = False,
+               hint: str = "") -> ResolvePeerAck:
+        now = time.time()
+        with self._lock:
+            g = self._grants.get(producer)
+        if (g is not None and not force
+                and now < g.expires - self.GRANT_SLACK):
+            return g
+        if self.signal is None:
+            if hint:
+                # standalone (no service to broker): dial the ref's
+                # location hint with an empty token — only a tokenless
+                # PeerServer will serve it
+                return ResolvePeerAck(endpoint_id=producer, ok=True,
+                                      addr=hint, token="",
+                                      expires=now + 3600.0)
+            raise PeerUnreachable(
+                f"cannot resolve peer {producer}: no signaling channel")
+        req_id = self._next_req()
+        ack = self._rpc(req_id, ResolvePeer(
+            req_id=req_id, endpoint_id=producer,
+            consumer=self.endpoint_id), self.resolve_timeout)
+        self.stats.resolves += 1
+        if not isinstance(ack, ResolvePeerAck) or not ack.ok:
+            err = getattr(ack, "error", "resolve timed out")
+            raise PeerUnreachable(f"cannot resolve peer {producer}: {err}")
+        with self._lock:
+            self._grants[producer] = ack
+        return ack
+
+    def _conn(self, producer: str, addr: str) -> _PeerConn:
+        with self._lock:
+            conn = self._conns.get(producer)
+        if conn is not None and conn.connected and conn.addr == addr:
+            return conn
+        if conn is not None:
+            conn.close()
+        try:
+            self.stats.dials += 1
+            conn = _PeerConn(addr, self.dial_timeout)
+        except OSError as e:
+            self.stats.dial_failures += 1
+            raise PeerUnreachable(f"dial {addr} failed: {e}") from e
+        with self._lock:
+            old = self._conns.get(producer)
+            if old is not None and old is not conn and old.connected:
+                # lost the dial race: keep the established one
+                conn.close()
+                return old
+            self._conns[producer] = conn
+        return conn
+
+    def invalidate(self, producer: str) -> None:
+        with self._lock:
+            self._grants.pop(producer, None)
+            conn = self._conns.pop(producer, None)
+        if conn is not None:
+            conn.close()
+
+    def close(self) -> None:
+        with self._lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+            self._grants.clear()
+        for c in conns:
+            c.close()
+
+    # -- the fetch ladder -----------------------------------------------------
+    def fetch_direct(self, producer: str, key: str,
+                     hint: str = "") -> bytes:
+        """Rung 2: resolve, dial (or reuse), request, await the bytes."""
+        ack = self._grant(producer, hint=hint)
+        retried = False
+        while True:
+            conn = self._conn(producer, ack.addr)
+            req_id = self._next_req()
+            pd = self._request(conn, PeerGet(
+                req_id=req_id, key=key, token=ack.token,
+                consumer=self.endpoint_id))
+            if pd.ok:
+                # bytes-like, not bytes: large payloads arrive as a
+                # read-only view over the frame's dedicated recv buffer
+                # and flow into the consumer's store without a copy
+                data = pd.data if pd.data is not None else b""
+                self.stats.direct_fetches += 1
+                self.stats.direct_bytes += len(data)
+                return data
+            if pd.error.startswith("refused") and not retried:
+                # stale/expired token: one re-resolve with a fresh grant
+                retried = True
+                ack = self._grant(producer, force=True, hint=hint)
+                continue
+            raise PeerError(f"peer {producer} refused {key}: {pd.error}")
+
+    def _request(self, conn: _PeerConn, msg: PeerGet) -> PeerData:
+        with conn.lock:
+            if not conn.channel.send_to_service(to_wire(msg), tag="peer"):
+                conn.close()
+                raise PeerUnreachable("peer connection lost on send")
+            deadline = time.monotonic() + self.fetch_timeout
+            while True:
+                left = deadline - time.monotonic()
+                if left <= 0 or not conn.connected:
+                    conn.close()
+                    raise PeerUnreachable(
+                        "peer fetch timed out" if left <= 0
+                        else "peer connection died mid-fetch")
+                got = conn.channel.recv_at_endpoint(timeout=min(left, 0.25))
+                if got is None:
+                    continue
+                try:
+                    reply = from_wire(got[0])
+                except Exception:
+                    continue
+                if isinstance(reply, PeerData) \
+                        and reply.req_id == msg.req_id:
+                    return reply
+
+    def fetch_direct_many(self, producer: str, keys: list,
+                          hint: str = "") -> Dict[str, bytes]:
+        """Rung 2, pipelined: ship every PeerGet back-to-back on the
+        cached connection, then collect the replies. One round-trip's
+        latency for the whole batch instead of one per key — the server
+        answers a connection's requests in order, so replies stream back
+        while later requests are still in flight."""
+        ack = self._grant(producer, hint=hint)
+        conn = self._conn(producer, ack.addr)
+        reqs = [PeerGet(req_id=self._next_req(), key=k, token=ack.token,
+                        consumer=self.endpoint_id) for k in keys]
+        out: Dict[str, bytes] = {}
+        retry: list = []
+        with conn.lock:
+            for m in reqs:
+                if not conn.channel.send_to_service(to_wire(m),
+                                                    tag="peer"):
+                    conn.close()
+                    raise PeerUnreachable("peer connection lost on send")
+            pending = {m.req_id: m.key for m in reqs}
+            deadline = time.monotonic() + self.fetch_timeout
+            while pending:
+                left = deadline - time.monotonic()
+                if left <= 0 or not conn.connected:
+                    conn.close()
+                    raise PeerUnreachable(
+                        "peer fetch timed out" if left <= 0
+                        else "peer connection died mid-fetch")
+                got = conn.channel.recv_at_endpoint(
+                    timeout=min(left, 0.25))
+                if got is None:
+                    continue
+                try:
+                    reply = from_wire(got[0])
+                except Exception:
+                    continue
+                if not isinstance(reply, PeerData) \
+                        or reply.req_id not in pending:
+                    continue
+                key = pending.pop(reply.req_id)
+                if reply.ok:
+                    data = reply.data \
+                        if reply.data is not None else b""
+                    self.stats.direct_fetches += 1
+                    self.stats.direct_bytes += len(data)
+                    out[key] = data
+                elif reply.error.startswith("refused"):
+                    retry.append(key)       # stale token: retry singly
+                else:
+                    raise PeerError(
+                        f"peer {producer} refused {key}: {reply.error}")
+        for key in retry:
+            # fetch_direct re-resolves with a fresh grant on refusal
+            out[key] = self.fetch_direct(producer, key, hint=hint)
+        return out
+
+    def fetch_relay(self, producer: str, key: str) -> bytes:
+        """Rung 3: ask the service to pull the key over the producer's hub
+        channel. Bytes transit the hub — counted there as relay traffic."""
+        req_id = self._next_req()
+        pd = self._rpc(req_id, HubFetch(
+            req_id=req_id, endpoint_id=producer, key=key),
+            self.fetch_timeout)
+        if not isinstance(pd, PeerData) or not pd.ok:
+            err = getattr(pd, "error", "relay timed out")
+            raise PeerError(f"hub relay for {producer}/{key} failed: {err}")
+        data = bytes(pd.data) if pd.data is not None else b""
+        self.stats.relay_fetches += 1
+        self.stats.relay_bytes += len(data)
+        return data
+
+    def fetch_raw(self, ref: DataRef) -> bytes:
+        """Rungs 2→3 for one ref; rung 1 (local/same-process) is the
+        caller's (staging's) business. Exactly-once: the relay fires only
+        after the direct path has definitively failed."""
+        producer = ref.endpoint
+        try:
+            return self.fetch_direct(producer, ref.key,
+                                     hint=getattr(ref, "location", ""))
+        except PeerUnreachable:
+            self.invalidate(producer)
+            return self.fetch_relay(producer, ref.key)
+
+    def fetch_raw_many(self, refs: list) -> list:
+        """Rungs 2→3 for a same-producer batch (pipelined direct fetch,
+        per-key relay fallback). Returns values in ref order."""
+        if not refs:
+            return []
+        producer = refs[0].endpoint
+        hint = getattr(refs[0], "location", "")
+        try:
+            got = self.fetch_direct_many(
+                producer, [r.key for r in refs], hint=hint)
+            return [got[r.key] for r in refs]
+        except PeerUnreachable:
+            self.invalidate(producer)
+            return [self.fetch_relay(producer, r.key) for r in refs]

@@ -25,6 +25,22 @@ Wire kinds:
   ``fn_response``   service → endpoint   serialized function bytes (funcX ships
                                          serialized function bodies to agents)
 
+Peer data plane (DESIGN.md §9) — the third topology, endpoint↔endpoint:
+
+  ``resolve_peer``      endpoint → service   where does endpoint X's PeerServer
+                                             listen? (service-brokered signaling)
+  ``resolve_peer_ack``  service → endpoint   producer address + short-TTL HMAC
+                                             peer-token minted for the consumer
+  ``peer_get``          endpoint → endpoint  fetch raw store bytes behind a
+                                             DataRef key (direct TCP); also
+                                             service → endpoint on hub relay
+  ``peer_data``         endpoint → endpoint  the bytes (zero-copy segment) or
+                                             the refusal; also rides the hub
+                                             channels on relay fallback
+  ``hub_fetch``         endpoint → service   relay fallback: ask the service to
+                                             pull the key over the producer's
+                                             already-attached hub channel
+
 Pack-once data plane (DESIGN.md §5): task payloads and result values that
 are already :class:`~repro.serialization.PackedBuffer`\\ s travel inside the
 envelope as **opaque byte frames** (msgpack bin — one memcpy, zero
@@ -159,6 +175,13 @@ class Heartbeat:
     capacity: int = 0                  # total workers across managers
     warm_idle: Dict[str, int] = field(default_factory=dict)
     warm_total: Dict[str, int] = field(default_factory=dict)
+    # Store inventory advertisement (peer data plane, DESIGN.md §9):
+    # version-stamped like the warm-container dicts — the service uses the
+    # version to invalidate peer grants whose producer evicted refs, without
+    # the endpoint shipping a key list every beat.
+    store_version: int = 0
+    store_keys: int = 0
+    store_bytes: int = 0
 
 
 @dataclass
@@ -259,6 +282,7 @@ class Register:
     endpoint_id: str = ""
     host: str = ""                     # endpoint's hostname (shm negotiation)
     shm: bool = False                  # endpoint can attach shm rings
+    peer_addr: str = ""                # host:port of the PeerServer (DESIGN §9)
 
 
 @dataclass
@@ -272,6 +296,10 @@ class RegisterAck:
     endpoint_id: str = ""
     error: str = ""
     shm: Dict[str, Any] = field(default_factory=dict)
+    # Per-endpoint peer secret (hex), minted at first registration and
+    # stable across re-attach: the endpoint's PeerServer validates incoming
+    # peer-tokens against it locally — no service round-trip per fetch.
+    peer_secret: str = ""
 
 
 @dataclass
@@ -303,10 +331,96 @@ class FnResponse:
     error: str = ""
 
 
+@dataclass
+class ResolvePeer:
+    """Signaling lookup, consumer endpoint → service: where does
+    ``endpoint_id``'s PeerServer listen, and mint me a token for it."""
+    kind: ClassVar[str] = "resolve_peer"
+    req_id: str = ""
+    endpoint_id: str = ""              # producer being resolved
+    consumer: str = ""                 # requesting endpoint
+
+
+@dataclass
+class ResolvePeerAck:
+    kind: ClassVar[str] = "resolve_peer_ack"
+    req_id: str = ""
+    endpoint_id: str = ""
+    ok: bool = False
+    addr: str = ""                     # producer's peer listen address
+    token: str = ""                    # short-TTL HMAC peer-token
+    expires: float = 0.0               # epoch seconds the token dies
+    error: str = ""
+
+
+@dataclass
+class PeerGet:
+    """Fetch the raw store bytes behind a key. Direct form travels on a
+    peer TCP connection and must carry a valid peer-token; the relay form
+    travels service → producer over the (already authenticated) hub
+    channel with an empty token."""
+    kind: ClassVar[str] = "peer_get"
+    req_id: str = ""
+    key: str = ""
+    token: str = ""
+    consumer: str = ""
+
+
+@dataclass
+class HubFetch:
+    """Relay fallback, consumer endpoint → service: pull ``key`` from the
+    producer's store over its hub channel because the direct dial failed.
+    The answer comes back as a :class:`PeerData` with the same req_id."""
+    kind: ClassVar[str] = "hub_fetch"
+    req_id: str = ""
+    endpoint_id: str = ""              # producer
+    key: str = ""
+
+
+@dataclass
+class PeerData:
+    """The bytes behind a PeerGet/HubFetch — or the refusal. ``data`` is
+    the producer store's raw value, verbatim (usually a pack() frame, but
+    the store owes no such guarantee — it stays opaque bytes end to end);
+    it rides as an inline byte embed or, on segment-gathering transports,
+    as a borrowed zero-copy segment (same scheme as ``result_b``)."""
+    kind: ClassVar[str] = "peer_data"
+    req_id: str = ""
+    key: str = ""
+    ok: bool = False
+    data: Any = None                   # raw store bytes (bytes/memoryview)
+    error: str = ""
+
+    def to_dict(self, segments: Optional[list] = None) -> dict:
+        d: Dict[str, Any] = {"req_id": self.req_id, "key": self.key,
+                             "ok": self.ok}
+        data = self.data
+        if isinstance(data, PackedBuffer):
+            data = data.data
+        if data is not None:
+            _emit_payload(d, "data", data, segments)
+        if self.error:
+            d["error"] = self.error
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  segments: Optional[list] = None) -> "PeerData":
+        db = d.get("data_b")
+        if db is None and segments is not None:
+            seg = d.get("data_seg")
+            if seg is not None:
+                db = segments[seg]
+        return cls(req_id=d.get("req_id", ""), key=d.get("key", ""),
+                   ok=d.get("ok", False), data=db,
+                   error=d.get("error", ""))
+
+
 Message = object                      # union of the classes below
 WIRE_TYPES = {cls.kind: cls for cls in (
     TaskBatch, Ack, Heartbeat, ResultMsg, ResultBatch,
-    Register, RegisterAck, ShmAttach, FnRequest, FnResponse)}
+    Register, RegisterAck, ShmAttach, FnRequest, FnResponse,
+    ResolvePeer, ResolvePeerAck, PeerGet, HubFetch, PeerData)}
 
 
 def to_wire(msg, segments: Optional[list] = None) -> dict:
@@ -330,6 +444,9 @@ def to_wire(msg, segments: Optional[list] = None) -> dict:
                        for a in msg.acks]
         return env
     if isinstance(msg, ResultMsg):
+        env.update(msg.to_dict(segments))
+        return env
+    if isinstance(msg, PeerData):
         env.update(msg.to_dict(segments))
         return env
     for f in fields(msg):
@@ -368,5 +485,7 @@ def from_wire(env: dict):
                   for a in env.get("acks", [])])
     if cls is ResultMsg:
         return ResultMsg.from_dict(env, segs)
+    if cls is PeerData:
+        return PeerData.from_dict(env, segs)
     kwargs = {f.name: env[f.name] for f in fields(cls) if f.name in env}
     return cls(**kwargs)

@@ -11,6 +11,7 @@ results after retrieval.
 """
 from __future__ import annotations
 
+import os
 import pickle
 import inspect
 import socket as _socket
@@ -42,6 +43,7 @@ from .auth import (
     SCOPE_REGISTER_FUNCTION,
     SCOPE_RUN,
     Token,
+    mint_peer_token,
 )
 from .comms import (
     Channel,
@@ -62,12 +64,18 @@ from .errors import (
 )
 from .forwarder_pool import EndpointLine, ForwarderPool
 from .protocol import (
+    HubFetch,
+    PeerData,
+    PeerGet,
     ProtocolError,
     Register,
     RegisterAck,
+    ResolvePeer,
+    ResolvePeerAck,
     ShmAttach,
     from_wire,
     to_wire,
+    to_wire_parts,
 )
 from .routing import EndpointInfo, EndpointRouter, make_endpoint_router
 from .tasks import Task, TaskStatus, TaskStore
@@ -152,10 +160,26 @@ class FuncXService:
         # and awaiting the endpoint's ShmAttach confirm (DESIGN.md §7)
         self._pending_shm: Dict[str, Tuple[Tuple[ShmRing, ShmRing],
                                            TcpTransport]] = {}
+        # -- peer data plane signaling state (DESIGN.md §9) ---------------
+        # eid -> per-endpoint HMAC secret: minted at first Register, stable
+        # across reattach, shipped to the endpoint in RegisterAck so its
+        # PeerServer validates peer-tokens entirely offline
+        self._peer_secrets: Dict[str, bytes] = {}
+        # (producer, consumer) -> (grant, producer store_version at mint):
+        # ResolvePeer answers are cached until the token nears expiry OR
+        # the producer's advertised inventory version moves (the producer
+        # mutated/evicted keys — stale grants are GC'd, heartbeat-driven)
+        self._peer_grants: Dict[Tuple[str, str],
+                                Tuple[ResolvePeerAck, int]] = {}
+        # relay req_id -> (consumer eid, consumer's original req_id, key,
+        # start time): correlation for in-flight hub relays
+        self._relays: Dict[str, Tuple[str, str, str, float]] = {}
+        self.relay_timeout = 30.0
         self.pool = ForwarderPool(self.tasks, batch_size=forwarder_batch,
                                   heartbeat_timeout=heartbeat_timeout,
                                   fn_resolver=self._export_function_wire,
-                                  on_shm_attach=self._complete_shm)
+                                  on_shm_attach=self._complete_shm,
+                                  on_peer_msg=self._handle_peer_msg)
         self.pool.start()
         self._listener: Optional[TcpListener] = None
         self._reactor: Optional[SocketReactor] = None
@@ -174,6 +198,11 @@ class FuncXService:
         # symmetric to the result plane's envelopes-per-task gauge.
         self.submit_envelopes = 0
         self.forwarder_restarts = 0
+        # hub-relay gauges (peer plane rung 3): bytes that transited the
+        # service because a direct peer fetch was impossible. Benchmarks
+        # assert this stays 0 when peers are reachable.
+        self.hub_relays = 0
+        self.hub_relay_bytes = 0
 
     def shutdown(self) -> None:
         self._stop.set()
@@ -270,13 +299,27 @@ class FuncXService:
                       n_managers: int = 1, workers_per_manager: int = 4,
                       store: Optional[KVStore] = None,
                       router: str = "warming_aware",
+                      peer: bool = False,
                       manager_kw: Optional[dict] = None,
                       **agent_kw) -> Tuple[str, EndpointAgent]:
         """Convenience: register + construct + start a wired EndpointAgent
-        (what `funcx-endpoint start` does on a resource)."""
+        (what `funcx-endpoint start` does on a resource).
+
+        ``peer=True`` additionally runs the peer data plane on the agent
+        (PeerServer + PeerClient, DESIGN.md §9). Same-process endpoints
+        rarely need it — the shared TransferService registry already
+        resolves cross-endpoint refs with zero wire — but it gives tests a
+        full signaling + direct-TCP harness without subprocesses."""
         eid, channel = self.register_endpoint(token, name)
         store = store if store is not None else InMemoryKVStore()
         self.transfer.register_endpoint(eid, store)
+        if peer:
+            from .peer import PeerClient, PeerServer
+            server = PeerServer(eid, store,
+                                secret=self._peer_secret_for(eid))
+            self._note_peer_addr(eid, server.address)
+            agent_kw.setdefault("peer_server", server)
+            agent_kw.setdefault("peer_client", PeerClient(eid))
         agent = EndpointAgent(
             eid, channel, self.export_function,
             registry=self.containers, router=router, store=store,
@@ -362,9 +405,12 @@ class FuncXService:
         else:
             eid, _ = self.register_endpoint(token, msg.name or "remote",
                                             channel=channel)
+        self._note_peer_addr(eid, msg.peer_addr)
         shm_offer = self._offer_shm(eid, transport, msg)
         channel.send_to_endpoint(
-            to_wire(RegisterAck(ok=True, endpoint_id=eid, shm=shm_offer)),
+            to_wire(RegisterAck(ok=True, endpoint_id=eid, shm=shm_offer,
+                                peer_secret=self._peer_secret_for(eid)
+                                .hex())),
             tag="register")
 
     # --------------------------------------------------- shm ring negotiation
@@ -435,6 +481,165 @@ class FuncXService:
         for ring in (s2e, e2s):
             ring.close()
             ring.unlink()
+
+    # ------------------------------------------- peer-plane signaling (§9)
+    def _peer_secret_for(self, eid: str) -> bytes:
+        """Per-endpoint HMAC secret: minted once, stable across reattach
+        (a reconnecting endpoint keeps validating tokens it already has
+        outstanding grants for)."""
+        with self._lock:
+            secret = self._peer_secrets.get(eid)
+            if secret is None:
+                secret = self._peer_secrets[eid] = os.urandom(32)
+            return secret
+
+    def _note_peer_addr(self, eid: str, addr: str) -> None:
+        """Record the address an endpoint's Register advertised. A changed
+        address (re-registration on a new port) invalidates every cached
+        grant naming this producer — consumers re-resolve and get the new
+        address instead of dialing a dead listener until token expiry."""
+        try:
+            line = self.pool.line(eid)
+        except KeyError:
+            return
+        if line.peer_addr != addr:
+            with self._lock:
+                for k in [k for k in self._peer_grants if k[0] == eid]:
+                    del self._peer_grants[k]
+        line.peer_addr = addr
+
+    def _handle_peer_msg(self, line: EndpointLine, msg: Any) -> None:
+        """Pool recv-loop callback: signaling frames from endpoint hub
+        channels. Data never rides here except on the relay rung."""
+        if isinstance(msg, ResolvePeer):
+            self._answer_resolve(line, msg)
+        elif isinstance(msg, HubFetch):
+            self._start_relay(line, msg)
+        elif isinstance(msg, PeerData):
+            self._finish_relay(msg)
+
+    def _answer_resolve(self, line: EndpointLine, msg: ResolvePeer) -> None:
+        """Mint (or reuse) a short-TTL grant for consumer → producer.
+
+        Cache key is (producer, consumer); a cached grant is reused only
+        while (a) its token is comfortably unexpired, (b) the producer
+        still advertises the same peer address, and (c) the producer's
+        heartbeat inventory version hasn't moved — a version bump means
+        the producer's store mutated (possibly evicting the very key the
+        consumer is after), so the stale signaling entry is dropped and
+        re-minted (satellite GC, warm-dict-style version stamping)."""
+        producer = msg.endpoint_id
+        try:
+            pline = self.pool.line(producer)
+        except KeyError:
+            pline = None
+        if pline is None or not pline.peer_addr:
+            ack = ResolvePeerAck(
+                req_id=msg.req_id, endpoint_id=producer, ok=False,
+                error=(f"unknown endpoint {producer}" if pline is None
+                       else f"{producer} runs no peer server"))
+        else:
+            consumer = msg.consumer or line.endpoint_id
+            version = pline.advertised.store_version
+            key = (producer, consumer)
+            now = time.time()
+            with self._lock:
+                cached = self._peer_grants.get(key)
+            if (cached is not None and cached[1] == version
+                    and cached[0].addr == pline.peer_addr
+                    and now < cached[0].expires - 1.0):
+                g = cached[0]
+            else:
+                token, expires = mint_peer_token(
+                    self._peer_secret_for(producer), producer, consumer)
+                g = ResolvePeerAck(endpoint_id=producer, ok=True,
+                                   addr=pline.peer_addr, token=token,
+                                   expires=expires)
+                with self._lock:
+                    self._peer_grants[key] = (g, version)
+            ack = ResolvePeerAck(req_id=msg.req_id, endpoint_id=producer,
+                                 ok=True, addr=g.addr, token=g.token,
+                                 expires=g.expires)
+        line.channel.send_to_endpoint(to_wire(ack), tag="peer")
+
+    def _start_relay(self, line: EndpointLine, msg: HubFetch) -> None:
+        """Rung 3: pull the key over the producer's hub channel on the
+        consumer's behalf. The relay id replaces the consumer's req_id on
+        the producer leg so concurrent relays (and the producer's own
+        direct-serve traffic) can't collide; the correlation entry maps it
+        back. The producer-side PeerGet carries no token — the hub channel
+        was authenticated at Register."""
+        producer = msg.endpoint_id
+        try:
+            pline = self.pool.line(producer)
+        except KeyError:
+            pline = None
+        if pline is None or not (pline.endpoint_connected
+                                 and pline.channel.connected):
+            line.channel.send_to_endpoint(to_wire(PeerData(
+                req_id=msg.req_id, key=msg.key, ok=False,
+                error=f"relay: producer {producer} unavailable")),
+                tag="peer")
+            return
+        relay_id = f"relay:{uuid.uuid4().hex}"
+        with self._lock:
+            self._relays[relay_id] = (line.endpoint_id, msg.req_id,
+                                      msg.key, time.time())
+        ok = pline.channel.send_to_endpoint(to_wire(PeerGet(
+            req_id=relay_id, key=msg.key, consumer=line.endpoint_id)),
+            tag="peer")
+        if not ok:
+            with self._lock:
+                self._relays.pop(relay_id, None)
+            line.channel.send_to_endpoint(to_wire(PeerData(
+                req_id=msg.req_id, key=msg.key, ok=False,
+                error=f"relay: send to producer {producer} failed")),
+                tag="peer")
+
+    def _finish_relay(self, msg: PeerData) -> None:
+        """Producer answered a relayed PeerGet on its hub channel: route
+        the bytes to the waiting consumer, restoring its original req_id.
+        Late answers (consumer timed out, entry swept) are dropped."""
+        with self._lock:
+            entry = self._relays.pop(msg.req_id, None)
+        if entry is None:
+            return
+        consumer_eid, orig_req, _key, _t0 = entry
+        try:
+            cline = self.pool.line(consumer_eid)
+        except KeyError:
+            return                     # consumer gone — nothing to route to
+        self.hub_relays += 1
+        if msg.ok and msg.data is not None:
+            self.hub_relay_bytes += len(msg.data)
+        env, segs = to_wire_parts(PeerData(
+            req_id=orig_req, key=msg.key, ok=msg.ok, data=msg.data,
+            error=msg.error))
+        cline.channel.send_parts_to_endpoint(env, segs, tag="peer")
+
+    def _sweep_peer_state(self) -> None:
+        """Health-loop GC: expired grants, grants whose producer's
+        inventory version moved on (heartbeat-advertised — the satellite's
+        evicted-refs cleanup), and relay correlations nobody will answer."""
+        now = time.time()
+        with self._lock:
+            grants = list(self._peer_grants.items())
+            for rid, entry in list(self._relays.items()):
+                if now - entry[3] > self.relay_timeout:
+                    del self._relays[rid]
+        for key, (g, version) in grants:
+            drop = now >= g.expires
+            if not drop:
+                try:
+                    pline = self.pool.line(key[0])
+                    drop = (pline.advertised.store_version != version
+                            or pline.peer_addr != g.addr)
+                except KeyError:
+                    drop = True
+            if drop:
+                with self._lock:
+                    if self._peer_grants.get(key) == (g, version):
+                        del self._peer_grants[key]
 
     # -------------------------------------------------------------- discovery
     # (the paper's §10 future work: "APIs that allow users to manage and
@@ -765,6 +970,7 @@ class FuncXService:
             time.sleep(self._health_interval)
             if not self.pool.healthy and not self._stop.is_set():
                 self._restart_pool()
+            self._sweep_peer_state()
 
     def _restart_pool(self) -> None:
         """Replace a dead ForwarderPool, carrying over every endpoint's
@@ -778,11 +984,13 @@ class FuncXService:
         pool = ForwarderPool(self.tasks, batch_size=self.forwarder_batch,
                              heartbeat_timeout=self.heartbeat_timeout,
                              fn_resolver=self._export_function_wire,
-                             on_shm_attach=self._complete_shm)
+                             on_shm_attach=self._complete_shm,
+                             on_peer_msg=self._handle_peer_msg)
         with self._lock:
             for old_line in old.lines():
                 line = pool.register(old_line.endpoint_id, old_line.channel)
                 line.send_rtt = old_line.send_rtt
+                line.peer_addr = old_line.peer_addr
                 # in-flight first (they left the queue before anything
                 # still in it), statuses back to PENDING; skip finished
                 requeued = []

@@ -4,6 +4,7 @@ from .store import (
     InMemoryKVStore,
     KVStore,
     SharedFSStore,
+    StoreInventory,
     StoreStats,
     make_store,
 )
@@ -11,7 +12,7 @@ from .transfer import DataRef, TransferRecord, TransferService, TransferStatus
 
 __all__ = [
     "DataRef", "DeviceStore", "InMemoryKVStore", "KVStore",
-    "SERVICE_PAYLOAD_LIMIT", "SharedFSStore", "StoreStats", "TransferRecord",
-    "TransferService", "TransferStatus", "make_store", "resolve_inputs",
-    "stage_outputs",
+    "SERVICE_PAYLOAD_LIMIT", "SharedFSStore", "StoreInventory", "StoreStats",
+    "TransferRecord", "TransferService", "TransferStatus", "make_store",
+    "resolve_inputs", "stage_outputs",
 ]

@@ -23,6 +23,12 @@ from ..serialization import pack, unpack
 
 @dataclass
 class StoreStats:
+    """Op/byte counters. StoreStats itself is lock-free — every mutation
+    must happen under the owning store's lock (InMemoryKVStore/DeviceStore
+    reuse their data lock, SharedFSStore has a dedicated ``_stats_lock``
+    because its data plane is the filesystem). Readers wanting a coherent
+    view use the store's ``stats_snapshot()``, which takes the same lock;
+    ``as_dict()`` alone may tear between fields mid-increment."""
     sets: int = 0
     gets: int = 0
     bytes_in: int = 0
@@ -34,6 +40,17 @@ class StoreStats:
         return dict(sets=self.sets, gets=self.gets, bytes_in=self.bytes_in,
                     bytes_out=self.bytes_out, set_time=self.set_time,
                     get_time=self.get_time)
+
+
+@dataclass(frozen=True)
+class StoreInventory:
+    """Cheap store summary for the heartbeat advertisement (peer data
+    plane): ``version`` bumps on every mutation, so a consumer of the
+    advertisement can cache derived state (the service's peer grants)
+    keyed on it — warm-dict style version stamping."""
+    version: int
+    keys: int
+    nbytes: int
 
 
 class KVStore:
@@ -70,6 +87,15 @@ class KVStore:
     def mget(self, keys: Iterable[str]) -> List[Any]:
         return [self.get(k) for k in keys]
 
+    def inventory(self) -> StoreInventory:
+        """Version-stamped size summary; concrete stores override with an
+        O(1) counter-based answer."""
+        return StoreInventory(0, len(self.keys()), 0)
+
+    def stats_snapshot(self) -> Dict[str, float]:
+        """Coherent stats read (overridden to take the store's lock)."""
+        return self.stats.as_dict()
+
 
 class InMemoryKVStore(KVStore):
     """Redis analogue: lock-protected in-memory hash with optional capacity
@@ -82,6 +108,7 @@ class InMemoryKVStore(KVStore):
         self._data: "OrderedDict[str, Tuple[bytes, float]]" = OrderedDict()
         self._lock = threading.RLock()
         self._bytes = 0
+        self._version = 0
         self.max_bytes = max_bytes
         self.default_ttl = default_ttl
         self.stats = StoreStats()
@@ -96,9 +123,11 @@ class InMemoryKVStore(KVStore):
             self._data[key] = (data, expiry)
             self._data.move_to_end(key)
             self._bytes += len(data)
+            self._version += 1
             while self.max_bytes and self._bytes > self.max_bytes and self._data:
                 _, (old, _e) = self._data.popitem(last=False)
                 self._bytes -= len(old)
+                self._version += 1
             # stats mutate under the same lock — concurrent setters would
             # otherwise lose read-modify-write increments
             self.stats.sets += 1
@@ -112,6 +141,7 @@ class InMemoryKVStore(KVStore):
             if expiry < time.time():
                 del self._data[key]
                 self._bytes -= len(data)
+                self._version += 1
                 raise KeyError(key)
             self._data.move_to_end(key)
             self.stats.gets += 1
@@ -124,6 +154,7 @@ class InMemoryKVStore(KVStore):
             if key in self._data:
                 self._bytes -= len(self._data[key][0])
                 del self._data[key]
+                self._version += 1
 
     def keys(self) -> List[str]:
         with self._lock:
@@ -132,6 +163,14 @@ class InMemoryKVStore(KVStore):
     def exists(self, key: str) -> bool:
         with self._lock:
             return key in self._data
+
+    def inventory(self) -> StoreInventory:
+        with self._lock:
+            return StoreInventory(self._version, len(self._data), self._bytes)
+
+    def stats_snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return self.stats.as_dict()
 
     @property
     def nbytes(self) -> int:
@@ -150,6 +189,12 @@ class SharedFSStore(KVStore):
         os.makedirs(root, exist_ok=True)
         self.stats = StoreStats()
         self._stats_lock = threading.Lock()
+        # inventory counters: per-process approximation of the FS state
+        # (other writers sharing the root aren't visible — the heartbeat
+        # advertisement only needs this process's view)
+        self._version = 0
+        self._live_keys = 0
+        self._live_bytes = 0
 
     def _path(self, key: str) -> str:
         safe = hashlib.sha1(key.encode()).hexdigest()
@@ -158,6 +203,11 @@ class SharedFSStore(KVStore):
     def set_raw(self, key: str, data: bytes) -> None:
         t0 = time.perf_counter()
         path = self._path(key)
+        try:
+            old_size = os.path.getsize(path)
+            existed = True
+        except OSError:
+            old_size, existed = 0, False
         tmp = path + f".tmp{threading.get_ident()}"
         with open(tmp, "wb") as f:
             f.write(data)
@@ -169,6 +219,10 @@ class SharedFSStore(KVStore):
             self.stats.sets += 1
             self.stats.bytes_in += len(data)
             self.stats.set_time += time.perf_counter() - t0
+            self._version += 1
+            if not existed:
+                self._live_keys += 1
+            self._live_bytes += len(data) - old_size
 
     def get_raw(self, key: str) -> bytes:
         t0 = time.perf_counter()
@@ -181,10 +235,22 @@ class SharedFSStore(KVStore):
         return data
 
     def delete(self, key: str) -> None:
+        path = self._path(key)
         try:
-            os.remove(self._path(key))
+            size = os.path.getsize(path)
+            os.remove(path)
         except FileNotFoundError:
-            pass
+            return
+        except OSError:
+            size = 0
+            try:
+                os.remove(path)
+            except OSError:
+                return
+        with self._stats_lock:
+            self._version += 1
+            self._live_keys = max(0, self._live_keys - 1)
+            self._live_bytes = max(0, self._live_bytes - size)
 
     def keys(self) -> List[str]:
         return os.listdir(self.root)          # hashed names
@@ -192,9 +258,22 @@ class SharedFSStore(KVStore):
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))
 
+    def inventory(self) -> StoreInventory:
+        with self._stats_lock:
+            return StoreInventory(self._version, self._live_keys,
+                                  self._live_bytes)
+
+    def stats_snapshot(self) -> Dict[str, float]:
+        with self._stats_lock:
+            return self.stats.as_dict()
+
     def clear(self) -> None:
         shutil.rmtree(self.root, ignore_errors=True)
         os.makedirs(self.root, exist_ok=True)
+        with self._stats_lock:
+            self._version += 1
+            self._live_keys = 0
+            self._live_bytes = 0
 
 
 class DeviceStore(KVStore):
@@ -208,31 +287,84 @@ class DeviceStore(KVStore):
     def __init__(self):
         self._data: Dict[str, Any] = {}
         self._lock = threading.RLock()
+        self._version = 0
+        self._nbytes = 0               # running estimate (heartbeats poll)
         self.stats = StoreStats()
 
+    @staticmethod
+    def _value_bytes(value: Any) -> int:
+        # live arrays report device bytes; host bytes report their length;
+        # anything else counts 0 rather than paying a serialization
+        if isinstance(value, (bytes, bytearray, memoryview)):
+            return len(value)
+        return int(getattr(value, "nbytes", 0) or 0)
+
     def set(self, key: str, value: Any) -> None:
+        t0 = time.perf_counter()
+        nb = self._value_bytes(value)
         with self._lock:
+            old = self._data.get(key)
+            if old is not None:
+                self._nbytes -= self._value_bytes(old)
             self._data[key] = value
+            self._nbytes += nb
+            self._version += 1
             self.stats.sets += 1
+            self.stats.bytes_in += nb
+            self.stats.set_time += time.perf_counter() - t0
 
     def get(self, key: str) -> Any:
+        t0 = time.perf_counter()
         with self._lock:
             val = self._data[key]
             self.stats.gets += 1
+            self.stats.bytes_out += self._value_bytes(val)
+            self.stats.get_time += time.perf_counter() - t0
         return val
 
+    # The raw variants are the wire plane (transfer service, peer data
+    # plane). They used to delegate to set()/get(), which (a) double-dipped
+    # the object-layer op counters with zero bytes attached, and (b) on the
+    # inbound side parked the *wire frame* as the live value — a later
+    # get() handed headered bytes to the consumer. Now each raw op accounts
+    # exactly once with real byte totals, and set_raw decodes the frame
+    # back into a live object (falling back to the raw bytes for payloads
+    # that aren't pack() products).
+
     def set_raw(self, key: str, data: bytes) -> None:
-        self.set(key, data)
+        t0 = time.perf_counter()
+        try:
+            value = unpack(bytes(data))[0]
+        except Exception:
+            value = data
+        with self._lock:
+            old = self._data.get(key)
+            if old is not None:
+                self._nbytes -= self._value_bytes(old)
+            self._data[key] = value
+            self._nbytes += self._value_bytes(value)
+            self._version += 1
+            self.stats.sets += 1
+            self.stats.bytes_in += len(data)
+            self.stats.set_time += time.perf_counter() - t0
 
     def get_raw(self, key: str) -> bytes:
-        val = self.get(key)
-        if isinstance(val, bytes):
-            return val
-        return pack(val, tag=key)
+        t0 = time.perf_counter()
+        with self._lock:
+            val = self._data[key]
+        data = val if isinstance(val, bytes) else pack(val, tag=key)
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_out += len(data)
+            self.stats.get_time += time.perf_counter() - t0
+        return data
 
     def delete(self, key: str) -> None:
         with self._lock:
-            self._data.pop(key, None)
+            if key in self._data:
+                self._nbytes -= self._value_bytes(self._data[key])
+                del self._data[key]
+                self._version += 1
 
     def keys(self) -> List[str]:
         with self._lock:
@@ -241,6 +373,15 @@ class DeviceStore(KVStore):
     def exists(self, key: str) -> bool:
         with self._lock:
             return key in self._data
+
+    def inventory(self) -> StoreInventory:
+        with self._lock:
+            return StoreInventory(self._version, len(self._data),
+                                  max(0, self._nbytes))
+
+    def stats_snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return self.stats.as_dict()
 
 
 def make_store(kind: str, **kw) -> KVStore:

@@ -54,10 +54,18 @@ class DataRef:
 
     scheme "kv"     — intra-endpoint store key
     scheme "globus" — (endpoint_id, key) pair resolvable via TransferService
+                      or, since the peer data plane (DESIGN.md §9), by
+                      dialing the producing endpoint's PeerServer directly
+
+    ``location`` is the producer's peer listen address at staging time —
+    a *hint* only (the service's ResolvePeer answer is authoritative and
+    survives the producer re-registering on a new port); empty on refs
+    minted before the peer plane, which keeps old pickles decodable.
     """
     scheme: str
     endpoint: str
     key: str
+    location: str = ""
 
     def uri(self) -> str:
         return f"{self.scheme}://{self.endpoint}/{self.key}"

@@ -1,0 +1,243 @@
+"""Peer data plane (DESIGN.md §9): direct endpoint↔endpoint DataRef
+resolution with service-brokered signaling, HMAC peer-tokens, and the
+hub-relay fallback ladder."""
+import time
+
+import pytest
+
+from repro.core.auth import (
+    AuthError,
+    mint_peer_token,
+    validate_peer_token,
+)
+from repro.core.peer import PeerClient, PeerError, PeerServer
+from repro.core.protocol import ResolvePeerAck
+from repro.data import DataRef, InMemoryKVStore
+from conftest import start_tcp_endpoint, wait_until
+
+
+def produce_blob(data):
+    n = data["n"] if isinstance(data, dict) else data
+    return bytes((i * 31 + 7) % 251 for i in range(n))
+
+
+def blob_len(data):
+    blob = data["blob"] if isinstance(data, dict) else data
+    return len(blob)
+
+
+# -------------------------------------------------------------- peer tokens
+def test_peer_token_roundtrip():
+    secret = b"s" * 32
+    token, expires = mint_peer_token(secret, "prod", "cons")
+    assert expires > time.time()
+    assert validate_peer_token(secret, token, "prod") == "cons"
+
+
+def test_peer_token_refusals():
+    secret = b"s" * 32
+    token, _ = mint_peer_token(secret, "prod", "cons")
+    with pytest.raises(AuthError):                 # wrong producer
+        validate_peer_token(secret, token, "other")
+    with pytest.raises(AuthError):                 # wrong secret
+        validate_peer_token(b"x" * 32, token, "prod")
+    with pytest.raises(AuthError):                 # garbage
+        validate_peer_token(secret, "not json", "prod")
+    expired, _ = mint_peer_token(secret, "prod", "cons", ttl=-1.0)
+    with pytest.raises(AuthError):                 # expired
+        validate_peer_token(secret, expired, "prod")
+
+
+# ------------------------------------------------- standalone server/client
+def test_direct_fetch_via_location_hint():
+    """No service in the loop: a tokenless PeerServer serves its store to
+    a client that dials the ref's ``location`` hint."""
+    store = InMemoryKVStore()
+    blob = bytes(range(256)) * 1200
+    store.set_raw("k", blob)
+    server = PeerServer("prod", store)
+    client = PeerClient("cons")
+    try:
+        ref = DataRef("globus", "prod", "k", server.address)
+        assert client.fetch_raw(ref) == blob
+        assert client.stats.direct_fetches == 1
+        assert client.stats.direct_bytes == len(blob)
+        assert server.serves == 1
+    finally:
+        client.close()
+        server.close()
+
+
+def test_bad_token_refused_by_armed_server():
+    """A secret-armed PeerServer refuses forged and expired tokens; the
+    client retries once with a fresh grant, then surfaces PeerError."""
+    store = InMemoryKVStore()
+    store.set_raw("k", b"payload")
+    secret = b"z" * 32
+    server = PeerServer("prod", store, secret=secret)
+    client = PeerClient("cons")
+    try:
+        # forge a grant with the wrong secret: both the first try and the
+        # forced re-resolve (same poisoned cache path) must be refused
+        bad, expires = mint_peer_token(b"wrong" * 8, "prod", "cons")
+        client._grants["prod"] = ResolvePeerAck(
+            endpoint_id="prod", ok=True, addr=server.address,
+            token=bad, expires=expires)
+        with pytest.raises(PeerError):
+            client.fetch_direct("prod", "k")
+        assert server.refused >= 1
+        assert server.serves == 0
+
+        # a correctly minted token is accepted
+        tok, expires = mint_peer_token(secret, "prod", "cons")
+        client._grants["prod"] = ResolvePeerAck(
+            endpoint_id="prod", ok=True, addr=server.address,
+            token=tok, expires=expires)
+        assert client.fetch_direct("prod", "k") == b"payload"
+    finally:
+        client.close()
+        server.close()
+
+
+# ----------------------------------------------- full federation, real TCP
+def _two_endpoints(svc, client, address, **kw):
+    kw.setdefault("stage_limit", 1024)
+    a = start_tcp_endpoint(client, address, name="prod", **kw)
+    b = start_tcp_endpoint(client, address, name="cons", **kw)
+    return a, b
+
+
+def test_cross_endpoint_ref_resolves_peer_to_peer(tcp_service):
+    """The happy path: a staged-out result crosses endpoints over direct
+    peer TCP — zero relay bytes transit the hub."""
+    svc, client, address = tcp_service
+    a, b = _two_endpoints(svc, client, address)
+    try:
+        fid_p = client.register_function(produce_blob)
+        fid_c = client.register_function(blob_len)
+        ref = client.get_result(
+            client.run(fid_p, a.endpoint_id, data={"n": 64 * 1024}),
+            timeout=15)
+        assert isinstance(ref, DataRef)
+        assert ref.endpoint == a.endpoint_id
+        assert ref.location == a.peer_server.address
+        n = client.get_result(
+            client.run(fid_c, b.endpoint_id, data={"blob": ref}),
+            timeout=15)
+        assert n == 64 * 1024
+        assert svc.hub_relays == 0
+        assert svc.hub_relay_bytes == 0
+        assert b.peer_client.stats.direct_fetches == 1
+        assert b.peer_client.stats.direct_bytes >= 64 * 1024
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_producer_death_falls_back_to_relay_exactly_once(tcp_service):
+    """Kill the producer's peer listener between two fetches: the cached
+    connection dies, the re-dial fails, and the consumer relays through
+    the hub — exactly one relay, not a retry storm."""
+    svc, client, address = tcp_service
+    a, b = _two_endpoints(svc, client, address)
+    try:
+        fid_p = client.register_function(produce_blob)
+        fid_c = client.register_function(blob_len)
+        refs = [client.get_result(
+                    client.run(fid_p, a.endpoint_id, data={"n": 32 * 1024}),
+                    timeout=15) for _ in range(2)]
+        # first ref: direct fetch, connection cached
+        assert client.get_result(
+            client.run(fid_c, b.endpoint_id, data={"blob": refs[0]}),
+            timeout=15) == 32 * 1024
+        assert b.peer_client.stats.direct_fetches == 1
+        assert svc.hub_relays == 0
+        # producer's peer plane dies (agent + hub channel stay up)
+        a.agent.peer_server.close()
+        assert client.get_result(
+            client.run(fid_c, b.endpoint_id, data={"blob": refs[1]}),
+            timeout=15) == 32 * 1024
+        stats = b.peer_client.stats
+        assert stats.relay_fetches == 1          # fallback fired once
+        assert stats.direct_fetches == 1         # and only after direct
+        # the direct rung definitively failed first — either the cached
+        # connection died mid-fetch (no re-dial: dials stays 1) or the
+        # re-dial was refused (dial_failures counts it); anything beyond
+        # one extra dial would be a retry storm
+        assert stats.dial_failures >= 1 or stats.dials == 1
+        assert stats.dials <= 2
+        assert svc.hub_relays == 1
+        assert svc.hub_relay_bytes >= 32 * 1024
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_conn_cache_survives_reregistration(tcp_service):
+    """A producer re-registering at the same peer address must not force
+    consumers to re-dial: the grant is re-minted but the cached
+    connection keeps serving."""
+    svc, client, address = tcp_service
+    a, b = _two_endpoints(svc, client, address)
+    try:
+        fid_p = client.register_function(produce_blob)
+        fid_c = client.register_function(blob_len)
+        ref = client.get_result(
+            client.run(fid_p, a.endpoint_id, data={"n": 8 * 1024}),
+            timeout=15)
+        assert client.get_result(
+            client.run(fid_c, b.endpoint_id, data={"blob": ref}),
+            timeout=15) == 8 * 1024
+        assert b.peer_client.stats.dials == 1
+        # the producer re-registers (connection loss) at the same address
+        svc.pool.reattach(a.endpoint_id, svc.endpoints[a.endpoint_id]
+                          .channel)
+        svc._note_peer_addr(a.endpoint_id, a.peer_server.address)
+        # force the consumer's grant stale so the next fetch re-resolves
+        b.peer_client._grants.clear()
+        ref2 = client.get_result(
+            client.run(fid_p, a.endpoint_id, data={"n": 8 * 1024}),
+            timeout=15)
+        assert client.get_result(
+            client.run(fid_c, b.endpoint_id, data={"blob": ref2}),
+            timeout=15) == 8 * 1024
+        stats = b.peer_client.stats
+        assert stats.direct_fetches == 2
+        assert stats.dials == 1                  # no re-dial
+        assert svc.hub_relays == 0
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_heartbeat_inventory_gc_of_stale_grants(tcp_service):
+    """Heartbeats advertise the store's version-stamped inventory; when a
+    producer's store mutates, the service GCs the cached signaling grant
+    keyed on the old version (satellite: evicted-refs cleanup)."""
+    svc, client, address = tcp_service
+    a, b = _two_endpoints(svc, client, address)
+    try:
+        fid_p = client.register_function(produce_blob)
+        fid_c = client.register_function(blob_len)
+        ref = client.get_result(
+            client.run(fid_p, a.endpoint_id, data={"n": 4 * 1024}),
+            timeout=15)
+        assert client.get_result(
+            client.run(fid_c, b.endpoint_id, data={"blob": ref}),
+            timeout=15) == 4 * 1024
+        line = svc.pool.line(a.endpoint_id)
+        assert wait_until(lambda: line.advertised.store_version > 0)
+        assert line.advertised.store_keys >= 1
+        assert line.advertised.store_bytes > 0
+        key = (a.endpoint_id, b.endpoint_id)
+        assert key in svc._peer_grants
+        # the producer's store mutates → version moves → grant GC'd
+        a.agent.store.set("other", b"x" * 64)
+        old_version = line.advertised.store_version
+        assert wait_until(
+            lambda: line.advertised.store_version > old_version)
+        svc._sweep_peer_state()
+        assert key not in svc._peer_grants
+    finally:
+        a.stop()
+        b.stop()

@@ -93,3 +93,53 @@ def test_device_store_zero_copy():
     arr = jnp.arange(8)
     s.set("x", arr)
     assert s.get("x") is arr            # by reference, no copy
+
+
+def test_raw_path_stats_count_once(store):
+    """The raw (wire-plane) variants account exactly once with real byte
+    totals — the PR 2 fast path used to double-dip the object-layer
+    counters via delegation (and DeviceStore attached zero bytes)."""
+    from repro.serialization import pack
+    frame = bytes(pack("hello", tag="k"))
+    store.set_raw("k", frame)
+    store.get_raw("k")
+    snap = store.stats_snapshot()
+    assert snap["sets"] == 1 and snap["gets"] == 1
+    assert snap["bytes_in"] == len(frame)
+    assert snap["bytes_out"] >= len(frame) - 64   # device re-packs
+
+
+def test_device_store_set_raw_decodes_to_live_object():
+    """A wire frame landed via set_raw surfaces as the decoded object on
+    get() — not headered bytes (the old delegation bug)."""
+    from repro.serialization import pack
+    s = DeviceStore()
+    s.set_raw("k", bytes(pack({"x": 3}, tag="k")))
+    assert s.get("k") == {"x": 3}
+    s.set_raw("opaque", b"not a frame")           # non-pack payloads kept
+    assert s.get("opaque") == b"not a frame"
+
+
+def test_inventory_version_stamps(store):
+    """inventory() is version-stamped: every mutation moves the version,
+    reads don't; keys/nbytes track live contents."""
+    inv0 = store.inventory()
+    store.set("a", b"x" * 100)
+    inv1 = store.inventory()
+    assert inv1.version > inv0.version
+    assert inv1.keys == 1 and inv1.nbytes > 0
+    store.get("a")
+    assert store.inventory().version == inv1.version
+    store.delete("a")
+    inv2 = store.inventory()
+    assert inv2.version > inv1.version
+    assert inv2.keys == 0 and inv2.nbytes == 0
+
+
+def test_sharedfs_live_bytes_track_overwrite(tmp_path):
+    s = SharedFSStore(str(tmp_path / "fs"))
+    s.set_raw("k", b"x" * 1000)
+    assert s.inventory().nbytes == 1000
+    s.set_raw("k", b"y" * 200)            # replace, not accumulate
+    inv = s.inventory()
+    assert inv.keys == 1 and inv.nbytes == 200

@@ -41,12 +41,27 @@ With ``--executor`` it gates the futures-native submit plane
   starts paying the linger (a broken idle-line inline flush) shows up
   as 3×+ against the direct ``client.run`` roundtrip.
 
+With ``--p2p`` it gates the peer data plane (``sec6_p2p``, DESIGN.md
+§9):
+
+- ``p2p/peer/hub_relay_bytes`` must be exactly 0 — with every peer
+  listener up, no intermediate byte may transit the hub. Binary and
+  noise-immune: the fallback ladder either stops at the direct rung or
+  it doesn't.
+- ``p2p/speedup_vs_hub`` must be at least ``--p2p-floor`` (default 0.9:
+  a collapse detector — a broken pipelined fetch or a lane silently
+  relaying drops to ~1× or below; on loaded single-core runners the
+  measured margin jitters between ~1.5× idle and >2× under CPU
+  contention, and the real margin is recorded in the committed
+  artifact).
+
 Exit code 0 = pass, 1 = regression, 2 = malformed/missing artifacts.
 
     python -m tools.bench_gate --baseline BENCH_7.json \
         --fresh bench_fresh.json [--tolerance 0.4]
     python -m tools.bench_gate --shm --fresh bench_fresh.json
     python -m tools.bench_gate --executor --fresh bench_fresh.json
+    python -m tools.bench_gate --p2p --fresh bench_fresh.json
 """
 from __future__ import annotations
 
@@ -66,6 +81,10 @@ EXEC_SUITE = "sec5_executor"
 EXEC_ENVELOPES = "sec5/executor/submit_envelopes_per_task"
 EXEC_SPEEDUP = "sec5/executor/speedup_vs_percall"
 EXEC_LONE = "sec5/executor/lone_overhead_ratio"
+
+P2P_SUITE = "sec6_p2p"
+P2P_RELAY = "p2p/peer/hub_relay_bytes"
+P2P_SPEEDUP = "p2p/speedup_vs_hub"
 
 
 def load_suite(path: str, suite_key: str = SUITE) -> dict:
@@ -145,6 +164,34 @@ def gate_executor(args) -> int:
     return 0
 
 
+def gate_p2p(args) -> int:
+    fresh = load_suite(args.fresh, P2P_SUITE)
+    failures = []
+
+    relay = fresh.get(P2P_RELAY)
+    speedup = fresh.get(P2P_SPEEDUP)
+    if relay is None or speedup is None:
+        print(f"bench-gate: {P2P_RELAY} / {P2P_SPEEDUP} missing "
+              f"(got {relay}, {speedup})")
+        return 2
+    status = "ok" if relay == 0.0 else "REGRESSION"
+    print(f"bench-gate: p2p peer-lane relay bytes={relay:.0f} "
+          f"(invariant: 0) -> {status}")
+    if relay != 0.0:
+        failures.append(P2P_RELAY)
+    status = "ok" if speedup >= args.p2p_floor else "REGRESSION"
+    print(f"bench-gate: p2p speedup vs hub relay={speedup:.2f}x "
+          f"floor={args.p2p_floor:.2f}x -> {status}")
+    if speedup < args.p2p_floor:
+        failures.append(P2P_SPEEDUP)
+
+    if failures:
+        print(f"bench-gate: FAILED on {', '.join(failures)}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--baseline", default="BENCH_7.json",
@@ -176,12 +223,21 @@ def main() -> int:
                    help="lone executor.submit roundtrip vs client.run "
                         "must stay < this (a linger-on-idle regression "
                         "is 3x+)")
+    p.add_argument("--p2p", action="store_true",
+                   help="gate the sec6_p2p peer data plane suite instead "
+                        "of the result plane")
+    p.add_argument("--p2p-floor", type=float, default=0.9,
+                   help="fresh p2p/speedup_vs_hub must be >= this "
+                        "(default 0.9: collapse detector; the committed "
+                        "artifact records the real margin)")
     args = p.parse_args()
 
     if args.shm:
         return gate_shm(args)
     if args.executor:
         return gate_executor(args)
+    if args.p2p:
+        return gate_p2p(args)
 
     base = load_suite(args.baseline)
     fresh = load_suite(args.fresh)
