@@ -19,14 +19,20 @@
 #   make bench-p2p-gate       bench-p2p (tiny) + gate: zero relay bytes on
 #                             the peer lane, no speedup collapse vs the
 #                             hub-relay path
-#   make bench                full benchmark harness (writes BENCH_8.json)
+#   make bench-serving        DESIGN.md §10 jit model zoo over socket
+#                             endpoints: warmth-aware vs random routing
+#   make bench-serving-gate   bench-serving (tiny) + gate: warmth-aware
+#                             never loses to random on warm-hit rate, and
+#                             keeps the fleet mostly jit-warm
+#   make bench                full benchmark harness (writes BENCH_9.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast lint bench-smoke bench-serialization \
 	bench-results bench-results-gate bench-shm bench-shm-gate \
-	bench-executor bench-executor-gate bench-p2p bench-p2p-gate bench
+	bench-executor bench-executor-gate bench-p2p bench-p2p-gate \
+	bench-serving bench-serving-gate bench
 
 test:
 	python -m pytest -x -q
@@ -75,6 +81,14 @@ bench-p2p-gate:
 	python -m benchmarks.run --only sec6_p2p --tiny \
 		--artifact bench_fresh.json
 	python -m tools.bench_gate --p2p --fresh bench_fresh.json
+
+bench-serving:
+	python -m benchmarks.run --only sec10_serving
+
+bench-serving-gate:
+	python -m benchmarks.run --only sec10_serving --tiny \
+		--artifact bench_fresh.json
+	python -m tools.bench_gate --serving --fresh bench_fresh.json
 
 bench:
 	python -m benchmarks.run

@@ -35,9 +35,12 @@ SUITES = {
     "sec6_p2p": ("p2p_bench",
                  "§5/§6 peer data plane all-to-all shuffle "
                  "(DESIGN.md §9)"),
+    "sec10_serving": ("serving_bench",
+                      "DESIGN.md §10 serving fabric: jit-cache-aware "
+                      "routing vs random over socket endpoints"),
 }
 
-ARTIFACT = "BENCH_8.json"          # seeded from BENCH_7.json (PR 7 run)
+ARTIFACT = "BENCH_9.json"          # seeded from BENCH_8.json (PR 8 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

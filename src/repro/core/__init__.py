@@ -95,8 +95,11 @@ from .routing import (
     RandomEndpointRouter,
     RandomRouter,
     Router,
+    RoutingContext,
     WarmingAwareEndpointRouter,
     WarmingAwareRouter,
+    WarmingHashRouter,
+    WarmthView,
     make_endpoint_router,
     make_router,
 )
@@ -125,7 +128,7 @@ __all__ = [
     "Provider", "RandomEndpointRouter", "RandomRouter", "Register",
     "RegisterAck", "RegisteredFunction", "RegistrationError",
     "RemoteEndpointRunner", "ResultBatch", "ResultCoalescer", "ResultMsg",
-    "Router", "SCOPE_ENDPOINT",
+    "Router", "RoutingContext", "SCOPE_ENDPOINT",
     "SCOPE_REGISTER_FUNCTION", "SCOPE_RUN", "SCOPE_TRANSFER",
     "SegmentedFrame", "ShmAttach", "ShmRing", "ShmTransport",
     "SimCloudProvider", "SimSlurmProvider", "SocketReactor",
@@ -134,7 +137,8 @@ __all__ = [
     "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus", "TaskStore",
     "TcpListener", "TcpTransport", "Token", "Transport", "WIRE_STATS",
     "WarmCache",
-    "WarmingAwareEndpointRouter", "WarmingAwareRouter", "WireFunctionClient",
+    "WarmingAwareEndpointRouter", "WarmingAwareRouter", "WarmingHashRouter",
+    "WarmthView", "WireFunctionClient",
     "WorkItem", "WorkResult", "Worker", "decode_frame", "from_wire",
     "make_endpoint_router",
     "make_router", "parse_hostport", "proportional_allocation",

@@ -61,11 +61,15 @@ class FuncXClient:
 
     # -- execution --------------------------------------------------------------
     def run(self, function_id: str, endpoint_id: Optional[str] = None,
-            data: Any = None, *, container_type: Optional[str] = None) -> str:
+            data: Any = None, *, container_type: Optional[str] = None,
+            warmth_key: Optional[str] = None) -> str:
         """``endpoint_id=None`` lets the service route across the federation
-        via its configured EndpointRouter (DESIGN.md §4)."""
+        via its configured EndpointRouter (DESIGN.md §4); ``warmth_key``
+        refines placement toward workers holding a named warm artifact
+        (jit cache entry, DESIGN.md §10)."""
         return self.service.submit(self.token, function_id, endpoint_id,
-                                   data, container_type=container_type)
+                                   data, container_type=container_type,
+                                   warmth_key=warmth_key)
 
     def batch_run(self, requests: Sequence[Tuple[str, Optional[str], Any]]
                   ) -> List[str]:
@@ -73,11 +77,11 @@ class FuncXClient:
         return self.service.submit_batch(self.token, requests)
 
     def submit_packed_batch(
-            self, entries: Sequence[Tuple[str, Optional[str], Any,
-                                          Optional[str]]]) -> List[str]:
+            self, entries: Sequence[Sequence]) -> List[str]:
         """Land one pre-grouped flush of ``(function_id, endpoint_id,
-        payload, container_type)`` entries — the coalesced-submit entry
-        the executor's flusher uses (DESIGN.md §8)."""
+        payload, container_type[, warmth_key])`` entries — the
+        coalesced-submit entry the executor's flusher uses
+        (DESIGN.md §8)."""
         return self.service.submit_packed_batch(self.token, entries)
 
     def executor(self, *, endpoint_id: Optional[str] = None,

@@ -78,7 +78,7 @@ from .protocol import (
     to_wire,
     to_wire_parts,
 )
-from .routing import Router, make_router
+from .routing import Router, RoutingContext, WarmthView, make_router
 from .tasks import now
 from .warming import ContainerRegistry
 from .worker import WorkItem, WorkResult
@@ -410,6 +410,12 @@ class EndpointAgent:
         self._hb_key: Optional[tuple] = None
         self._hb_state: Tuple[int, int, int, Dict[str, int], Dict[str, int]] \
             = (0, 0, 0, {}, {})
+        # Per-warmth-key cold-build cost EWMA, fed by completed results
+        # and advertised on the next heartbeat (Heartbeat.build_costs) —
+        # the service's cost-aware federation router learns actual build
+        # costs instead of guessing (DESIGN.md §10).
+        self._build_costs: Dict[str, float] = {}
+        self._build_costs_lock = threading.Lock()
 
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -598,7 +604,8 @@ class EndpointAgent:
             task_id=spec.task_id,
             container_type=spec.container_type,
             fn=fn, wants_env=wants_env, payload=payload,
-            stamps=dict(spec.stamps))
+            stamps=dict(spec.stamps),
+            warmth_key=spec.warmth_key)
 
     def _dispatch_loop(self) -> None:
         """Routes queued tasks to managers. Manager state (warm types, free
@@ -628,8 +635,9 @@ class EndpointAgent:
             per_manager: Dict[str, list] = {}
             leftovers = []
             for spec in batch:
-                ct = spec.container_type
-                target = self.router.route(ct, infos)
+                ctx = RoutingContext(warmth_key=spec.warmth_key or None,
+                                     container_type=spec.container_type)
+                target = self.router.route(ctx, infos)
                 if target is None or room.get(target, 0) <= 0:
                     # the router's choice is saturated: requeue and retry
                     # against a fresh snapshot (never override the policy
@@ -640,8 +648,11 @@ class EndpointAgent:
                 for inf in infos:          # keep the snapshot coherent
                     if inf.manager_id == target:
                         inf.queued += 1
-                        if inf.warm_idle.get(ct, 0) > 0:
-                            inf.warm_idle[ct] -= 1
+                        view = inf.warmth
+                        for key in ctx.warmth_keys:
+                            if view.warm_idle(key) > 0:
+                                view.note_pick(key)
+                                break
                         inf.idle_workers = max(inf.idle_workers - 1, 0)
                         break
                 try:
@@ -674,6 +685,10 @@ class EndpointAgent:
         disp = self._dispatched_at.pop(res.task_id, None)
         if disp is not None:
             self._durations.append(time.perf_counter() - disp[0])
+            if res.cold_start and res.build_time > 0.0:
+                spec = disp[1]
+                self._observe_build(spec.warmth_key or spec.container_type,
+                                    res.build_time)
         self.tasks_completed += 1
         # a worker just freed: wake the dispatch loop iff it parked
         # overflow waiting for room (plain flag read keeps the common
@@ -733,6 +748,19 @@ class EndpointAgent:
             build_time=res.build_time, worker_id=res.worker_id,
             manager_id=manager_id))
 
+    def _observe_build(self, key: str, seconds: float) -> None:
+        """Cold-build feedback, both tiers (fixes the dead observe_build
+        hook): the agent's own router learns immediately; the service's
+        federation router learns from the EWMA advertised in the next
+        heartbeat's ``build_costs``."""
+        observe = getattr(self.router, "observe_build", None)
+        if observe is not None:
+            observe(key, seconds)
+        with self._build_costs_lock:
+            prev = self._build_costs.get(key)
+            self._build_costs[key] = (seconds if prev is None
+                                      else 0.8 * prev + 0.2 * seconds)
+
     def _peer_location(self) -> str:
         """Producer address hint stamped into outgoing DataRefs."""
         srv = self.peer_server
@@ -776,19 +804,17 @@ class EndpointAgent:
         managers = self._alive_managers()
         key = tuple((m.manager_id, m.version) for m in managers)
         if key != self._hb_key:
-            warm_idle: Dict[str, int] = {}
-            warm_total: Dict[str, int] = {}
+            views = []
             capacity = idle = queued = 0
             for m in managers:
                 inf = m.info()
                 capacity += inf.capacity
                 idle += inf.idle_workers
                 queued += inf.queued
-                for t, n in inf.warm_idle.items():
-                    warm_idle[t] = warm_idle.get(t, 0) + n
-                for t, n in inf.warm_total.items():
-                    warm_total[t] = warm_total.get(t, 0) + n
-            self._hb_state = (capacity, idle, queued, warm_idle, warm_total)
+                views.append(inf.warmth)
+            merged = WarmthView.merge(views)
+            self._hb_state = (capacity, idle, queued,
+                              merged.idle, merged.total)
             self._hb_key = key
         capacity, idle, queued, warm_idle, warm_total = self._hb_state
         with self._queue_lock:
@@ -803,9 +829,12 @@ class EndpointAgent:
                 sv, sk, sb = inv.version, inv.keys, inv.nbytes
             except Exception:
                 pass
+        with self._build_costs_lock:
+            build_costs = dict(self._build_costs)
         return Heartbeat(endpoint_id=self.endpoint_id, ts=time.time(),
                          queued=queued, idle_workers=idle, capacity=capacity,
                          warm_idle=warm_idle, warm_total=warm_total,
+                         build_costs=build_costs,
                          store_version=sv, store_keys=sk, store_bytes=sb)
 
     # -- fault tolerance: lost managers & stragglers --------------------------
@@ -859,6 +888,7 @@ class EndpointAgent:
                         self._enqueue(TaskSpec(
                             task_id=item.task_id, function_id="",
                             container_type=item.container_type,
+                            warmth_key=item.warmth_key,
                             payload=item.payload, stamps=item.stamps,
                             resolved=(item.fn, item.wants_env)), front=True)
 
@@ -929,7 +959,8 @@ def spawn_endpoint_process(address, token: str, *,
                            n_managers: int = 1, workers: int = 4,
                            shm: bool = True, peer: bool = True,
                            store_kind: str = "memory",
-                           stage_limit: Optional[int] = None, stderr=None):
+                           stage_limit: Optional[int] = None,
+                           containers: str = "", stderr=None):
     """Spawn ``python -m repro.core.endpoint`` as a child process and block
     until it prints its readiness line. Returns ``(proc, endpoint_id)``.
 
@@ -958,6 +989,8 @@ def spawn_endpoint_process(address, token: str, *,
             "--store", store_kind]
     if stage_limit is not None:
         argv += ["--stage-limit", str(stage_limit)]
+    if containers:
+        argv += ["--containers", containers]
     if not shm:
         argv.append("--no-shm")
     if not peer:
@@ -1299,6 +1332,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="stage-out threshold in bytes: results packing "
                         "larger than this become DataRefs into the local "
                         "store (default: the 10 MB service limit)")
+    p.add_argument("--containers", default="", metavar="MODULE:FUNC",
+                   help="container-spec installer: import MODULE and call "
+                        "FUNC(registry) before serving — how subprocess "
+                        "endpoints learn real ContainerSpecs (e.g. "
+                        "repro.serve.fabric:install for the jit model zoo)")
     args = p.parse_args(argv)
     token = args.token
     if token.startswith("@"):
@@ -1311,11 +1349,19 @@ def main(argv: Optional[List[str]] = None) -> int:
             prefix="repro-ep-store-"))
     else:
         store = make_store(args.store)
+    registry = None
+    if args.containers:
+        import importlib
+        mod_name, _, fn_name = args.containers.partition(":")
+        installer = getattr(importlib.import_module(mod_name), fn_name)
+        registry = ContainerRegistry()
+        installer(registry)
     runner = RemoteEndpointRunner(
         args.connect, token, name=args.name, n_managers=args.managers,
         workers_per_manager=args.workers, router=args.router,
         heartbeat_interval=args.heartbeat, shm=not args.no_shm,
-        peer=not args.no_peer, store=store, stage_limit=args.stage_limit)
+        peer=not args.no_peer, store=store, stage_limit=args.stage_limit,
+        registry=registry)
     eid = runner.start()
     # parseable readiness line — parents wait on this before submitting
     # (field 2 is the endpoint id; the shm/peer markers tell benches which

@@ -50,12 +50,14 @@ class FuncXExecutor:
 
     def __init__(self, client, *, endpoint_id: Optional[str] = None,
                  container_type: Optional[str] = None,
+                 warmth_key: Optional[str] = None,
                  batch_size: int = 32, linger: float = 0.002,
                  harvest_grace: float = 0.2):
         self.client = client
         self.service = client.service
         self.endpoint_id = endpoint_id
         self.container_type = container_type
+        self.warmth_key = warmth_key
         self._fn_ids: Dict[Callable, str] = {}
         self._fn_lock = threading.Lock()
         self._lock = threading.Lock()
@@ -88,17 +90,22 @@ class FuncXExecutor:
 
     def submit(self, fn, data: Any = None, *,
                endpoint_id: Optional[str] = None,
-               container_type: Optional[str] = None) -> Future:
+               container_type: Optional[str] = None,
+               warmth_key: Optional[str] = None) -> Future:
         """Park one invocation on the coalescer and return its Future.
         The payload is packed here, on the caller's thread — a 16-thread
-        storm packs in parallel and the flusher only groups bytes."""
+        storm packs in parallel and the flusher only groups bytes.
+        ``warmth_key`` flows into the flush's RoutingContext: federation
+        and manager routing both steer toward workers already holding
+        the named artifact (jit cache entry, DESIGN.md §10)."""
         if self._shutdown:
             raise RuntimeError("cannot submit after shutdown")
         fid = self._function_id(fn)
         packed = self.client.pack_payload(data)
         fut: Future = Future()
         self.coalescer.add((fid, endpoint_id or self.endpoint_id, packed,
-                            container_type or self.container_type, fut))
+                            container_type or self.container_type,
+                            warmth_key or self.warmth_key, fut))
         return fut
 
     def map(self, fn, payloads: Iterable[Any], *,
@@ -120,7 +127,7 @@ class FuncXExecutor:
         futures with the exception instead."""
         if self._cancel_parked:            # shutdown(cancel_futures=True)
             for entry in batch:
-                if entry[4].cancel():
+                if entry[5].cancel():
                     self.tasks_cancelled += 1
             return
         live = []
@@ -128,7 +135,7 @@ class FuncXExecutor:
             # a future whose cancel() landed before the flush never
             # becomes a task; everything else transitions to RUNNING
             # here, so cancel() from now on returns False
-            if entry[4].set_running_or_notify_cancel():
+            if entry[5].set_running_or_notify_cancel():
                 live.append(entry)
             else:
                 self.tasks_cancelled += 1
@@ -137,15 +144,15 @@ class FuncXExecutor:
         try:
             tids = self.service.submit_packed_batch(
                 self.client.token,
-                [(fid, eid, packed, ct)
-                 for fid, eid, packed, ct, _ in live])
+                [(fid, eid, packed, ct, wk)
+                 for fid, eid, packed, ct, wk, _ in live])
         except Exception as e:             # noqa: BLE001 — resolve futures
             for entry in live:
-                entry[4].set_exception(e)
+                entry[5].set_exception(e)
             return
         with self._lock:
             for tid, entry in zip(tids, live):
-                self._futures[tid] = entry[4]
+                self._futures[tid] = entry[5]
             self._unwatched.extend(tids)
             self.tasks_submitted += len(tids)
             self._ensure_harvester_locked()

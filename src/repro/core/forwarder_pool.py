@@ -39,7 +39,7 @@ from .protocol import (
     to_wire,
     to_wire_parts,
 )
-from .routing import EndpointInfo
+from .routing import EndpointInfo, WarmthView
 from .tasks import TaskStatus, TaskStore, now
 
 
@@ -90,6 +90,7 @@ class EndpointLine:
         with self._lock:
             service_queue = len(self.queue)
             in_flight = len(self.in_flight)
+        warmth = WarmthView.from_heartbeat(adv)   # snapshot-local copy
         return EndpointInfo(
             endpoint_id=self.endpoint_id,
             connected=self.endpoint_connected and self.channel.connected,
@@ -98,8 +99,8 @@ class EndpointLine:
             queued=adv.queued,
             idle_workers=adv.idle_workers,
             capacity=adv.capacity,
-            warm_idle=dict(adv.warm_idle),
-            warm_total=dict(adv.warm_total),
+            warm_idle=warmth.idle,
+            warm_total=warmth.total,
         )
 
 
@@ -130,6 +131,10 @@ class ForwarderPool:
         # grant minting and relay correlation are service policy, not
         # transport — the pool only routes
         self.on_peer_msg = on_peer_msg
+        # heartbeat-advertised build costs → cost-aware router feedback
+        # (set by the service when its router implements observe_build)
+        self.on_build_costs: Optional[Callable[[Dict[str, float]],
+                                               None]] = None
 
         self.hub = ChannelHub()
         self._lines: Dict[str, EndpointLine] = {}
@@ -275,7 +280,8 @@ class ForwarderPool:
             specs.append(TaskSpec(task_id=tid,
                                   function_id=task.function_id,
                                   container_type=task.container_type,
-                                  payload=task.payload))
+                                  payload=task.payload,
+                                  warmth_key=task.warmth_key))
         if not specs:
             return
         # scatter-gather send: the envelope carries segment indices and the
@@ -344,6 +350,11 @@ class ForwarderPool:
     def _handle_heartbeat(self, line: EndpointLine, hb: Heartbeat) -> None:
         line.last_heartbeat = time.time()
         line.advertised = hb
+        # feed measured cold-build costs to a cost-aware federation
+        # router (observe_build, DESIGN.md §10) — the service installs
+        # the hook when its EndpointRouter can consume them
+        if hb.build_costs and self.on_build_costs is not None:
+            self.on_build_costs(hb.build_costs)
         if not line.endpoint_connected:
             line.endpoint_connected = True          # reconnected
             with self._cond:

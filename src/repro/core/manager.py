@@ -13,7 +13,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .routing import ManagerInfo
+from .routing import ManagerInfo, WarmthView
 from .tasks import now
 from .warming import ContainerRegistry, proportional_allocation
 from .worker import Worker, WorkItem, WorkResult
@@ -176,20 +176,11 @@ class Manager:
             # clear *before* scanning: a transition racing the scan
             # re-dirties and the next call rebuilds again
             self._info_dirty = False
-            warm_idle: Dict[str, int] = collections.Counter()
-            warm_total: Dict[str, int] = collections.Counter()
-            idle = busy = 0
-            for w in self.workers:
-                types = w.warm_types()
-                for t in types:
-                    warm_total[t] += 1
-                if w.idle:
-                    idle += 1
-                    for t in types:
-                        warm_idle[t] += 1
-                else:
-                    busy += 1
-            cached = (idle, busy, dict(warm_idle), dict(warm_total))
+            scans = [(w.warm_types(), w.idle) for w in self.workers]
+            idle = sum(1 for _, is_idle in scans if is_idle)
+            busy = len(scans) - idle
+            view = WarmthView.tally(scans)
+            cached = (idle, busy, view.idle, view.total)
             self._info_cache = cached
         idle, busy, warm_idle, warm_total = cached
         return ManagerInfo(
@@ -283,7 +274,15 @@ class Manager:
     def _place(self, item: WorkItem, snap: "_WorkerSnapshot") -> bool:
         first_seen = item.stamps.setdefault("manager_recv", now())
         patient = (now() - first_seen) < self.affinity_patience
-        w = snap.pick(item.container_type, patient, self._mix)
+        w = None
+        if item.warmth_key and item.warmth_key != item.container_type:
+            # refined warmth (jit cache entry) beats bare container
+            # warmth: take a worker already holding the artifact if one
+            # is idle, else fall through to the container-type policy
+            w = next((ww for ww in snap.idle
+                      if item.warmth_key in snap.warm[ww]), None)
+        if w is None:
+            w = snap.pick(item.container_type, patient, self._mix)
         if w is None:
             self._deferred.append(item)
             self.deferrals += 1

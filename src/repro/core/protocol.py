@@ -118,6 +118,10 @@ class TaskSpec:
     container_type: str
     payload: Any = None
     stamps: Dict[str, float] = field(default_factory=dict)
+    # Warmth key refining the container type (DESIGN.md §10): routes the
+    # task toward workers advertising this key warm. Empty = the
+    # container type itself (the paper's original behaviour).
+    warmth_key: str = ""
     # Endpoint-internal only (set when a lost manager's task is requeued
     # with its already-resolved function); never serialized.
     resolved: Optional[Tuple] = None
@@ -125,6 +129,8 @@ class TaskSpec:
     def to_dict(self, segments: Optional[list] = None) -> dict:
         d = {"task_id": self.task_id, "function_id": self.function_id,
              "container_type": self.container_type}
+        if self.warmth_key:
+            d["warmth_key"] = self.warmth_key
         if self.stamps:
             d["stamps"] = self.stamps
         if isinstance(self.payload, PackedBuffer):
@@ -145,7 +151,8 @@ class TaskSpec:
                    else d.get("payload"))
         return cls(task_id=d["task_id"], function_id=d["function_id"],
                    container_type=d["container_type"],
-                   payload=payload, stamps=dict(d.get("stamps", {})))
+                   payload=payload, stamps=dict(d.get("stamps", {})),
+                   warmth_key=d.get("warmth_key", ""))
 
 
 @dataclass
@@ -182,6 +189,11 @@ class Heartbeat:
     store_version: int = 0
     store_keys: int = 0
     store_bytes: int = 0
+    # Measured cold-build costs (warmth_key → EWMA seconds), aggregated
+    # endpoint-side from worker build reports. The service feeds these to
+    # cost-aware federation routers (observe_build — DESIGN.md §10), so
+    # cold-cost estimates track reality instead of default_cold_cost.
+    build_costs: Dict[str, float] = field(default_factory=dict)
 
 
 @dataclass

@@ -77,7 +77,12 @@ from .protocol import (
     to_wire,
     to_wire_parts,
 )
-from .routing import EndpointInfo, EndpointRouter, make_endpoint_router
+from .routing import (
+    EndpointInfo,
+    EndpointRouter,
+    RoutingContext,
+    make_router,
+)
 from .tasks import Task, TaskStatus, TaskStore
 from .warming import ContainerRegistry, ContainerSpec
 
@@ -153,7 +158,7 @@ class FuncXService:
         self.forwarder_batch = forwarder_batch
         self.endpoint_router = (
             endpoint_router if isinstance(endpoint_router, EndpointRouter)
-            else make_endpoint_router(endpoint_router))
+            else make_router(endpoint_router, tier="endpoint"))
         self.shm = shm
         self.shm_ring_size = shm_ring_size
         # eid -> ((s2e, e2s) rings, tcp transport) offered in a RegisterAck
@@ -180,6 +185,15 @@ class FuncXService:
                                   fn_resolver=self._export_function_wire,
                                   on_shm_attach=self._complete_shm,
                                   on_peer_msg=self._handle_peer_msg)
+        # cost-aware federation routing learns real build costs from the
+        # heartbeat-advertised EWMAs (fixes the dead observe_build hook)
+        observe = getattr(self.endpoint_router, "observe_build", None)
+        if observe is not None:
+            def _feed_build_costs(costs: Dict[str, float],
+                                  _observe=observe) -> None:
+                for wk, secs in costs.items():
+                    _observe(wk, secs)
+            self.pool.on_build_costs = _feed_build_costs
         self.pool.start()
         self._listener: Optional[TcpListener] = None
         self._reactor: Optional[SocketReactor] = None
@@ -668,16 +682,18 @@ class FuncXService:
                 for r in recs]
 
     # ------------------------------------------------------------ federation routing
-    def route_endpoint(self, container_type: str) -> str:
-        """Federation-level endpoint selection (DESIGN.md §4): pick an
-        endpoint for a task submitted without one, using the configured
+    def route_endpoint(self, ctx) -> str:
+        """Federation-level endpoint selection (DESIGN.md §4, §10): pick
+        an endpoint for a task submitted without one, using the configured
         EndpointRouter over the pool's live EndpointInfo snapshots
         (service queue depth + in-flight first-hand; endpoint load and
-        warm-container state from heartbeats)."""
-        return self._route_from_snapshot(container_type,
+        warm-container/jit state from heartbeats). ``ctx`` is a
+        :class:`RoutingContext`; a bare container-type string is coerced
+        for back-compat."""
+        return self._route_from_snapshot(RoutingContext.coerce(ctx),
                                          self.pool.endpoint_infos())
 
-    def _route_from_snapshot(self, container_type: str,
+    def _route_from_snapshot(self, ctx: RoutingContext,
                              infos: List["EndpointInfo"]) -> str:
         """Route one task against ``infos`` and feed the pick back into the
         snapshot (queue depth up, warm-idle down) so consecutive picks from
@@ -685,12 +701,12 @@ class FuncXService:
         on the momentary best endpoint."""
         if not infos:
             raise EndpointUnavailable("no endpoints registered")
-        eid = self.endpoint_router.select(container_type, infos)
+        eid = self.endpoint_router.select_ctx(ctx, infos)
         if eid is None:
             raise EndpointUnavailable("endpoint router returned no endpoint")
         for inf in infos:
             if inf.endpoint_id == eid:
-                inf.note_pick(container_type)
+                inf.note_pick(ctx)
                 break
         return eid
 
@@ -726,18 +742,21 @@ class FuncXService:
 
     def submit(self, token: Token, function_id: str,
                endpoint_id: Optional[str] = None, payload: Any = None, *,
-               container_type: Optional[str] = None) -> str:
+               container_type: Optional[str] = None,
+               warmth_key: Optional[str] = None) -> str:
         identity = self.auth.validate(token, SCOPE_RUN)
         rf, packed = self._check_request(identity, function_id, payload)
         ct = container_type or rf.container_type
         if endpoint_id is None:
-            endpoint_id = self.route_endpoint(ct)
+            endpoint_id = self.route_endpoint(RoutingContext(
+                warmth_key=warmth_key, container_type=ct))
         with self._lock:
             rec = self.endpoints.get(endpoint_id)
         if rec is None:
             raise EndpointUnavailable(f"unknown endpoint {endpoint_id}")
         task = Task(function_id=function_id, endpoint_id=endpoint_id,
-                    payload=packed, container_type=ct)
+                    payload=packed, container_type=ct,
+                    warmth_key=warmth_key or "")
         task.stamp("submit")
         self.tasks.put(task)
         self.pool.enqueue(endpoint_id, task.task_id)
@@ -761,7 +780,7 @@ class FuncXService:
         # resolve + authorize each distinct function once per batch, not
         # one service-lock round-trip per request
         rf_cache: Dict[str, RegisteredFunction] = {}
-        checked: List[Tuple[str, str, PackedBuffer, str]] = []
+        checked: List[Tuple[str, str, PackedBuffer, str, str]] = []
         for fid, eid, payload in requests:
             rf = rf_cache.get(fid)
             if rf is None:
@@ -771,60 +790,58 @@ class FuncXService:
             if eid is None:
                 if snapshot is None:
                     snapshot = self.pool.endpoint_infos()
-                eid = self._route_from_snapshot(ct, snapshot)
+                eid = self._route_from_snapshot(
+                    RoutingContext(container_type=ct), snapshot)
             elif eid not in self.endpoints:
                 raise EndpointUnavailable(f"unknown endpoint {eid}")
-            checked.append((fid, eid, packed, ct))
-        tasks: List[Task] = []
-        per_endpoint: Dict[str, List[str]] = {}
-        for fid, eid, packed, ct in checked:
-            task = Task(function_id=fid, endpoint_id=eid, payload=packed,
-                        container_type=ct)
-            task.stamp("submit")
-            tasks.append(task)
-            per_endpoint.setdefault(eid, []).append(task.task_id)
+            checked.append((fid, eid, packed, ct, ""))
         return self._land_checked(checked)
 
     def submit_packed_batch(
             self, token: Token,
-            entries: Sequence[Tuple[str, Optional[str], Any, Optional[str]]]
+            entries: Sequence[Sequence]
     ) -> List[str]:
         """Coalesced-submit entry point (DESIGN.md §8): land one flush of
         pre-grouped submissions — ``(function_id, endpoint_id, payload,
-        container_type)`` tuples, payloads typically already
+        container_type[, warmth_key])`` tuples, payloads typically already
         :class:`PackedBuffer`\\ s (the executor packs on the caller's
         thread; pack-once passes them through byte-identical here).
 
         The token is validated once for the whole flush and each distinct
         function is resolved once. Endpoint-less entries are routed
-        **per flush**: grouped by container type and routed via
-        ``EndpointRouter.select_many`` against a single snapshot with
-        pick feedback, so a 32-task flush spreads over the fleet instead
-        of piling onto the momentary best endpoint. Each endpoint's share
-        then lands with one ``put_many`` + ``enqueue_many`` — service
-        cost per *envelope*, not per task — and the pool's dispatch loop
-        turns it into one ``TaskBatch`` wire frame per endpoint."""
+        **per flush**: grouped by routing context (container type +
+        warmth key) and routed via ``EndpointRouter.select_many`` against
+        a single snapshot with pick feedback, so a 32-task flush spreads
+        over the fleet instead of piling onto the momentary best
+        endpoint. Each endpoint's share then lands with one ``put_many``
+        + ``enqueue_many`` — service cost per *envelope*, not per task —
+        and the pool's dispatch loop turns it into one ``TaskBatch`` wire
+        frame per endpoint."""
         identity = self.auth.validate(token, SCOPE_RUN)
         rf_cache: Dict[str, RegisteredFunction] = {}
         checked: List[List] = []
-        for fid, eid, payload, ct in entries:
+        for entry in entries:
+            fid, eid, payload, ct = entry[:4]
+            wk = entry[4] if len(entry) > 4 and entry[4] else ""
             rf = rf_cache.get(fid)
             if rf is None:
                 rf = rf_cache[fid] = self._resolve_function(identity, fid)
             packed = self._pack_checked(payload)
             if eid is not None and eid not in self.endpoints:
                 raise EndpointUnavailable(f"unknown endpoint {eid}")
-            checked.append([fid, eid, packed, ct or rf.container_type])
+            checked.append([fid, eid, packed, ct or rf.container_type, wk])
         unrouted = [c for c in checked if c[1] is None]
         if unrouted:
             infos = self.pool.endpoint_infos()
             if not infos:
                 raise EndpointUnavailable("no endpoints registered")
-            by_ct: Dict[str, List[List]] = {}
+            by_ctx: Dict[Tuple[str, str], List[List]] = {}
             for c in unrouted:
-                by_ct.setdefault(c[3], []).append(c)
-            for ct, group in by_ct.items():
-                picks = self.endpoint_router.select_many(ct, infos,
+                by_ctx.setdefault((c[3], c[4]), []).append(c)
+            for (ct, wk), group in by_ctx.items():
+                ctx = RoutingContext(warmth_key=wk or None,
+                                     container_type=ct)
+                picks = self.endpoint_router.select_many(ctx, infos,
                                                          len(group))
                 if len(picks) < len(group):
                     raise EndpointUnavailable(
@@ -834,16 +851,16 @@ class FuncXService:
         return self._land_checked([tuple(c) for c in checked])
 
     def _land_checked(
-            self, checked: Sequence[Tuple[str, str, PackedBuffer, str]]
+            self, checked: Sequence[Tuple[str, str, PackedBuffer, str, str]]
     ) -> List[str]:
         """Store + enqueue fully validated/routed requests: one store lock
         for the whole batch, one pool round-trip per endpoint group (each
         group counts as one submit envelope — the DESIGN.md §8 gauge)."""
         tasks: List[Task] = []
         per_endpoint: Dict[str, List[str]] = {}
-        for fid, eid, packed, ct in checked:
+        for fid, eid, packed, ct, wk in checked:
             task = Task(function_id=fid, endpoint_id=eid, payload=packed,
-                        container_type=ct)
+                        container_type=ct, warmth_key=wk)
             task.stamp("submit")
             tasks.append(task)
             per_endpoint.setdefault(eid, []).append(task.task_id)

@@ -51,6 +51,7 @@ class Task:
     payload: Any                       # PackedBuffer (pack-once plane) or a
     #                                    plain object on legacy/test paths
     container_type: str                # compile signature / container image
+    warmth_key: str = ""               # refined warmth key (DESIGN.md §10)
     task_id: str = field(default_factory=new_task_id)
     status: TaskStatus = TaskStatus.PENDING
     result: Any = None

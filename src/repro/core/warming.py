@@ -44,17 +44,43 @@ class Container:
 
 
 class ContainerRegistry:
-    """Service/endpoint-level registry of container specs (image registry)."""
+    """Service/endpoint-level registry of container specs (image registry).
+
+    Beyond enumerated specs, a *spec factory* can claim a key prefix
+    (``register_factory("jit/", fn)``): on a registry miss the factory
+    mints the spec for that concrete type on first demand. This is how
+    the serving fabric (DESIGN.md §10) exposes the whole model zoo —
+    every ``jit/<arch>/<step>/<bucket>`` combination — without
+    enumerating the cross product up front."""
 
     def __init__(self):
         self._specs: Dict[str, ContainerSpec] = {}
+        self._factories: List[Tuple[str, Callable[[str], ContainerSpec]]] = []
         self._lock = threading.RLock()
 
     def register(self, spec: ContainerSpec) -> None:
         with self._lock:
             self._specs[spec.container_type] = spec
 
+    def register_factory(self, prefix: str,
+                         factory: Callable[[str], ContainerSpec]) -> None:
+        """``factory(container_type) -> ContainerSpec`` for any type
+        starting with ``prefix``. Later registrations win (prepended)."""
+        with self._lock:
+            self._factories.insert(0, (prefix, factory))
+
     def get(self, container_type: str) -> ContainerSpec:
+        with self._lock:
+            spec = self._specs.get(container_type)
+            if spec is not None:
+                return spec
+            factories = list(self._factories)
+        for prefix, factory in factories:
+            if container_type.startswith(prefix):
+                spec = factory(container_type)
+                if spec is not None:
+                    self.register(spec)
+                    return spec
         with self._lock:
             if container_type not in self._specs:
                 # bare python environment — no build cost
@@ -90,6 +116,7 @@ class WarmCache:
         self.idle_timeout = idle_timeout
         self.policy = policy
         self._warm: Dict[str, Container] = {}
+        self._noted: Dict[str, float] = {}   # warmth keys sans container
         self._lock = threading.RLock()
         self.stats = WarmStats()
         # warm-set membership change hook (Manager's incremental info())
@@ -102,12 +129,33 @@ class WarmCache:
 
     # -- queries -------------------------------------------------------------
     def warm_types(self) -> List[str]:
+        """Every warmth key this worker is warm for: built containers
+        plus noted keys (function-held artifacts, see note_warm)."""
         with self._lock:
-            return list(self._warm)
+            if not self._noted:
+                return list(self._warm)
+            out = list(self._warm)
+            out.extend(k for k in self._noted if k not in self._warm)
+            return out
 
     def is_warm(self, container_type: str) -> bool:
         with self._lock:
-            return container_type in self._warm
+            return (container_type in self._warm
+                    or container_type in self._noted)
+
+    # -- warmth without a container -------------------------------------------
+    def note_warm(self, key: str) -> None:
+        """Advertise warmth for an artifact this worker holds *outside*
+        the container cache — e.g. a function-managed jit cache keyed by
+        a task's warmth_key (DESIGN.md §10). Noted keys ride
+        ``warm_types()`` into the same heartbeat dicts as containers;
+        they occupy no slot and are bounded LRU-style on their own."""
+        with self._lock:
+            self._noted.pop(key, None)
+            self._noted[key] = time.perf_counter()
+            while len(self._noted) > max(self.slots * 4, 8):
+                self._noted.pop(next(iter(self._noted)))
+        self._notify()
 
     # -- acquire -------------------------------------------------------------
     def get_or_build(self, container_type: str) -> Tuple[Container, bool]:

@@ -31,6 +31,10 @@ class WorkItem:
     wants_env: bool
     payload: Any
     stamps: Dict[str, float]
+    # Warmth key refining the container type (DESIGN.md §10): names a
+    # function-held artifact (e.g. a jit cache entry) this execution
+    # creates/reuses; the worker advertises it warm after the run.
+    warmth_key: str = ""
 
 
 @dataclass
@@ -161,6 +165,11 @@ class Worker(threading.Thread):
             error = f"{type(e).__name__}: {e}"
             tb = traceback.format_exc()
         stamps["worker_end"] = now()
+        if (status == "SUCCESS" and item.warmth_key
+                and item.warmth_key != item.container_type):
+            # the function-held artifact (jit cache entry, ...) now lives
+            # in this worker's process: advertise it like a warm container
+            self.cache.note_warm(item.warmth_key)
         self.tasks_done += 1
         if self._killed:
             return                           # result lost with the node

@@ -1,4 +1,21 @@
+from .fabric import (
+    JIT_PREFIX,
+    install,
+    jit_key,
+    pad_to_bucket,
+    parse_jit_key,
+    register_zoo,
+    serve_decode,
+    serve_generate,
+    serve_prefill,
+    shape_bucket,
+)
 from .sampler import sample
 from .serve_step import generate, make_decode, make_prefill
 
-__all__ = ["generate", "make_decode", "make_prefill", "sample"]
+__all__ = [
+    "JIT_PREFIX", "generate", "install", "jit_key", "make_decode",
+    "make_prefill", "pad_to_bucket", "parse_jit_key", "register_zoo",
+    "sample", "serve_decode", "serve_generate", "serve_prefill",
+    "shape_bucket",
+]

@@ -1,0 +1,204 @@
+"""Serving fabric (DESIGN.md §10): the jax_pallas model zoo behind funcX.
+
+Every ``(arch, step, shape-bucket)`` combination is one **warmth key** —
+``jit/<arch>/<step>/b<bucket>`` — used as the task's container type:
+workers build the jit-compiled executables (+ resident params) as the
+container environment, so the first request per key pays the real
+``jax.jit`` compile (the cold start the paper measures for containers)
+and the WarmCache advertises the key through the ordinary warm dicts.
+Routing — federation and manager tier alike — then steers requests for a
+model/shape toward endpoints and workers already holding that compiled
+executable, exactly as it steers toward warm containers.
+
+The zoo's cross product is never enumerated: :func:`install` registers a
+``jit/`` prefix **spec factory** on the ContainerRegistry, minting each
+concrete spec on first demand. Subprocess endpoints opt in via
+
+    python -m repro.core.endpoint ... --containers repro.serve.fabric:install
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from ..configs import ARCH_IDS, get_reduced_config
+from ..core.warming import ContainerRegistry, ContainerSpec
+
+JIT_PREFIX = "jit/"
+STEP_KINDS = ("generate", "prefill", "decode")
+_MIN_BUCKET = 16
+_DECODE_HORIZON = 32           # cache headroom compiled past the prompt
+
+
+# ---------------------------------------------------------------------------
+# warmth keys
+# ---------------------------------------------------------------------------
+
+def shape_bucket(prompt_len: int) -> int:
+    """Pad bucket for a prompt length: the next power of two (≥ 16), so a
+    handful of compiled shapes serves arbitrary prompts."""
+    b = _MIN_BUCKET
+    while b < prompt_len:
+        b *= 2
+    return b
+
+
+def jit_key(arch: str, step: str = "generate",
+            bucket: int = _MIN_BUCKET) -> str:
+    """The warmth key naming one compiled executable."""
+    if step not in STEP_KINDS:
+        raise ValueError(f"unknown step kind {step!r} (one of {STEP_KINDS})")
+    return f"{JIT_PREFIX}{arch}/{step}/b{int(bucket)}"
+
+
+def parse_jit_key(key: str) -> Tuple[str, str, int]:
+    """``jit/<arch>/<step>/b<bucket>`` → ``(arch, step, bucket)``."""
+    if not key.startswith(JIT_PREFIX):
+        raise ValueError(f"not a jit warmth key: {key!r}")
+    arch, step, bucket = key[len(JIT_PREFIX):].rsplit("/", 2)
+    if step not in STEP_KINDS or not bucket.startswith("b"):
+        raise ValueError(f"malformed jit warmth key: {key!r}")
+    return arch, step, int(bucket[1:])
+
+
+def pad_to_bucket(tokens: np.ndarray) -> np.ndarray:
+    """Right-pad a ``(B, S)`` prompt with zeros to its shape bucket, so
+    every request in a bucket hits the same compiled executable."""
+    tokens = np.asarray(tokens)
+    bucket = shape_bucket(tokens.shape[1])
+    if tokens.shape[1] == bucket:
+        return tokens
+    pad = np.zeros((tokens.shape[0], bucket - tokens.shape[1]),
+                   dtype=tokens.dtype)
+    return np.concatenate([tokens, pad], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# container build == jit compile (the real cold start)
+# ---------------------------------------------------------------------------
+
+def _build_env(arch: str, step: str, bucket: int) -> Dict[str, Any]:
+    """Build one serving environment: init params, jit-compile the step
+    executables **eagerly** at the bucket shape — the build time the
+    WarmCache records is the actual compile cost."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import get_model
+    from ..models.knobs import RunKnobs
+    from .serve_step import make_decode, make_prefill
+
+    cfg = get_reduced_config(arch)
+    model = get_model(cfg)
+    knobs = RunKnobs(q_block=64, kv_block=64)
+    params = model.init(jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill(model, knobs=knobs,
+                                   cache_len=bucket + _DECODE_HORIZON))
+    decode = jax.jit(make_decode(model, knobs=knobs))
+    probe = jnp.zeros((1, bucket), jnp.int32)
+    logits, cache = prefill(params, {"tokens": probe})
+    if step != "prefill":                   # decode executable too
+        decode(params, cache, {"tokens": probe[:, :1]})
+    return {"arch": arch, "step": step, "bucket": bucket, "cfg": cfg,
+            "model": model, "params": params, "prefill": prefill,
+            "decode": decode, "uses": 0}
+
+
+def _spec_for(container_type: str) -> ContainerSpec:
+    arch, step, bucket = parse_jit_key(container_type)
+
+    def build() -> Dict[str, Any]:
+        return _build_env(arch, step, bucket)
+
+    return ContainerSpec(container_type, build=build)
+
+
+def install(registry: ContainerRegistry) -> ContainerRegistry:
+    """Expose the whole model zoo on ``registry``: any ``jit/...`` type a
+    task asks for is minted on first demand. The ``--containers`` hook
+    for subprocess endpoints — and callable on a same-process registry."""
+    registry.register_factory(JIT_PREFIX, _spec_for)
+    return registry
+
+
+# ---------------------------------------------------------------------------
+# registered funcX functions (module-level: resolvable by reference from
+# subprocess endpoints via plain pickle)
+# ---------------------------------------------------------------------------
+
+def serve_generate(data, env):
+    """Batched generation inside the warm jit environment. Reports
+    ``warm`` from an env-held uses counter, so clients can measure the
+    warm-hit rate without reaching into worker internals."""
+    import jax
+    import jax.numpy as jnp
+
+    from .sampler import sample
+
+    uses, env["uses"] = env["uses"], env["uses"] + 1
+    tokens = jnp.asarray(pad_to_bucket(np.asarray(data["tokens"])),
+                         jnp.int32)
+    n_new = int(data.get("n_tokens", 4))
+    logits, cache = env["prefill"](env["params"], {"tokens": tokens})
+    key = jax.random.PRNGKey(int(data.get("seed", 0)))
+    tok = sample(logits, key, 0.0)
+    outs = [np.asarray(tok)]
+    for _ in range(n_new - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = env["decode"](env["params"], cache,
+                                      {"tokens": tok[:, None]})
+        tok = sample(logits, sub, 0.0)
+        outs.append(np.asarray(tok))
+    return {"tokens": np.stack(outs, axis=1), "warm": uses > 0,
+            "arch": env["arch"], "bucket": env["bucket"]}
+
+
+def serve_prefill(data, env):
+    """One prefill step: returns the greedy next token (the cache stays
+    worker-resident — decoding continues via :func:`serve_generate`)."""
+    import jax.numpy as jnp
+
+    uses, env["uses"] = env["uses"], env["uses"] + 1
+    tokens = jnp.asarray(pad_to_bucket(np.asarray(data["tokens"])),
+                         jnp.int32)
+    logits, _cache = env["prefill"](env["params"], {"tokens": tokens})
+    return {"next_token": np.asarray(jnp.argmax(logits, axis=-1)),
+            "warm": uses > 0}
+
+
+def serve_decode(data, env):
+    """One decode step after a prefill of the given prompt — exercises
+    the decode executable alone."""
+    import jax.numpy as jnp
+
+    uses, env["uses"] = env["uses"], env["uses"] + 1
+    tokens = jnp.asarray(pad_to_bucket(np.asarray(data["tokens"])),
+                         jnp.int32)
+    logits, cache = env["prefill"](env["params"], {"tokens": tokens})
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    logits, _cache = env["decode"](env["params"], cache, {"tokens": tok})
+    return {"next_token": np.asarray(jnp.argmax(logits, axis=-1)),
+            "warm": uses > 0}
+
+
+_STEP_FNS = {"generate": serve_generate, "prefill": serve_prefill,
+             "decode": serve_decode}
+
+
+def register_zoo(client, archs=None, *, step: str = "generate"):
+    """Register the serving function once per arch with the service and
+    return ``{arch: (function_id, container_type_for_bucket16)}`` — the
+    convenience map benches and examples drive the fabric through. The
+    per-request container type (= warmth key) still varies by shape
+    bucket; pass ``container_type=jit_key(arch, step, shape_bucket(S))``
+    at submit time for non-default prompts."""
+    archs = list(archs) if archs is not None else list(ARCH_IDS)
+    fn = _STEP_FNS[step]
+    out = {}
+    for arch in archs:
+        ct = jit_key(arch, step, _MIN_BUCKET)
+        fid = client.register_function(fn, name=f"{step}/{arch}",
+                                       container_type=ct)
+        out[arch] = (fid, ct)
+    return out

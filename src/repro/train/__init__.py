@@ -1,6 +1,13 @@
 from . import checkpoint
 from .data import ByteCorpus, SyntheticLM, make_dataset
-from .fedavg import FedAvgCoordinator, compress_tree, decompress_tree
+from .fedavg import (
+    FedAvgCoordinator,
+    compress_tree,
+    decompress_tree,
+    fedavg_aggregate,
+    fedavg_local_train,
+    train_warmth_key,
+)
 from .optimizer import (
     adamw_update,
     clip_by_global_norm,
@@ -19,6 +26,7 @@ __all__ = [
     "ByteCorpus", "FedAvgCoordinator", "SyntheticLM",
     "abstract_train_state", "adamw_update", "checkpoint",
     "clip_by_global_norm", "compress_tree", "decompress_tree",
-    "global_norm", "init_opt_state", "init_train_state", "lr_schedule",
-    "make_dataset", "make_train_step", "train_state_axes",
+    "fedavg_aggregate", "fedavg_local_train", "global_norm",
+    "init_opt_state", "init_train_state", "lr_schedule", "make_dataset",
+    "make_train_step", "train_state_axes", "train_warmth_key",
 ]

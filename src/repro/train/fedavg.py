@@ -110,6 +110,93 @@ def compressed_bytes(msg_tree: Any) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Endpoint-side funcX functions (module-level so the wire reference
+# ``repro.train.fedavg:fedavg_local_train`` resolves on any endpoint)
+# ---------------------------------------------------------------------------
+
+def train_warmth_key(arch: str, seq: int) -> str:
+    """Warmth key advertised for a jit-compiled train step (DESIGN.md §10).
+
+    Same grammar as the serving fabric's jit keys so one routing mechanism
+    covers both: ``jit/<arch>/train/b<seq>``."""
+    return f"jit/{arch}/train/b{seq}"
+
+
+# One jitted train step + opt state per arch, held across invocations by
+# the worker process — the FL analogue of the serving fabric's jit cache.
+_LOCAL_STATE: Dict[str, Any] = {}
+
+
+def _local_env(arch: str, seq: int, batch: int) -> Dict[str, Any]:
+    from ..configs import TrainConfig, get_reduced_config
+    from ..models import get_model
+    from .train_step import make_train_step
+
+    key = train_warmth_key(arch, seq)
+    env = _LOCAL_STATE.get(key)
+    if env is None:
+        cfg = get_reduced_config(arch)
+        model = get_model(cfg)
+        tc = TrainConfig(learning_rate=5e-3, warmup_steps=0,
+                         total_steps=200)
+        env = {"cfg": cfg, "model": model,
+               "step": jax.jit(make_train_step(model, tc)),
+               "seq": seq, "batch": batch}
+        _LOCAL_STATE[key] = env
+    return env
+
+
+def fedavg_local_train(data: Dict[str, Any]) -> Dict[str, Any]:
+    """Registered FL client: run ``steps`` local SGD steps from the global
+    ``params`` on a synthetic shard, return the raw f32 delta pytree.
+
+    Payload: {"arch", "params", "seed", "steps", "seq"?, "batch"?}. The
+    jitted step lives in the module-global ``_LOCAL_STATE``, so repeat
+    rounds on the same worker skip the ``jax.jit`` compile — the warmth
+    the coordinator's ``warmth_key`` routes toward."""
+    from .data import SyntheticLM
+    from .optimizer import init_opt_state
+
+    arch = data["arch"]
+    seq = int(data.get("seq", 8))
+    batch = int(data.get("batch", 8))
+    env = _local_env(arch, seq, batch)
+    params = jax.tree.map(jnp.asarray, data["params"])
+    state = {"params": params, "opt": init_opt_state(params),
+             "step": jnp.zeros((), jnp.int32)}
+    ds = SyntheticLM(env["cfg"].vocab_size, seq, batch,
+                     seed=int(data["seed"]))
+    loss = 0.0
+    for _, b in zip(range(int(data["steps"])), ds):
+        state, m = env["step"](state, {k: jnp.asarray(v)
+                                       for k, v in b.items()})
+        loss = float(m["loss"])
+    delta = jax.tree.map(
+        lambda n, p: (np.asarray(n, np.float32)
+                      - np.asarray(p, np.float32)), state["params"], params)
+    return {"delta": delta, "loss": loss}
+
+
+def fedavg_aggregate(data: Dict[str, Any]) -> Dict[str, Any]:
+    """Registered aggregator: mean the client deltas (fetched peer-direct
+    as DataRefs by the data plane before this runs), compress the mean
+    once, and return the small message tree — the coordinator never sees
+    a raw delta. Payload: {"parts": [{"delta", "loss"}, ...], "method",
+    "topk_frac"}."""
+    parts = data["parts"]
+    mean_delta = jax.tree.map(
+        lambda *ds: np.mean(np.stack([np.asarray(d, np.float32)
+                                      for d in ds]), axis=0),
+        *[p["delta"] for p in parts])
+    msgs, _ = compress_tree(mean_delta, data.get("method", "int8"),
+                            float(data.get("topk_frac", 0.1)))
+    raw = sum(np.asarray(l).nbytes for l in jax.tree.leaves(mean_delta))
+    return {"msgs": msgs,
+            "mean_loss": float(np.mean([p["loss"] for p in parts])),
+            "raw_bytes": raw}
+
+
+# ---------------------------------------------------------------------------
 # FedAvg coordinator over the FaaS layer
 # ---------------------------------------------------------------------------
 
@@ -170,3 +257,55 @@ class FedAvgCoordinator:
                                   / max(self.bytes_sent, 1)),
         }
         return jax.tree.map(jnp.asarray, new_params), metrics
+
+    def round_refs(self, params: Any, *, arch: str, executor,
+                   aggregate_fn: str, local_steps: int = 5, seed: int = 0,
+                   seq: int = 8, batch: int = 8,
+                   aggregate_endpoint: Optional[str] = None,
+                   timeout: float = 600.0):
+        """One FedAvg round where the heavy deltas never touch the
+        coordinator (DESIGN.md §9+§10 together).
+
+        Local training fans out through the futures-native ``executor``
+        with ``warmth_key=train_warmth_key(...)`` so repeat rounds land on
+        the worker already holding the jitted step. With the endpoints'
+        ``stage_limit`` set below the raw delta size, each result comes
+        back as a cross-endpoint **DataRef**; the aggregation task is then
+        submitted to one endpoint with those refs in its payload — stage-in
+        fetches the deltas peer-direct, and only the compressed mean rides
+        the hub back. Returns ``(new_params, metrics, parts)`` where
+        ``parts`` are the raw per-endpoint results (DataRefs, for callers
+        that want to assert the transport shape).
+
+        Compression happens once, on the aggregated mean, so there is no
+        per-endpoint error-feedback state on this path."""
+        host_params = jax.tree.map(lambda a: np.asarray(a), params)
+        wk = train_warmth_key(arch, seq)
+        futs = [executor.submit(
+                    self.fn,
+                    {"arch": arch, "params": host_params,
+                     "seed": seed * 1000 + i, "steps": local_steps,
+                     "seq": seq, "batch": batch},
+                    endpoint_id=eid, warmth_key=wk)
+                for i, eid in enumerate(self.endpoints)]
+        parts = [f.result(timeout=timeout) for f in futs]
+
+        agg = executor.submit(
+            aggregate_fn,
+            {"parts": parts, "method": self.method,
+             "topk_frac": self.topk_frac},
+            endpoint_id=aggregate_endpoint or self.endpoints[0],
+        ).result(timeout=timeout)
+
+        mean_delta = decompress_tree(agg["msgs"])
+        self.bytes_sent += compressed_bytes(agg["msgs"])
+        self.bytes_uncompressed += int(agg["raw_bytes"])
+        new_params = jax.tree.map(
+            lambda p, d: (np.asarray(p) + d).astype(np.asarray(p).dtype),
+            host_params, mean_delta)
+        metrics = {
+            "mean_loss": float(agg["mean_loss"]),
+            "compression_ratio": (self.bytes_uncompressed
+                                  / max(self.bytes_sent, 1)),
+        }
+        return jax.tree.map(jnp.asarray, new_params), metrics, parts

@@ -1,0 +1,254 @@
+"""Routing API redesign (DESIGN.md §10): RoutingContext semantics, the
+one-PR legacy shims, jit-vs-container warmth ordering at both tiers,
+select_many snapshot feedback, WarmthView builders, and the
+observe_build feedback path (agent EWMA → heartbeat → service router).
+"""
+import threading
+import types
+import warnings
+
+import pytest
+
+from repro.core import (
+    CostAwareRouter,
+    EndpointInfo,
+    ManagerInfo,
+    RoutingContext,
+    WarmingAwareEndpointRouter,
+    WarmingAwareRouter,
+    WarmthView,
+    make_endpoint_router,
+    make_router,
+)
+from repro.core.routing import LeastLoadedEndpointRouter
+
+
+def mi(mid, idle=2, queued=0, warm_idle=None, warm_total=None, cap=4):
+    return ManagerInfo(mid, idle, queued, warm_idle or {},
+                       warm_total or dict(warm_idle or {}), cap)
+
+
+def ei(eid, warm_idle=None, warm_total=None, cap=4, queued=0, idle=2):
+    return EndpointInfo(eid, service_queue=0, in_flight=0, queued=queued,
+                        idle_workers=idle, capacity=cap,
+                        warm_idle=warm_idle or {},
+                        warm_total=warm_total or dict(warm_idle or {}))
+
+
+# ---------------------------------------------------------------------------
+# RoutingContext semantics
+# ---------------------------------------------------------------------------
+
+def test_ctx_key_defaults_to_container_type():
+    ctx = RoutingContext(container_type="T")
+    assert ctx.key == "T"
+    assert ctx.warmth_keys == ("T",)
+
+
+def test_ctx_explicit_warmth_key_keeps_container_fallback():
+    ctx = RoutingContext(warmth_key="jit/m/gen/b16", container_type="T")
+    assert ctx.key == "jit/m/gen/b16"
+    assert ctx.warmth_keys == ("jit/m/gen/b16", "T")
+    # degenerate refinement: no duplicate fallback
+    same = RoutingContext(warmth_key="T", container_type="T")
+    assert same.warmth_keys == ("T",)
+
+
+def test_ctx_coerce_accepts_strings_and_passes_ctx_through():
+    ctx = RoutingContext.coerce("T")
+    assert isinstance(ctx, RoutingContext) and ctx.key == "T"
+    orig = RoutingContext(warmth_key="k")
+    assert RoutingContext.coerce(orig) is orig
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims (one PR only): positional container-type strings still
+# route identically, with a DeprecationWarning
+# ---------------------------------------------------------------------------
+
+def test_router_route_legacy_str_warns_and_matches_ctx():
+    managers = [mi("cold"), mi("warm", warm_idle={"T": 1})]
+    r = WarmingAwareRouter()
+    with pytest.warns(DeprecationWarning, match="Router.route"):
+        legacy = r.route("T", managers)
+    assert legacy == r.route(RoutingContext(container_type="T"), managers)
+    # the ctx path is warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        r.route(RoutingContext(container_type="T"), managers)
+
+
+def test_endpoint_select_legacy_str_warns_and_matches_ctx():
+    eps = [ei("cold"), ei("warm", warm_idle={"T": 1})]
+    r = WarmingAwareEndpointRouter()
+    with pytest.warns(DeprecationWarning, match="EndpointRouter.select"):
+        legacy = r.select("T", eps)
+    assert legacy == r.select(RoutingContext(container_type="T"), eps)
+
+
+def test_make_endpoint_router_is_deprecated_alias():
+    with pytest.warns(DeprecationWarning, match="make_endpoint_router"):
+        r = make_endpoint_router("least_loaded")
+    assert isinstance(r, LeastLoadedEndpointRouter)
+    assert type(r) is type(make_router("least_loaded", tier="endpoint"))
+
+
+def test_make_router_rejects_unknown_names_and_tiers():
+    with pytest.raises(KeyError, match="unknown manager-tier router"):
+        make_router("nope")
+    with pytest.raises(KeyError, match="unknown routing tier"):
+        make_router("random", tier="nope")
+
+
+# ---------------------------------------------------------------------------
+# jit warmth vs container warmth: primary key wins, container type is the
+# fallback, cold is last — at both tiers
+# ---------------------------------------------------------------------------
+
+JIT = "jit/qwen1.5-0.5b/generate/b16"
+
+
+def test_manager_tier_jit_warm_beats_container_warm():
+    ctx = RoutingContext(warmth_key=JIT, container_type="T")
+    managers = [mi("container-warm", warm_idle={"T": 3}),
+                mi("jit-warm", warm_idle={JIT: 1, "T": 1})]
+    assert WarmingAwareRouter().route(ctx, managers) == "jit-warm"
+
+
+def test_manager_tier_container_warm_fallback_when_jit_cold():
+    ctx = RoutingContext(warmth_key=JIT, container_type="T")
+    managers = [mi("cold"), mi("container-warm", warm_idle={"T": 1})]
+    assert WarmingAwareRouter().route(ctx, managers) == "container-warm"
+
+
+def test_endpoint_tier_jit_warm_beats_container_warm():
+    ctx = RoutingContext(warmth_key=JIT, container_type="T")
+    eps = [ei("container-warm", warm_idle={"T": 3}),
+           ei("jit-warm", warm_idle={JIT: 1, "T": 1})]
+    assert WarmingAwareEndpointRouter().select(ctx, eps) == "jit-warm"
+
+
+def test_endpoint_tier_warm_busy_beats_cold():
+    ctx = RoutingContext(warmth_key=JIT, container_type="T")
+    eps = [ei("cold"),
+           ei("busy-warm", warm_idle={}, warm_total={JIT: 1}, queued=2)]
+    assert WarmingAwareEndpointRouter().select(ctx, eps) == "busy-warm"
+
+
+# ---------------------------------------------------------------------------
+# select_many: per-pick snapshot feedback
+# ---------------------------------------------------------------------------
+
+def test_select_many_feedback_spreads_over_warm_endpoints():
+    eps = [ei("a", warm_idle={"T": 1}), ei("b", warm_idle={"T": 1})]
+    picks = WarmingAwareEndpointRouter().select_many("T", eps, 2)
+    assert sorted(picks) == ["a", "b"]
+    assert all(e.service_queue == 1 for e in eps)
+    assert all(e.warmth.warm_idle("T") == 0 for e in eps)
+
+
+def test_select_many_mixed_keys_share_one_snapshot():
+    # endpoint "a" holds both artifacts warm; picking for one key must
+    # leave the snapshot consistent for the next key's routing
+    eps = [ei("a", warm_idle={JIT: 1, "T": 1}), ei("b")]
+    r = WarmingAwareEndpointRouter()
+    jit_picks = r.select_many(RoutingContext(warmth_key=JIT,
+                                             container_type="T"), eps, 1)
+    ct_picks = r.select_many("T", eps, 1)
+    assert jit_picks == ["a"]
+    assert ct_picks == ["a"]          # still container-warm, despite queue
+    a = eps[0]
+    assert a.service_queue == 2
+    assert a.warmth.warm_idle(JIT) == 0      # consumed by the jit pick
+    assert a.warmth.warm_idle("T") == 0      # consumed by the ct pick
+
+
+def test_note_pick_accepts_ctx_or_str():
+    e = ei("a", warm_idle={"T": 2})
+    e.note_pick("T")
+    e.note_pick(RoutingContext(container_type="T"))
+    assert e.warmth.warm_idle("T") == 0 and e.service_queue == 2
+
+
+# ---------------------------------------------------------------------------
+# WarmthView: the one heartbeat-dict parsing point
+# ---------------------------------------------------------------------------
+
+def test_warmth_view_tally_and_merge():
+    # manager scan: one idle worker warm on T, one busy worker warm on
+    # T + a jit key
+    v = WarmthView.tally([(["T"], True), (["T", JIT], False)])
+    assert v.warm_idle("T") == 1 and v.warm_total("T") == 2
+    assert v.warm_idle(JIT) == 0 and v.warm_total(JIT) == 1
+
+    merged = WarmthView.merge([v, WarmthView({"T": 2}, {"T": 2})])
+    assert merged.warm_idle("T") == 3 and merged.warm_total("T") == 4
+    assert merged.warm_total(JIT) == 1
+
+
+def test_warmth_view_is_warm_uses_fallback_keys():
+    v = WarmthView({}, {"T": 1})
+    assert v.is_warm(RoutingContext(warmth_key=JIT, container_type="T"))
+    assert not v.is_warm(RoutingContext(warmth_key=JIT, container_type="X"))
+
+
+def test_warmth_view_writes_through_to_snapshot_dicts():
+    info = ei("a", warm_idle={"T": 1})
+    info.warmth.note_pick("T")
+    assert info.warm_idle["T"] == 0    # the snapshot dict itself changed
+
+
+# ---------------------------------------------------------------------------
+# observe_build feedback (DESIGN.md §10): measured cold-build costs flow
+# agent → router, and heartbeat build_costs → service federation router
+# ---------------------------------------------------------------------------
+
+def test_cost_aware_observe_build_ewma():
+    r = CostAwareRouter(default_cold_cost=9.0)
+    assert r.cold_cost("k") == 9.0
+    r.observe_build("k", 1.0)
+    assert r.cold_cost("k") == pytest.approx(1.0)
+    r.observe_build("k", 2.0)
+    assert r.cold_cost("k") == pytest.approx(0.8 * 1.0 + 0.2 * 2.0)
+
+
+def test_cost_aware_prefers_warm_once_builds_are_expensive():
+    r = CostAwareRouter(default_cold_cost=0.0)
+    r.observe_build(JIT, 5.0)
+    ctx = RoutingContext(warmth_key=JIT, container_type="T")
+    managers = [mi("cold", queued=0), mi("warm", warm_idle={JIT: 1},
+                                         queued=2)]
+    assert r.route(ctx, managers) == "warm"
+
+
+def test_agent_observe_build_feeds_router_and_heartbeat_ewma():
+    from repro.core.endpoint import EndpointAgent
+
+    fake = types.SimpleNamespace(router=CostAwareRouter(),
+                                 _build_costs={},
+                                 _build_costs_lock=threading.Lock())
+    EndpointAgent._observe_build(fake, JIT, 1.0)
+    EndpointAgent._observe_build(fake, JIT, 2.0)
+    assert fake.router.cold_cost(JIT) == pytest.approx(1.2)
+    assert fake._build_costs[JIT] == pytest.approx(1.2)
+
+
+def test_service_feeds_build_costs_to_endpoint_router():
+    from repro.core import FuncXService
+
+    class CostObservingEndpointRouter(WarmingAwareEndpointRouter):
+        def __init__(self):
+            super().__init__()
+            self.seen = {}
+
+        def observe_build(self, warmth_key, seconds):
+            self.seen[warmth_key] = seconds
+
+    router = CostObservingEndpointRouter()
+    svc = FuncXService(endpoint_router=router)
+    try:
+        assert svc.pool.on_build_costs is not None
+        svc.pool.on_build_costs({JIT: 2.5})
+        assert router.seen == {JIT: 2.5}
+    finally:
+        svc.shutdown()

@@ -55,6 +55,18 @@ With ``--p2p`` it gates the peer data plane (``sec6_p2p``, DESIGN.md
   contention, and the real margin is recorded in the committed
   artifact).
 
+With ``--serving`` it gates the serving fabric (``sec10_serving``,
+DESIGN.md §10):
+
+- ``serving/warm_hit_advantage`` (aware − random warm-hit rate) must be
+  ≥ 0 — jit-cache-aware routing must never lose to random scattering on
+  warm hits. Both lanes serve an identical request stream against an
+  identical fleet, so the comparison is noise-resistant even at smoke
+  scale.
+- ``serving/aware/warm_hit_rate`` must be ≥ ``--serving-floor`` (default
+  0.5: with one warm slot per model fleet-wide, warmth-aware routing
+  keeps the majority of the stream on compiled executables).
+
 Exit code 0 = pass, 1 = regression, 2 = malformed/missing artifacts.
 
     python -m tools.bench_gate --baseline BENCH_7.json \
@@ -85,6 +97,10 @@ EXEC_LONE = "sec5/executor/lone_overhead_ratio"
 P2P_SUITE = "sec6_p2p"
 P2P_RELAY = "p2p/peer/hub_relay_bytes"
 P2P_SPEEDUP = "p2p/speedup_vs_hub"
+
+SERVING_SUITE = "sec10_serving"
+SERVING_ADVANTAGE = "serving/warm_hit_advantage"
+SERVING_AWARE_RATE = "serving/aware/warm_hit_rate"
 
 
 def load_suite(path: str, suite_key: str = SUITE) -> dict:
@@ -192,6 +208,34 @@ def gate_p2p(args) -> int:
     return 0
 
 
+def gate_serving(args) -> int:
+    fresh = load_suite(args.fresh, SERVING_SUITE)
+    failures = []
+
+    advantage = fresh.get(SERVING_ADVANTAGE)
+    aware = fresh.get(SERVING_AWARE_RATE)
+    if advantage is None or aware is None:
+        print(f"bench-gate: {SERVING_ADVANTAGE} / {SERVING_AWARE_RATE} "
+              f"missing (got {advantage}, {aware})")
+        return 2
+    status = "ok" if advantage >= 0.0 else "REGRESSION"
+    print(f"bench-gate: serving warm-hit advantage (aware - random)="
+          f"{advantage:+.3f} (invariant: >= 0) -> {status}")
+    if advantage < 0.0:
+        failures.append(SERVING_ADVANTAGE)
+    status = "ok" if aware >= args.serving_floor else "REGRESSION"
+    print(f"bench-gate: serving aware warm-hit rate={aware:.3f} "
+          f"floor={args.serving_floor:.2f} -> {status}")
+    if aware < args.serving_floor:
+        failures.append(SERVING_AWARE_RATE)
+
+    if failures:
+        print(f"bench-gate: FAILED on {', '.join(failures)}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--baseline", default="BENCH_7.json",
@@ -230,6 +274,14 @@ def main() -> int:
                    help="fresh p2p/speedup_vs_hub must be >= this "
                         "(default 0.9: collapse detector; the committed "
                         "artifact records the real margin)")
+    p.add_argument("--serving", action="store_true",
+                   help="gate the sec10_serving fabric suite instead of "
+                        "the result plane")
+    p.add_argument("--serving-floor", type=float, default=0.5,
+                   help="aware-lane warm-hit rate must be >= this "
+                        "(default 0.5: even smoke-scale streams keep the "
+                        "majority of requests on a warm jit cache when "
+                        "routing reads the warmth keys)")
     args = p.parse_args()
 
     if args.shm:
@@ -238,6 +290,8 @@ def main() -> int:
         return gate_executor(args)
     if args.p2p:
         return gate_p2p(args)
+    if args.serving:
+        return gate_serving(args)
 
     base = load_suite(args.baseline)
     fresh = load_suite(args.fresh)
