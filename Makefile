@@ -7,7 +7,7 @@
 #   make bench-serialization  §4.5 pack-once data plane benchmarks
 #   make bench-results        §7.2.3 batched result plane gauges
 #   make bench-results-gate   bench-results into a fresh artifact + compare
-#                             against the committed BENCH_7.json baseline
+#                             against the committed BENCH_10.json baseline
 #   make bench-shm            DESIGN.md §7 same-host shm vs tcp comparison
 #   make bench-shm-gate       bench-shm (tiny) + gate: channels upgraded,
 #                             ring path not collapsed
@@ -24,7 +24,13 @@
 #   make bench-serving-gate   bench-serving (tiny) + gate: warmth-aware
 #                             never loses to random on warm-hit rate, and
 #                             keeps the fleet mostly jit-warm
-#   make bench                full benchmark harness (writes BENCH_9.json)
+#   make bench-interchange    DESIGN.md §11 hierarchical relay: 100k-task
+#                             burst absorption + elastic leaf endpoints
+#   make bench-interchange-gate bench-interchange (tiny) + gate: zero
+#                             service threads added, full-burst queued
+#                             depth, >=0.9x flat-fleet throughput,
+#                             elastic scale-out observed
+#   make bench                full benchmark harness (writes BENCH_10.json)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
@@ -32,7 +38,8 @@ export PYTHONPATH
 .PHONY: test test-fast lint bench-smoke bench-serialization \
 	bench-results bench-results-gate bench-shm bench-shm-gate \
 	bench-executor bench-executor-gate bench-p2p bench-p2p-gate \
-	bench-serving bench-serving-gate bench
+	bench-serving bench-serving-gate bench-interchange \
+	bench-interchange-gate bench
 
 test:
 	python -m pytest -x -q
@@ -55,7 +62,7 @@ bench-results:
 bench-results-gate:
 	python -m benchmarks.run --only sec7.2.3_results --tiny \
 		--artifact bench_fresh.json
-	python -m tools.bench_gate --baseline BENCH_7.json \
+	python -m tools.bench_gate --baseline BENCH_10.json \
 		--fresh bench_fresh.json
 
 bench-shm:
@@ -89,6 +96,14 @@ bench-serving-gate:
 	python -m benchmarks.run --only sec10_serving --tiny \
 		--artifact bench_fresh.json
 	python -m tools.bench_gate --serving --fresh bench_fresh.json
+
+bench-interchange:
+	python -m benchmarks.run --only sec5_interchange
+
+bench-interchange-gate:
+	python -m benchmarks.run --only sec5_interchange --tiny \
+		--artifact bench_fresh.json
+	python -m tools.bench_gate --interchange --fresh bench_fresh.json
 
 bench:
 	python -m benchmarks.run

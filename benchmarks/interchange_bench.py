@@ -1,0 +1,184 @@
+"""§5 hierarchical interchange at scale (DESIGN.md §11).
+
+The paper's headline scaling claims (>100k queued tasks, 130k workers)
+hang off the interchange tier: a relay that registers upstream as one
+endpoint, absorbs deep bursts into a bounded backlog, and elastically
+provisions leaf endpoints below itself. This suite retires the old
+``fig4sim`` discrete-event rows with *measured* numbers from a real
+relay tree of OS processes:
+
+- **absorption**: a 100k-noop burst (default mode) lands entirely in the
+  interchange backlog before a single leaf exists — observed upstream
+  through the synthesized heartbeat's ``backlog`` gauge;
+- **O(1) service**: the whole relay tree (interchange + elastic leaves)
+  costs the service process zero additional threads;
+- **elasticity**: the backlog provisions leaf endpoint processes
+  (observable as the advertised capacity going 0 → leaves × workers);
+- **steady-state throughput**: the same leaves behind the relay must
+  stay within ~0.9× of the flat (interchange-less) fleet — the hop
+  queues, it must not throttle.
+
+Lanes are process-isolated: the interchange and every leaf are spawned
+subprocesses, so the service-side thread count is a clean gauge.
+"""
+from __future__ import annotations
+
+import subprocess
+import threading
+import time
+
+from .common import emit, make_bench_service
+
+CHUNK = 4000          # submit granularity (client.batch_run per call)
+
+
+def _submit(client, fid, eid, n):
+    ids = []
+    for off in range(0, n, CHUNK):
+        ids += client.batch_run([(fid, eid, {})
+                                 for _ in range(min(CHUNK, n - off))])
+    return ids
+
+
+def _measured(client, fid, eid, n, timeout=900):
+    t0 = time.perf_counter()
+    ids = _submit(client, fid, eid, n)
+    client.get_batch_results(ids, timeout=timeout)
+    return n / (time.perf_counter() - t0)
+
+
+def _flat_lane(n_leaves, workers, n_steady):
+    """Baseline: the same leaves registered directly with the service."""
+    from repro.core.endpoint import demo_noop, spawn_endpoint_process
+    svc, client = make_bench_service()
+    procs = []
+    try:
+        fid = client.register_function(demo_noop)
+        address = svc.listen()
+        token = client.endpoint_credentials()
+        eids = []
+        for i in range(n_leaves):
+            p, eid = spawn_endpoint_process(address, token,
+                                            name=f"flat{i}",
+                                            workers=workers, shm=False,
+                                            peer=False)
+            procs.append(p)
+            eids.append(eid)
+        for eid in eids:                                   # warm
+            _measured(client, fid, eid, 16)
+        return _measured(client, fid, None, n_steady)
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                p.kill()
+        svc.shutdown()
+
+
+def _relay_lane(n_leaves, workers, n_burst, n_steady, acquire_delay):
+    """The relay tree: one interchange subprocess, leaves provisioned
+    elastically by its own strategy as the backlog grows."""
+    from repro.core import spawn_interchange_process
+    from repro.core.endpoint import demo_noop
+    svc, client = make_bench_service()
+    proc = None
+    try:
+        fid = client.register_function(demo_noop)
+        host, port = svc.listen()
+        time.sleep(0.5)           # let prior-lane threads finish dying
+        threads_before = threading.active_count()
+        proc, eid, _leaf_addr = spawn_interchange_process(
+            f"{host}:{port}", client.endpoint_credentials(),
+            name="relay", depth=max(150_000, 2 * n_burst),
+            min_blocks=0, max_blocks=n_leaves,
+            backlog_per_block=-(-n_burst // n_leaves),     # ceil
+            idle_timeout=120.0, leaf_workers=workers,
+            acquire_delay=acquire_delay)
+        line = svc.pool.line(eid)
+        deadline = time.time() + 30
+        while line.advertised.credits < 0 and time.time() < deadline:
+            time.sleep(0.01)
+        assert line.advertised.credits >= 0, "no credit advertisement"
+
+        # --- burst absorption: leaves are acquire_delay away, so the
+        # whole burst must land in the relay's backlog
+        t0 = time.perf_counter()
+        ids = _submit(client, fid, eid, n_burst)
+        depth_peak = 0
+        absorb_s = None
+        capacity_peak = 0
+        deadline = time.time() + 900
+        while time.time() < deadline:
+            hb = line.advertised
+            depth_peak = max(depth_peak, hb.backlog)
+            capacity_peak = max(capacity_peak, hb.capacity)
+            if absorb_s is None and hb.backlog >= n_burst:
+                absorb_s = time.perf_counter() - t0
+            if hb.backlog == 0 and hb.queued == 0 and capacity_peak > 0 \
+                    and absorb_s is not None:
+                break
+            time.sleep(0.02)
+        client.get_batch_results(ids, timeout=900)
+        drain_s = time.perf_counter() - t0
+        threads_during = threading.active_count()
+
+        # --- steady state: leaves are up and warm; measure the relayed
+        # throughput to compare against the flat fleet
+        hb = line.advertised
+        capacity_peak = max(capacity_peak, hb.capacity)
+        relay_rate = _measured(client, fid, eid, n_steady)
+        return {
+            "depth_peak": depth_peak,
+            "absorb_s": absorb_s if absorb_s is not None else drain_s,
+            "drain_s": drain_s,
+            "capacity_peak": capacity_peak,
+            "threads_added": threads_during - threads_before,
+            "relay_rate": relay_rate,
+        }
+    finally:
+        if proc is not None:
+            proc.terminate()
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+        svc.shutdown()
+
+
+def run(full: bool = False, tiny: bool = False) -> None:
+    if tiny:              # CI smoke: same invariants, scaled-down burst
+        n_burst, n_steady, n_leaves, workers = 2000, 1000, 2, 2
+        acquire_delay = 1.0
+    elif full:
+        n_burst, n_steady, n_leaves, workers = 150_000, 20_000, 4, 4
+        acquire_delay = 5.0
+    else:
+        n_burst, n_steady, n_leaves, workers = 100_000, 10_000, 4, 4
+        acquire_delay = 5.0
+
+    flat_rate = _flat_lane(n_leaves, workers, n_steady)
+    emit("sec5_interchange/flat_tasks_per_s", flat_rate,
+         f"n={n_steady} leaves={n_leaves}x{workers}w")
+
+    r = _relay_lane(n_leaves, workers, n_burst, n_steady, acquire_delay)
+    emit("sec5_interchange/burst_tasks", n_burst,
+         f"leaves acquire in {acquire_delay}s")
+    emit("sec5_interchange/queued_depth_peak", r["depth_peak"],
+         f"backlog gauge via synthesized heartbeat; burst={n_burst}")
+    emit("sec5_interchange/burst_absorb_s", r["absorb_s"],
+         f"rate={n_burst / r['absorb_s']:.0f}/s into the backlog")
+    emit("sec5_interchange/burst_drain_s", r["drain_s"],
+         "submit -> all results (includes elastic scale-out)")
+    emit("sec5_interchange/scale_out_capacity", r["capacity_peak"],
+         f"advertised workers after elastic scale-out "
+         f"(target {n_leaves * workers})")
+    emit("sec5_interchange/service_threads_added", r["threads_added"],
+         "service thread-count delta for the whole relay tree")
+    emit("sec5_interchange/relay_tasks_per_s", r["relay_rate"],
+         f"n={n_steady} via interchange")
+    emit("sec5_interchange/relay_vs_flat_ratio",
+         r["relay_rate"] / flat_rate if flat_rate else 0.0,
+         "steady-state; gate floor 0.9")

@@ -38,9 +38,12 @@ SUITES = {
     "sec10_serving": ("serving_bench",
                       "DESIGN.md §10 serving fabric: jit-cache-aware "
                       "routing vs random over socket endpoints"),
+    "sec5_interchange": ("interchange_bench",
+                         "§5 hierarchical interchange: 100k-task burst "
+                         "absorption + elastic leaves (DESIGN.md §11)"),
 }
 
-ARTIFACT = "BENCH_9.json"          # seeded from BENCH_8.json (PR 8 run)
+ARTIFACT = "BENCH_10.json"         # seeded from BENCH_9.json (PR 9 run)
 
 
 def write_artifact(path: str, per_suite) -> None:

@@ -11,13 +11,13 @@ Four modes:
     service's TCP listener (``python -m repro.core.endpoint --connect``)
     vs N same-process thread endpoints — tasks/s and p50/p99 task latency
     for both deployment modes (DESIGN.md §2).
-  - SIM: discrete-event simulation of the same dispatch pipeline,
-    calibrated with the real mode's measured per-task dispatch overhead,
-    scaled to 131 072 workers (the paper's Cori point).
+The old SIM mode (``fig4sim``: a discrete-event model extrapolated to
+131 072 workers) is retired — the paper-scale queueing claims are now
+*measured* on a real relay tree by the ``sec5_interchange`` suite
+(``benchmarks/interchange_bench.py``, DESIGN.md §11).
 """
 from __future__ import annotations
 
-import heapq
 import subprocess
 import threading
 import time
@@ -313,58 +313,21 @@ def subprocess_lane(label: str, shm: bool, n_endpoints: int,
         svc.shutdown()
 
 
-# ---------------------------------------------------------------------- sim
-
-def simulate(n_workers: int, n_tasks: int, duration_s: float,
-             dispatch_s: float) -> float:
-    """Discrete-event model of the agent pipeline: a serial dispatcher
-    assigns task i at time i·dispatch_s to the earliest-free worker."""
-    free = [0.0] * min(n_workers, n_tasks)
-    heapq.heapify(free)
-    finish_last = 0.0
-    for i in range(n_tasks):
-        t_disp = i * dispatch_s
-        w_free = heapq.heappop(free)
-        start = max(t_disp, w_free)
-        end = start + duration_s
-        heapq.heappush(free, end)
-        finish_last = max(finish_last, end)
-    return finish_last
-
-
-def sim_mode(dispatch_s: float) -> None:
-    # weak scaling to the paper's 131 072 workers, 10 tasks/worker
-    for workers in (256, 2048, 16384, 131072):
-        n = 10 * workers
-        for name, dur in (("noop", 0.0), ("sleep1s", 1.0), ("stress60s", 60.0)):
-            t = simulate(workers, n, dur, dispatch_s)
-            emit(f"fig4sim/weak/{name}/workers={workers}", t * 1e6,
-                 f"tasks={n} dispatch={dispatch_s*1e6:.0f}us/task")
-    # strong scaling, 100k tasks (paper Fig. 4a)
-    for workers in (256, 2048, 16384):
-        for name, dur in (("noop", 0.0), ("sleep1s", 1.0)):
-            t = simulate(workers, 100_000, dur, dispatch_s)
-            emit(f"fig4sim/strong/{name}/workers={workers}", t * 1e6,
-                 f"tasks=100000")
-
-
 def run(full: bool = False, tiny: bool = False) -> None:
     if tiny:                     # `make bench-smoke`: seconds, not minutes
-        dispatch = real_mode(workers_list=(4,), n_strong=64)
+        real_mode(workers_list=(4,), n_strong=64)
         throughput(n_tasks=300, workers=16)
         federation_threads(n_endpoints=16)
         federation_throughput(n_endpoints=8, tasks_per_endpoint=5)
         federation_routing_win(n_endpoints=4, burst=8, build_s=0.1)
         multiprocess_mode(n_endpoints=2, tasks_per_endpoint=25)
-        sim_mode(dispatch)
         return
     workers = (4, 16, 64) if not full else (4, 16, 64, 128)
-    dispatch = real_mode(workers_list=workers,
-                         n_strong=512 if not full else 2048)
+    real_mode(workers_list=workers,
+              n_strong=512 if not full else 2048)
     throughput(n_tasks=2000 if not full else 10000)
     federation_threads(n_endpoints=64 if not full else 256)
     federation_throughput(n_endpoints=64, tasks_per_endpoint=10)
     federation_routing_win(n_endpoints=8 if not full else 16)
     multiprocess_mode(n_endpoints=4 if not full else 8,
                       tasks_per_endpoint=50 if not full else 100)
-    sim_mode(dispatch)

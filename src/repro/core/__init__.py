@@ -48,6 +48,12 @@ from .endpoint import (
     ResultCoalescer,
     WireFunctionClient,
 )
+from .interchange import (
+    Interchange,
+    LeafProvider,
+    ThreadLeafProvider,
+    spawn_interchange_process,
+)
 from .errors import (
     AuthError,
     EndpointUnavailable,
@@ -100,7 +106,6 @@ from .routing import (
     WarmingAwareRouter,
     WarmingHashRouter,
     WarmthView,
-    make_endpoint_router,
     make_router,
 )
 from .service import FuncXService, PAYLOAD_LIMIT, RegisteredFunction
@@ -122,7 +127,8 @@ __all__ = [
     "EndpointLine", "EndpointRouter", "EndpointUnavailable", "FnRequest",
     "FnResponse", "ForwarderPool", "FuncXClient", "FuncXError",
     "FuncXExecutor",
-    "FuncXService", "Heartbeat", "LeastLoadedEndpointRouter",
+    "FuncXService", "Heartbeat", "Interchange",
+    "LeafProvider", "LeastLoadedEndpointRouter",
     "LocalProvider", "LocalTransport", "LocalityAwareRouter", "Manager",
     "ManagerInfo", "PAYLOAD_LIMIT", "PayloadTooLarge", "ProtocolError",
     "Provider", "RandomEndpointRouter", "RandomRouter", "Register",
@@ -135,12 +141,13 @@ __all__ = [
     "SubmitCoalescer", "Task",
     "TaskBatch",
     "TaskFailure", "TaskLost", "TaskSpec", "TaskStatus", "TaskStore",
-    "TcpListener", "TcpTransport", "Token", "Transport", "WIRE_STATS",
+    "TcpListener", "TcpTransport", "ThreadLeafProvider", "Token",
+    "Transport", "WIRE_STATS",
     "WarmCache",
     "WarmingAwareEndpointRouter", "WarmingAwareRouter", "WarmingHashRouter",
     "WarmthView", "WireFunctionClient",
     "WorkItem", "WorkResult", "Worker", "decode_frame", "from_wire",
-    "make_endpoint_router",
+    "spawn_interchange_process",
     "make_router", "parse_hostport", "proportional_allocation",
     "segment_parts", "split_arrays", "stack_arrays", "to_wire",
     "to_wire_parts",

@@ -64,6 +64,10 @@ class EndpointLine:
         self.send_rtt = 0.0             # per-message latency (benchmarks)
         self.next_send_at = 0.0         # send_rtt gate; never blocks others
         self.advertised = Heartbeat(endpoint_id=endpoint_id)
+        # tasks dispatched since the last heartbeat refreshed the credit
+        # advertisement — only consulted when the endpoint advertises a
+        # bounded intake (an interchange, DESIGN.md §11)
+        self.sent_since_credit = 0
         self.peer_addr = ""             # PeerServer address from Register
         #   ("" → endpoint runs no peer server; ResolvePeer answers no)
         # metrics
@@ -241,8 +245,18 @@ class ForwarderPool:
                 continue
             if line.send_rtt and line.next_send_at > now_t:
                 continue               # emulated RTT not elapsed yet
+            limit = self.batch_size
+            credits = line.advertised.credits
+            if credits >= 0:
+                # bounded-intake endpoint (interchange): respect the
+                # advertised backlog room, net of what we sent since the
+                # advertisement — backpressure instead of overrun
+                room = credits - line.sent_since_credit
+                if room <= 0:
+                    continue
+                limit = min(limit, room)
             batch = []
-            while line.queue and len(batch) < self.batch_size:
+            while line.queue and len(batch) < limit:
                 batch.append(line.queue.popleft())
             out.append((line, batch))
         return out
@@ -288,20 +302,27 @@ class ForwarderPool:
         # packed payload buffers ride behind it as borrowed views — no
         # payload memcpy into the envelope (DESIGN.md §7)
         env, segs = to_wire_parts(TaskBatch(tasks=specs))
+        # in-flight entries land BEFORE the send: a fast endpoint can
+        # return a result before this thread re-acquires the lock, and
+        # the result handler must find the entry to pop
+        t = time.time()
+        with self._lock:
+            for spec in specs:
+                line.in_flight[spec.task_id] = t
         ok = line.channel.send_parts_to_endpoint(env, segs, tag="tasks")
         with self._lock:
             if ok:
-                t = time.time()
                 if line.send_rtt:
                     line.next_send_at = t + line.send_rtt
-                for spec in specs:
-                    line.in_flight[spec.task_id] = t
+                line.sent_since_credit += len(specs)
                 line.dispatched += len(specs)
                 line.task_envelopes += 1
                 self.dispatched += len(specs)
                 self.task_envelopes += 1
             else:
                 # channel refused (disconnected / dropped): requeue in order
+                for spec in specs:
+                    line.in_flight.pop(spec.task_id, None)
                 line.queue.extendleft(reversed([s.task_id for s in specs]))
 
     def _recv_loop(self) -> None:
@@ -350,6 +371,9 @@ class ForwarderPool:
     def _handle_heartbeat(self, line: EndpointLine, hb: Heartbeat) -> None:
         line.last_heartbeat = time.time()
         line.advertised = hb
+        if hb.credits >= 0:
+            with self._lock:
+                line.sent_since_credit = 0     # credit window refreshed
         # feed measured cold-build costs to a cost-aware federation
         # router (observe_build, DESIGN.md §10) — the service installs
         # the hook when its EndpointRouter can consume them

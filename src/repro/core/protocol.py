@@ -194,6 +194,16 @@ class Heartbeat:
     # cost-aware federation routers (observe_build — DESIGN.md §10), so
     # cold-cost estimates track reality instead of default_cold_cost.
     build_costs: Dict[str, float] = field(default_factory=dict)
+    # Backpressure advertisement (DESIGN.md §11). An interchange — or any
+    # endpoint with a bounded intake — advertises how many more tasks it
+    # can absorb (``credits``) and how deep its local backlog already is
+    # (``backlog``). credits < 0 means "unbounded / not advertised" so
+    # plain endpoints (which never set it) keep today's behaviour; the
+    # upstream forwarder caps queue+in_flight at ``credits`` when it is
+    # >= 0. ``depth`` mirrors the bounded-queue capacity for gauges.
+    credits: int = -1
+    backlog: int = 0
+    depth: int = 0
 
 
 @dataclass

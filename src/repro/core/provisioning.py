@@ -5,9 +5,22 @@ acquire/release nodes (managers) from a local pool, a batch scheduler, or a
 cloud — with realistic acquisition delays simulated for the latter two.
 
 ``ElasticStrategy`` is the monitoring+scaling component: provision more
-nodes when pending work exceeds idle capacity, release nodes idle past the
-timeout, bounded by [min_blocks, max_blocks] and an aggressiveness knob —
-exactly the paper's strategy interface.
+nodes when the queued backlog outgrows what the current blocks can
+absorb, release nodes idle past the timeout, bounded by
+[min_blocks, max_blocks] and an aggressiveness knob — the paper's
+strategy interface. Two properties matter at interchange scale
+(DESIGN.md §11):
+
+- scaling reads *queued backlog depth* (``endpoint.pending_tasks()``),
+  not just the instantaneous pending-vs-idle comparison, so a deep
+  absorbed burst provisions the whole shortfall in one decision
+  (``backlog_per_block`` tasks per additional block);
+- ``Provider.start_block``'s blocking acquisition sleep (slurm queue
+  wait, cloud boot) runs on a background acquirer thread, never inside
+  the strategy loop — a slow acquisition cannot stall scale-in
+  decisions or delay the next observation tick. In-flight acquisitions
+  are counted (``pending_blocks``) so the loop doesn't re-order what is
+  already on the way.
 """
 from __future__ import annotations
 
@@ -82,15 +95,23 @@ class SimCloudProvider(Provider):
 class ElasticStrategy(threading.Thread):
     """Monitor + scale loop (paper §6.3).
 
-    - scale OUT when pending > idle × aggressiveness (up to max_blocks);
+    - scale OUT toward the block count the *queued backlog depth* asks
+      for: with ``backlog_per_block`` set, ``ceil(pending /
+      backlog_per_block)`` blocks (one decision provisions the whole
+      shortfall of a deep absorbed burst); otherwise one extra block
+      whenever pending > idle × aggressiveness. Bounded by max_blocks.
     - scale IN a block whose managers have all been idle > idle_timeout
       (down to min_blocks; paper default 2 min, configurable).
+
+    Acquisitions run on background acquirer threads: the provider's
+    blocking queue-wait/boot sleep never executes inside this loop, so
+    scale-in keeps being evaluated while a slow block is on the way.
     """
 
     def __init__(self, endpoint, provider: Provider, *,
                  min_blocks: int = 1, max_blocks: int = 4,
                  aggressiveness: float = 1.0, idle_timeout: float = 2.0,
-                 interval: float = 0.05):
+                 interval: float = 0.05, backlog_per_block: int = 0):
         super().__init__(daemon=True, name=f"strategy-{endpoint.endpoint_id}")
         self.endpoint = endpoint
         self.provider = provider
@@ -99,23 +120,69 @@ class ElasticStrategy(threading.Thread):
         self.aggressiveness = aggressiveness
         self.idle_timeout = idle_timeout
         self.interval = interval
+        self.backlog_per_block = backlog_per_block
         self._blocks: Dict[str, list] = {}
         self._idle_since: Dict[str, float] = {}
+        self._lock = threading.Lock()
+        self._pending_blocks = 0
         self._stop = threading.Event()
         self.scale_out_events = 0
         self.scale_in_events = 0
 
     def blocks(self) -> int:
-        return len(self._blocks)
+        with self._lock:
+            return len(self._blocks)
+
+    def pending_blocks(self) -> int:
+        """Acquisitions launched but not yet landed (provider still in
+        its queue-wait/boot sleep)."""
+        with self._lock:
+            return self._pending_blocks
 
     def stop(self) -> None:
         self._stop.set()
 
-    def _ensure_min(self) -> None:
-        while len(self._blocks) < self.min_blocks:
-            ids = self.provider.start_block(self.endpoint)
-            self._blocks[f"block{len(self._blocks)}-{time.monotonic():.3f}"] = ids
+    # ------------------------------------------------------------- scale out
+    def _desired_blocks(self, pending: int, idle: int, have: int) -> int:
+        if self.backlog_per_block > 0:
+            want = -(-pending // self.backlog_per_block)       # ceil
+        else:
+            want = have + (1 if pending > idle * self.aggressiveness
+                           else 0)
+        return max(self.min_blocks, min(self.max_blocks, want))
 
+    def _launch_block(self) -> None:
+        """Start one block acquisition off-loop. The pending count is
+        bumped before the thread starts so the next tick's desired-vs-have
+        comparison already sees it."""
+        with self._lock:
+            self._pending_blocks += 1
+            self.scale_out_events += 1
+
+        def acquire() -> None:
+            try:
+                ids = self.provider.start_block(self.endpoint)
+                with self._lock:
+                    self._blocks[f"block-{time.monotonic():.6f}"] = ids
+            except Exception:
+                pass
+            finally:
+                with self._lock:
+                    self._pending_blocks -= 1
+
+        threading.Thread(target=acquire, daemon=True,
+                         name=f"acquire-{self.endpoint.endpoint_id}").start()
+
+    def _ensure_min(self) -> None:
+        with self._lock:
+            have = len(self._blocks) + self._pending_blocks
+        for _ in range(self.min_blocks - have):
+            ids = self.provider.start_block(self.endpoint)
+            with self._lock:
+                self._blocks[
+                    f"block{len(self._blocks)}-{time.monotonic():.3f}"] = ids
+
+    # ------------------------------------------------------------------ loop
     def run(self) -> None:
         self._ensure_min()
         while not self._stop.is_set():
@@ -125,22 +192,28 @@ class ElasticStrategy(threading.Thread):
                 idle = self.endpoint.idle_workers()
             except Exception:
                 continue
-            # scale out
-            if pending > idle * self.aggressiveness and \
-                    len(self._blocks) < self.max_blocks:
-                ids = self.provider.start_block(self.endpoint)
-                self._blocks[f"block-{time.monotonic():.6f}"] = ids
-                self.scale_out_events += 1
+            with self._lock:
+                have = len(self._blocks) + self._pending_blocks
+            want = self._desired_blocks(pending, idle, have)
+            if want > have:
+                for _ in range(want - have):
+                    self._launch_block()
                 continue
-            # scale in: find a block fully idle past the timeout
-            if len(self._blocks) > self.min_blocks and pending == 0:
+            # scale in: find a block fully idle past the timeout. Runs
+            # every tick — even while acquisitions are sleeping in their
+            # background threads.
+            with self._lock:
+                n_blocks = len(self._blocks)
+                items = list(self._blocks.items())
+            if n_blocks > self.min_blocks and pending == 0:
                 now = time.monotonic()
-                for bid, ids in list(self._blocks.items()):
+                for bid, ids in items:
                     if self.endpoint.block_idle(ids):
                         since = self._idle_since.setdefault(bid, now)
                         if now - since > self.idle_timeout:
                             self.provider.stop_block(self.endpoint, ids)
-                            del self._blocks[bid]
+                            with self._lock:
+                                self._blocks.pop(bid, None)
                             self._idle_since.pop(bid, None)
                             self.scale_in_events += 1
                             break

@@ -30,25 +30,16 @@ policies are swappable per endpoint (paper: 'modular scheduling
 interfaces'). The federation tier (``EndpointRouter``) applies the same
 policies one level up, over ``EndpointInfo`` snapshots.
 
-Legacy surface (one PR only): ``Router.route(container_type, managers,
-input_keys)`` and ``EndpointRouter.select(container_type, endpoints)``
-still accept a positional container-type string and route identically
-to an equivalent ``RoutingContext`` — they warn ``DeprecationWarning``
-and forward. ``make_endpoint_router(name)`` is a deprecated alias for
-``make_router(name, tier="endpoint")``.
+Every entry point takes a :class:`RoutingContext` — the PR 9 legacy
+positional-string shims (``RoutingContext.coerce``, string ``route``/
+``select``, ``make_endpoint_router``) are gone.
 """
 from __future__ import annotations
 
 import random
 import threading
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
-
-
-def _warn_legacy(what: str, instead: str) -> None:
-    warnings.warn(f"{what} is deprecated; use {instead}",
-                  DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -87,14 +78,6 @@ class RoutingContext:
         if self.warmth_key and self.warmth_key != self.container_type:
             return (self.warmth_key, self.container_type)
         return (self.key,)
-
-    @classmethod
-    def coerce(cls, obj, input_keys: frozenset = frozenset()
-               ) -> "RoutingContext":
-        """Accept a RoutingContext or a bare container-type string."""
-        if isinstance(obj, RoutingContext):
-            return obj
-        return cls(container_type=str(obj), input_keys=input_keys)
 
 
 # ---------------------------------------------------------------------------
@@ -220,17 +203,11 @@ class _SeededPolicy:
 
 class Router(_SeededPolicy):
     """Manager-tier routing policy. Policies implement
-    :meth:`route_ctx`; :meth:`route` also accepts the legacy positional
-    ``(container_type, managers, input_keys)`` call (deprecated shim,
-    kept for one PR) and routes it identically."""
+    :meth:`route_ctx`; :meth:`route` is the stable entry point and
+    requires a :class:`RoutingContext`."""
 
-    def route(self, ctx, managers: Sequence[ManagerInfo],
-              input_keys: frozenset = frozenset()) -> Optional[str]:
-        if not isinstance(ctx, RoutingContext):
-            _warn_legacy("Router.route(container_type, ...)",
-                         "Router.route(RoutingContext(...), managers)")
-            ctx = RoutingContext(container_type=str(ctx),
-                                 input_keys=frozenset(input_keys))
+    def route(self, ctx: RoutingContext,
+              managers: Sequence[ManagerInfo]) -> Optional[str]:
         return self.route_ctx(ctx, managers)
 
     def route_ctx(self, ctx: RoutingContext,
@@ -426,30 +403,25 @@ class EndpointInfo:
 
 class EndpointRouter(_SeededPolicy):
     """Federation-tier routing policy. Policies implement
-    :meth:`select_ctx`; :meth:`select` also accepts the legacy positional
-    ``(container_type, endpoints)`` call (deprecated shim, one PR)."""
+    :meth:`select_ctx`; :meth:`select` is the stable entry point and
+    requires a :class:`RoutingContext`."""
 
-    def select(self, ctx, endpoints: Sequence[EndpointInfo]
-               ) -> Optional[str]:
-        if not isinstance(ctx, RoutingContext):
-            _warn_legacy("EndpointRouter.select(container_type, ...)",
-                         "EndpointRouter.select(RoutingContext(...), "
-                         "endpoints)")
-            ctx = RoutingContext(container_type=str(ctx))
+    def select(self, ctx: RoutingContext,
+               endpoints: Sequence[EndpointInfo]) -> Optional[str]:
         return self.select_ctx(ctx, endpoints)
 
     def select_ctx(self, ctx: RoutingContext,
                    endpoints: Sequence[EndpointInfo]) -> Optional[str]:
         raise NotImplementedError
 
-    def select_many(self, ctx, endpoints: Sequence[EndpointInfo],
+    def select_many(self, ctx: RoutingContext,
+                    endpoints: Sequence[EndpointInfo],
                     n: int) -> List[str]:
         """``n`` picks against one snapshot, with each pick fed back via
         :meth:`EndpointInfo.note_pick` before the next — the per-flush
         grouping primitive for coalesced submissions (DESIGN.md §8).
         Stops short (returned list < ``n``) only if the policy returns
         no endpoint."""
-        ctx = RoutingContext.coerce(ctx)
         out: List[str] = []
         for _ in range(n):
             eid = self.select_ctx(ctx, endpoints)
@@ -561,10 +533,3 @@ def make_router(name: str, tier: str = "manager", **kw):
         raise KeyError(f"unknown {tier}-tier router {name!r}; "
                        f"options: {sorted(registry)}") from None
     return cls(**kw)
-
-
-def make_endpoint_router(name: str, **kw) -> EndpointRouter:
-    """Deprecated alias for ``make_router(name, tier="endpoint")``."""
-    _warn_legacy("make_endpoint_router(name)",
-                 'make_router(name, tier="endpoint")')
-    return make_router(name, tier="endpoint", **kw)

@@ -688,10 +688,8 @@ class FuncXService:
         EndpointRouter over the pool's live EndpointInfo snapshots
         (service queue depth + in-flight first-hand; endpoint load and
         warm-container/jit state from heartbeats). ``ctx`` is a
-        :class:`RoutingContext`; a bare container-type string is coerced
-        for back-compat."""
-        return self._route_from_snapshot(RoutingContext.coerce(ctx),
-                                         self.pool.endpoint_infos())
+        :class:`RoutingContext`."""
+        return self._route_from_snapshot(ctx, self.pool.endpoint_infos())
 
     def _route_from_snapshot(self, ctx: RoutingContext,
                              infos: List["EndpointInfo"]) -> str:

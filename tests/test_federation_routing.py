@@ -11,8 +11,9 @@ from repro.core import (
     FuncXService,
     LeastLoadedEndpointRouter,
     RandomEndpointRouter,
+    RoutingContext,
     WarmingAwareEndpointRouter,
-    make_endpoint_router,
+    make_router,
 )
 from conftest import wait_until
 
@@ -21,6 +22,10 @@ from conftest import wait_until
 
 def _info(eid, **kw):
     return EndpointInfo(endpoint_id=eid, **kw)
+
+
+def _ctx(container_type):
+    return RoutingContext(container_type=container_type)
 
 
 def test_warming_aware_picks_warm_endpoint_over_cold():
@@ -32,10 +37,10 @@ def test_warming_aware_picks_warm_endpoint_over_cold():
               warm_idle={"model/y": 4}, warm_total={"model/y": 4}),
     ]
     r = WarmingAwareEndpointRouter()
-    assert r.select("model/x", eps) == "warm"
-    assert r.select("model/y", eps) == "warm_other"
+    assert r.select(_ctx("model/x"), eps) == "warm"
+    assert r.select(_ctx("model/y"), eps) == "warm_other"
     # no warm anywhere: falls back to least loaded, not an error
-    assert r.select("model/z", eps) in {"cold", "warm", "warm_other"}
+    assert r.select(_ctx("model/z"), eps) in {"cold", "warm", "warm_other"}
 
 
 def test_warming_aware_prefers_warm_busy_over_cold_start():
@@ -44,7 +49,8 @@ def test_warming_aware_prefers_warm_busy_over_cold_start():
         _info("warm_busy", capacity=4, queued=1,
               warm_total={"model/x": 3}),
     ]
-    assert WarmingAwareEndpointRouter().select("model/x", eps) == "warm_busy"
+    assert WarmingAwareEndpointRouter().select(_ctx("model/x"),
+                                               eps) == "warm_busy"
 
 
 def test_least_loaded_normalizes_by_capacity():
@@ -53,7 +59,8 @@ def test_least_loaded_normalizes_by_capacity():
         _info("small_idle", capacity=2, queued=0),       # load 0.0
         _info("small_swamped", capacity=2, queued=10),   # load 5.0
     ]
-    assert LeastLoadedEndpointRouter().select("python", eps) == "small_idle"
+    assert LeastLoadedEndpointRouter().select(_ctx("python"),
+                                              eps) == "small_idle"
 
 
 def test_routers_skip_disconnected_endpoints():
@@ -63,13 +70,14 @@ def test_routers_skip_disconnected_endpoints():
         _info("up", capacity=2),
     ]
     for name in ("random", "least_loaded", "warming_aware"):
-        assert make_endpoint_router(name).select("python", eps) == "up"
+        assert make_router(name, tier="endpoint").select(
+            _ctx("python"), eps) == "up"
 
 
 def test_random_router_covers_fleet():
     eps = [_info(f"e{i}") for i in range(4)]
     r = RandomEndpointRouter(seed=1)
-    picked = {r.select("python", eps) for _ in range(100)}
+    picked = {r.select(_ctx("python"), eps) for _ in range(100)}
     assert picked == {"e0", "e1", "e2", "e3"}
 
 

@@ -1,0 +1,215 @@
+"""Elastic provisioning strategy (paper §6.3, DESIGN.md §11): scaling
+decisions read queued backlog depth, acquisitions run off-loop (a slow
+scheduler cannot stall scale-in or the next tick), clamps hold, and the
+interchange-driven path provisions whole leaf endpoints."""
+import threading
+import time
+
+from repro.core import ElasticStrategy, Provider
+from conftest import wait_until
+
+
+class FakeEndpoint:
+    """Just the surface ElasticStrategy reads."""
+
+    def __init__(self, pending=0, idle=0):
+        self.endpoint_id = "fake-ep"
+        self.pending = pending
+        self.idle = idle
+        self.idle_blocks = True
+
+    def pending_tasks(self):
+        return self.pending
+
+    def idle_workers(self):
+        return self.idle
+
+    def block_idle(self, ids):
+        return self.idle_blocks
+
+
+class RecordingProvider(Provider):
+    """Instant blocks; records acquisition/release timing."""
+
+    def __init__(self, delay=0.0, **kw):
+        super().__init__(**kw)
+        self.delay = delay
+        self.starts = []
+        self.stops = []
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def start_block(self, endpoint):
+        t = time.monotonic()
+        if self.delay:
+            time.sleep(self.delay)
+        with self._lock:
+            self._n += 1
+            bid = [f"blk{self._n}"]
+        self.starts.append(t)
+        return bid
+
+    def stop_block(self, endpoint, ids):
+        self.stops.append(ids)
+
+
+def run_strategy(ep, prov, **kw):
+    kw.setdefault("interval", 0.02)
+    s = ElasticStrategy(ep, prov, **kw)
+    s.start()
+    return s
+
+
+# ------------------------------------------------------- backlog-depth sizing
+
+def test_backlog_depth_provisions_whole_shortfall_in_one_decision():
+    """350 queued tasks at 100 per block ⇒ 4 blocks wanted; all land from
+    one observation tick, not one-per-tick trickle."""
+    ep, prov = FakeEndpoint(pending=350), RecordingProvider()
+    s = run_strategy(ep, prov, min_blocks=0, max_blocks=8,
+                     backlog_per_block=100)
+    try:
+        assert wait_until(lambda: s.blocks() == 4, timeout=5)
+        assert s.scale_out_events == 4
+        # the four acquisitions launched together (off-loop, same tick)
+        assert max(prov.starts) - min(prov.starts) < 0.5
+    finally:
+        s.stop()
+
+
+def test_max_blocks_clamps_backlog_demand():
+    ep, prov = FakeEndpoint(pending=10_000), RecordingProvider()
+    s = run_strategy(ep, prov, min_blocks=0, max_blocks=3,
+                     backlog_per_block=10)
+    try:
+        assert wait_until(lambda: s.blocks() == 3, timeout=5)
+        time.sleep(0.2)
+        assert s.blocks() == 3 and s.scale_out_events == 3
+    finally:
+        s.stop()
+
+
+def test_min_blocks_floor_holds_with_empty_backlog():
+    ep, prov = FakeEndpoint(pending=0), RecordingProvider()
+    s = run_strategy(ep, prov, min_blocks=2, max_blocks=4,
+                     backlog_per_block=100, idle_timeout=0.1)
+    try:
+        assert wait_until(lambda: s.blocks() == 2, timeout=5)
+        time.sleep(0.4)                  # idle well past the timeout
+        assert s.blocks() == 2           # never reaped below the floor
+        assert s.scale_in_events == 0
+    finally:
+        s.stop()
+
+
+def test_legacy_pending_vs_idle_mode_still_scales_one_block_per_tick():
+    ep, prov = FakeEndpoint(pending=10, idle=0), RecordingProvider()
+    s = run_strategy(ep, prov, min_blocks=0, max_blocks=2)   # no backlog_per_block
+    try:
+        assert wait_until(lambda: s.blocks() == 2, timeout=5)
+    finally:
+        s.stop()
+
+
+# ------------------------------------------------------- off-loop acquisition
+
+def test_slow_acquisitions_run_concurrently_not_serialized():
+    """Three 0.3s acquisitions must overlap (≈0.3s wall), not serialize
+    inside the strategy loop (≈0.9s)."""
+    ep, prov = FakeEndpoint(pending=300), RecordingProvider(delay=0.3)
+    s = run_strategy(ep, prov, min_blocks=0, max_blocks=4,
+                     backlog_per_block=100)
+    try:
+        t0 = time.monotonic()
+        assert wait_until(lambda: s.blocks() == 3, timeout=5)
+        assert time.monotonic() - t0 < 0.7
+        assert max(prov.starts) - min(prov.starts) < 0.2
+    finally:
+        s.stop()
+
+
+def test_pending_acquisitions_prevent_overprovisioning():
+    """While blocks are still in the provider's queue-wait sleep, ticks
+    keep firing — but in-flight acquisitions count toward 'have', so the
+    demand is satisfied exactly once."""
+    ep, prov = FakeEndpoint(pending=200), RecordingProvider(delay=0.25)
+    s = run_strategy(ep, prov, min_blocks=0, max_blocks=8,
+                     backlog_per_block=100, interval=0.01)
+    try:
+        time.sleep(0.1)                  # many ticks mid-acquisition
+        assert s.pending_blocks() == 2
+        assert wait_until(lambda: s.blocks() == 2, timeout=5)
+        time.sleep(0.1)
+        assert s.scale_out_events == 2   # never re-ordered what was coming
+    finally:
+        s.stop()
+
+
+def test_scale_in_keeps_running_while_acquisition_sleeps():
+    """A stuck acquisition (slurm queue wait) must not freeze scale-in:
+    an idle block is reaped while another is still being acquired."""
+    ep = FakeEndpoint(pending=0)
+    prov = RecordingProvider()
+    s = run_strategy(ep, prov, min_blocks=1, max_blocks=4,
+                     backlog_per_block=50, idle_timeout=0.1)
+    try:
+        assert wait_until(lambda: s.blocks() == 1, timeout=5)
+        ep.pending = 120                 # ask for 3 blocks...
+        assert wait_until(lambda: s.blocks() == 3, timeout=5)
+        prov.delay = 10.0                # ...then make acquisitions hang
+        ep.pending = 200
+        assert wait_until(lambda: s.pending_blocks() == 1, timeout=5)
+        ep.pending = 0                   # backlog drained; blocks idle
+        assert wait_until(lambda: s.scale_in_events >= 1, timeout=5)
+        assert s.blocks() < 3            # reaped despite the hung acquire
+    finally:
+        prov.delay = 0.0
+        s.stop()
+
+
+def test_scale_in_waits_for_idle_timeout():
+    ep, prov = FakeEndpoint(pending=0), RecordingProvider()
+    ep.idle_blocks = False
+    s = run_strategy(ep, prov, min_blocks=0, max_blocks=4,
+                     backlog_per_block=10, idle_timeout=0.15)
+    try:
+        ep.pending = 20
+        assert wait_until(lambda: s.blocks() == 2, timeout=5)
+        ep.pending = 0
+        time.sleep(0.4)
+        assert s.blocks() == 2           # busy blocks are never reaped
+        ep.idle_blocks = True
+        assert wait_until(lambda: s.blocks() == 0, timeout=5)
+        assert s.scale_in_events == 2
+    finally:
+        s.stop()
+
+
+# ------------------------------------------------ interchange-driven path
+
+def test_interchange_backlog_drives_leaf_provisioning(tcp_service):
+    """End to end: a burst absorbed by an interchange with zero leaves
+    provisions leaf endpoints via the strategy, drains, and reaps."""
+    from repro.core import Interchange, ThreadLeafProvider
+
+    svc, client, (host, port) = tcp_service
+    ix = Interchange(f"{host}:{port}", client.endpoint_credentials(),
+                     name="elastic-relay", depth=5000,
+                     heartbeat_interval=0.05, leaf_timeout=0.4)
+    ix.start()
+    prov = ThreadLeafProvider(ix, workers_per_node=2)
+    s = ElasticStrategy(ix, prov, min_blocks=0, max_blocks=2,
+                        backlog_per_block=40, idle_timeout=0.4,
+                        interval=0.03)
+    ix.strategy = s
+    s.start()
+    try:
+        fid = client.register_function(lambda d: d["i"])
+        ids = client.batch_run([(fid, ix.endpoint_id, {"i": i})
+                                for i in range(80)])
+        assert wait_until(lambda: s.blocks() == 2, timeout=10)
+        assert client.get_batch_results(ids, timeout=60) == list(range(80))
+        assert wait_until(lambda: s.blocks() == 0, timeout=15)
+        assert ix.leaf_lines() == []
+    finally:
+        ix.stop()

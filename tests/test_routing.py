@@ -6,6 +6,7 @@ from repro.core import (
     LocalityAwareRouter,
     ManagerInfo,
     RandomRouter,
+    RoutingContext,
     WarmingAwareRouter,
 )
 
@@ -17,17 +18,21 @@ def mi(mid, idle=2, queued=0, warm_idle=None, warm_total=None, cap=4,
                        frozenset(keys))
 
 
+def ctx(container_type="T", **kw):
+    return RoutingContext(container_type=container_type, **kw)
+
+
 def test_warming_aware_prefers_warm():
     r = WarmingAwareRouter()
     managers = [mi("cold"), mi("warm", warm_idle={"T": 1})]
-    assert r.route("T", managers) == "warm"
+    assert r.route(ctx(), managers) == "warm"
 
 
 def test_warming_aware_load_balances_by_warm_count():
     r = WarmingAwareRouter()
     managers = [mi("m1", warm_idle={"T": 1}), mi("m2", warm_idle={"T": 3})]
     # paper: "priority to the one with the most available container workers"
-    assert r.route("T", managers) == "m2"
+    assert r.route(ctx(), managers) == "m2"
 
 
 def test_warming_aware_second_chance_warm_busy():
@@ -35,27 +40,27 @@ def test_warming_aware_second_chance_warm_busy():
     managers = [mi("busywarm", idle=0, queued=2,
                    warm_idle={}, warm_total={"T": 2}),
                 mi("cold", idle=2)]
-    assert r.route("T", managers) == "busywarm"
+    assert r.route(ctx(), managers) == "busywarm"
 
 
 def test_warming_aware_random_fallback():
     r = WarmingAwareRouter(seed=1)
     managers = [mi("a"), mi("b"), mi("c")]
-    picks = {r.route("T", managers) for _ in range(30)}
+    picks = {r.route(ctx(), managers) for _ in range(30)}
     assert len(picks) > 1            # actually random among cold managers
 
 
 def test_random_router_spreads():
     r = RandomRouter(seed=0)
     managers = [mi("a"), mi("b")]
-    picks = {r.route("T", managers) for _ in range(30)}
+    picks = {r.route(ctx(), managers) for _ in range(30)}
     assert picks == {"a", "b"}
 
 
 def test_random_router_avoids_full():
     r = RandomRouter(seed=0)
     managers = [mi("full", idle=0, queued=4, cap=4), mi("free")]
-    assert all(r.route("T", managers) == "free" for _ in range(10))
+    assert all(r.route(ctx(), managers) == "free" for _ in range(10))
 
 
 def test_cost_aware_uses_measured_build_times():
@@ -64,23 +69,24 @@ def test_cost_aware_uses_measured_build_times():
     managers = [mi("cold"), mi("warm", queued=3, warm_total={"T": 1},
                                warm_idle={})]
     # queue wait (3/4 * 0.01) << cold start (5s) → pick warm-but-queued
-    assert r.route("T", managers) == "warm"
+    assert r.route(ctx(), managers) == "warm"
 
 
 def test_cost_aware_prefers_short_queue_when_cold_cheap():
     r = CostAwareRouter(default_cold_cost=0.0001, mean_task_s=1.0)
     managers = [mi("empty", queued=0), mi("busy", queued=4)]
-    assert r.route("T", managers) == "empty"
+    assert r.route(ctx(), managers) == "empty"
 
 
 def test_locality_breaks_warm_ties():
     r = LocalityAwareRouter()
     managers = [mi("far", warm_idle={"T": 2}),
                 mi("near", warm_idle={"T": 2}, keys={"input/x"})]
-    assert r.route("T", managers, frozenset({"input/x"})) == "near"
+    assert r.route(ctx(input_keys=frozenset({"input/x"})),
+                   managers) == "near"
 
 
 def test_empty_managers_returns_none():
     for r in (RandomRouter(), WarmingAwareRouter(), CostAwareRouter(),
               LocalityAwareRouter()):
-        assert r.route("T", []) is None
+        assert r.route(ctx(), []) is None

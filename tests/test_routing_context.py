@@ -1,11 +1,12 @@
-"""Routing API redesign (DESIGN.md §10): RoutingContext semantics, the
-one-PR legacy shims, jit-vs-container warmth ordering at both tiers,
-select_many snapshot feedback, WarmthView builders, and the
-observe_build feedback path (agent EWMA → heartbeat → service router).
+"""Routing API redesign (DESIGN.md §10): RoutingContext semantics,
+jit-vs-container warmth ordering at both tiers, select_many snapshot
+feedback, WarmthView builders, and the observe_build feedback path
+(agent EWMA → heartbeat → service router). The PR 9 one-PR legacy
+shims (string coercion, ``make_endpoint_router``) are gone — pinned
+below.
 """
 import threading
 import types
-import warnings
 
 import pytest
 
@@ -17,10 +18,8 @@ from repro.core import (
     WarmingAwareEndpointRouter,
     WarmingAwareRouter,
     WarmthView,
-    make_endpoint_router,
     make_router,
 )
-from repro.core.routing import LeastLoadedEndpointRouter
 
 
 def mi(mid, idle=2, queued=0, warm_idle=None, warm_total=None, cap=4):
@@ -54,43 +53,15 @@ def test_ctx_explicit_warmth_key_keeps_container_fallback():
     assert same.warmth_keys == ("T",)
 
 
-def test_ctx_coerce_accepts_strings_and_passes_ctx_through():
-    ctx = RoutingContext.coerce("T")
-    assert isinstance(ctx, RoutingContext) and ctx.key == "T"
-    orig = RoutingContext(warmth_key="k")
-    assert RoutingContext.coerce(orig) is orig
-
-
 # ---------------------------------------------------------------------------
-# Legacy shims (one PR only): positional container-type strings still
-# route identically, with a DeprecationWarning
+# The PR 9 legacy shims stayed for exactly one PR — pin their removal so
+# they don't creep back
 # ---------------------------------------------------------------------------
 
-def test_router_route_legacy_str_warns_and_matches_ctx():
-    managers = [mi("cold"), mi("warm", warm_idle={"T": 1})]
-    r = WarmingAwareRouter()
-    with pytest.warns(DeprecationWarning, match="Router.route"):
-        legacy = r.route("T", managers)
-    assert legacy == r.route(RoutingContext(container_type="T"), managers)
-    # the ctx path is warning-free
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        r.route(RoutingContext(container_type="T"), managers)
-
-
-def test_endpoint_select_legacy_str_warns_and_matches_ctx():
-    eps = [ei("cold"), ei("warm", warm_idle={"T": 1})]
-    r = WarmingAwareEndpointRouter()
-    with pytest.warns(DeprecationWarning, match="EndpointRouter.select"):
-        legacy = r.select("T", eps)
-    assert legacy == r.select(RoutingContext(container_type="T"), eps)
-
-
-def test_make_endpoint_router_is_deprecated_alias():
-    with pytest.warns(DeprecationWarning, match="make_endpoint_router"):
-        r = make_endpoint_router("least_loaded")
-    assert isinstance(r, LeastLoadedEndpointRouter)
-    assert type(r) is type(make_router("least_loaded", tier="endpoint"))
+def test_legacy_shims_are_gone():
+    import repro.core
+    assert not hasattr(RoutingContext, "coerce")
+    assert not hasattr(repro.core, "make_endpoint_router")
 
 
 def test_make_router_rejects_unknown_names_and_tiers():
@@ -141,7 +112,8 @@ def test_endpoint_tier_warm_busy_beats_cold():
 
 def test_select_many_feedback_spreads_over_warm_endpoints():
     eps = [ei("a", warm_idle={"T": 1}), ei("b", warm_idle={"T": 1})]
-    picks = WarmingAwareEndpointRouter().select_many("T", eps, 2)
+    picks = WarmingAwareEndpointRouter().select_many(
+        RoutingContext(container_type="T"), eps, 2)
     assert sorted(picks) == ["a", "b"]
     assert all(e.service_queue == 1 for e in eps)
     assert all(e.warmth.warm_idle("T") == 0 for e in eps)
@@ -154,7 +126,7 @@ def test_select_many_mixed_keys_share_one_snapshot():
     r = WarmingAwareEndpointRouter()
     jit_picks = r.select_many(RoutingContext(warmth_key=JIT,
                                              container_type="T"), eps, 1)
-    ct_picks = r.select_many("T", eps, 1)
+    ct_picks = r.select_many(RoutingContext(container_type="T"), eps, 1)
     assert jit_picks == ["a"]
     assert ct_picks == ["a"]          # still container-warm, despite queue
     a = eps[0]

@@ -2,7 +2,7 @@
 bench-executor).
 
 Compares a freshly produced benchmark artifact against the committed
-baseline (BENCH_7.json) with tolerance:
+baseline (BENCH_10.json) with tolerance:
 
 - ``sec7.2.3/results_plane/throughput_tasks_per_s`` must be at least
   ``--tolerance`` × baseline (throughput; higher is better). CI runners
@@ -67,13 +67,32 @@ DESIGN.md §10):
   0.5: with one warm slot per model fleet-wide, warmth-aware routing
   keeps the majority of the stream on compiled executables).
 
+With ``--interchange`` it gates the hierarchical relay tier
+(``sec5_interchange``, DESIGN.md §11):
+
+- ``sec5_interchange/service_threads_added`` must be ≤ 0 — registering
+  a whole relay tree (interchange + elastic leaves) costs the service
+  process no additional threads. Binary and noise-immune (negative
+  deltas just mean unrelated threads died between the samples).
+- ``sec5_interchange/queued_depth_peak`` must reach the full burst,
+  floored at ``min(100_000, burst_tasks)`` — the backlog either absorbs
+  the burst (acked upstream, nothing dropped) or it doesn't. Smoke runs
+  submit a smaller burst, so the floor follows the recorded burst size;
+  default runs gate the paper-scale 100k depth.
+- ``sec5_interchange/relay_vs_flat_ratio`` must be ≥ ``--ix-floor``
+  (default 0.9): steady-state throughput through the relay vs the same
+  leaves registered flat — the hop queues, it must not throttle.
+- ``sec5_interchange/scale_out_capacity`` must be > 0 — elastic leaf
+  provisioning observably kicked in (capacity went 0 → leaves×workers).
+
 Exit code 0 = pass, 1 = regression, 2 = malformed/missing artifacts.
 
-    python -m tools.bench_gate --baseline BENCH_7.json \
+    python -m tools.bench_gate --baseline BENCH_10.json \
         --fresh bench_fresh.json [--tolerance 0.4]
     python -m tools.bench_gate --shm --fresh bench_fresh.json
     python -m tools.bench_gate --executor --fresh bench_fresh.json
     python -m tools.bench_gate --p2p --fresh bench_fresh.json
+    python -m tools.bench_gate --interchange --fresh bench_fresh.json
 """
 from __future__ import annotations
 
@@ -101,6 +120,13 @@ P2P_SPEEDUP = "p2p/speedup_vs_hub"
 SERVING_SUITE = "sec10_serving"
 SERVING_ADVANTAGE = "serving/warm_hit_advantage"
 SERVING_AWARE_RATE = "serving/aware/warm_hit_rate"
+
+IX_SUITE = "sec5_interchange"
+IX_THREADS = "sec5_interchange/service_threads_added"
+IX_DEPTH = "sec5_interchange/queued_depth_peak"
+IX_BURST = "sec5_interchange/burst_tasks"
+IX_RATIO = "sec5_interchange/relay_vs_flat_ratio"
+IX_CAPACITY = "sec5_interchange/scale_out_capacity"
 
 
 def load_suite(path: str, suite_key: str = SUITE) -> dict:
@@ -236,9 +262,52 @@ def gate_serving(args) -> int:
     return 0
 
 
+def gate_interchange(args) -> int:
+    fresh = load_suite(args.fresh, IX_SUITE)
+    failures = []
+
+    threads = fresh.get(IX_THREADS)
+    depth = fresh.get(IX_DEPTH)
+    burst = fresh.get(IX_BURST)
+    ratio = fresh.get(IX_RATIO)
+    capacity = fresh.get(IX_CAPACITY)
+    if None in (threads, depth, burst, ratio, capacity):
+        print(f"bench-gate: {IX_THREADS} / {IX_DEPTH} / {IX_BURST} / "
+              f"{IX_RATIO} / {IX_CAPACITY} missing (got {threads}, "
+              f"{depth}, {burst}, {ratio}, {capacity})")
+        return 2
+    status = "ok" if threads <= 0 else "REGRESSION"
+    print(f"bench-gate: interchange service threads added={threads:.0f} "
+          f"(invariant: <= 0) -> {status}")
+    if threads > 0:
+        failures.append(IX_THREADS)
+    depth_floor = min(100_000.0, burst)
+    status = "ok" if depth >= depth_floor else "REGRESSION"
+    print(f"bench-gate: interchange queued depth peak={depth:.0f} "
+          f"floor={depth_floor:.0f} (burst={burst:.0f}) -> {status}")
+    if depth < depth_floor:
+        failures.append(IX_DEPTH)
+    status = "ok" if ratio >= args.ix_floor else "REGRESSION"
+    print(f"bench-gate: interchange relay vs flat={ratio:.2f}x "
+          f"floor={args.ix_floor:.2f}x -> {status}")
+    if ratio < args.ix_floor:
+        failures.append(IX_RATIO)
+    status = "ok" if capacity > 0 else "REGRESSION"
+    print(f"bench-gate: interchange elastic scale-out capacity="
+          f"{capacity:.0f} (invariant: > 0) -> {status}")
+    if capacity <= 0:
+        failures.append(IX_CAPACITY)
+
+    if failures:
+        print(f"bench-gate: FAILED on {', '.join(failures)}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--baseline", default="BENCH_7.json",
+    p.add_argument("--baseline", default="BENCH_10.json",
                    help="committed artifact to compare against")
     p.add_argument("--fresh", required=True,
                    help="artifact produced by this run")
@@ -282,6 +351,13 @@ def main() -> int:
                         "(default 0.5: even smoke-scale streams keep the "
                         "majority of requests on a warm jit cache when "
                         "routing reads the warmth keys)")
+    p.add_argument("--interchange", action="store_true",
+                   help="gate the sec5_interchange hierarchical relay "
+                        "suite instead of the result plane")
+    p.add_argument("--ix-floor", type=float, default=0.9,
+                   help="steady-state relay throughput vs the flat fleet "
+                        "must be >= this (default 0.9: the relay hop "
+                        "queues, it must not throttle)")
     args = p.parse_args()
 
     if args.shm:
@@ -292,6 +368,8 @@ def main() -> int:
         return gate_p2p(args)
     if args.serving:
         return gate_serving(args)
+    if args.interchange:
+        return gate_interchange(args)
 
     base = load_suite(args.baseline)
     fresh = load_suite(args.fresh)
